@@ -1,0 +1,184 @@
+//! Regenerates the §5 concentration results:
+//! - Theorem 5.1 (SRHT) and Theorem 5.2 (Gaussian): empirical extreme
+//!   eigenvalues of `C_S − I` vs the explicit-constant bounds.
+//! - Theorem 5.3: covariance estimation — empirical `sup/inf x^T(Σ̃−Σ)x`
+//!   vs the `‖Σ‖(2√ρ+ρ)` envelope at the prescribed sample size.
+//! - Lemma 2.1: the Newton-decrement bracket (the engine behind the
+//!   adaptive improvement test).
+//!
+//! `cargo bench --bench concentration -- [--trials 20] [--d 128]`
+
+use sketchsolve::bench_harness::MarkdownTable;
+use sketchsolve::linalg::{eig, fwht_rows, Matrix};
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::util::Flags;
+
+fn build_u(n: usize, d: usize, rng: &mut Rng) -> Matrix {
+    assert!(n.is_power_of_two());
+    let cols = rng.sample_without_replacement(d, n);
+    let signs = rng.rademacher_vec(n);
+    let mut buf = Matrix::zeros(n, d);
+    for (j, &c) in cols.iter().enumerate() {
+        buf.set(c, j, 1.0);
+    }
+    for i in 0..n {
+        if signs[i] < 0.0 {
+            for v in buf.row_mut(i) {
+                *v = -*v;
+            }
+        }
+    }
+    fwht_rows(&mut buf);
+    buf.scale(1.0 / (n as f64).sqrt());
+    buf
+}
+
+/// extreme eigenvalues of D (G - I) D with G = (SU)^T SU.
+fn extremes(u: &Matrix, dvec: &[f64], kind: SketchKind, m: usize, rng: &mut Rng) -> (f64, f64) {
+    let d = u.cols;
+    let sk = kind.sample(m, u.rows, rng);
+    let su = sk.apply(u);
+    let mut g = sketchsolve::linalg::syrk_t(&su);
+    for i in 0..d {
+        g.data[i * d + i] -= 1.0;
+    }
+    for i in 0..d {
+        for j in 0..d {
+            g.data[i * d + j] *= dvec[i] * dvec[j];
+        }
+    }
+    let eigs = eig::jacobi_eigenvalues(&g, 1e-10, 50);
+    (eigs[d - 1], eigs[0])
+}
+
+fn main() {
+    let flags = Flags::parse();
+    let trials = flags.get_parse_or("trials", 20usize);
+    let d = flags.get_parse_or("d", 128usize);
+    let n = flags.get_parse_or("n", 2048usize);
+    let delta = 0.05f64;
+    let mut rng = Rng::seed_from(0xC0C0A);
+
+    println!("Concentration experiments (n={n}, d={d}, {trials} trials, delta={delta})\n");
+    let u = build_u(n, d, &mut rng);
+    let nu = 0.05f64;
+    let sigmas: Vec<f64> = (1..=d).map(|j| 0.995f64.powf(j as f64 * 7000.0 / d as f64)).collect();
+    let dvec: Vec<f64> = sigmas.iter().map(|s| s / (s * s + nu * nu).sqrt()).collect();
+    let de = sketchsolve::problem::Problem::effective_dimension_from_singular_values(&sigmas, nu);
+    let dnorm2 = dvec.iter().fold(0.0f64, |m, &v| m.max(v * v));
+    println!("spectrum: paper profile, nu={nu} -> d_e = {de:.1}, ||D||^2 = {dnorm2:.3}\n");
+
+    // ---- Theorem 5.2 (Gaussian): m >= (sqrt(d_e) + sqrt(8 log(16/δ)))²/ρ
+    let mut t52 = MarkdownTable::new(&[
+        "rho", "m (thm 5.2)", "bound up ||D||²(2√ρ+ρ)", "emp max λmax", "bound low", "emp min λmin", "violations",
+    ]);
+    for rho in [0.25f64, 0.1] {
+        let m_delta = (de.sqrt() + (8.0 * (16.0f64 / delta).ln()).sqrt()).powi(2);
+        let m = (m_delta / rho).ceil() as usize;
+        let up = dnorm2 * (2.0 * rho.sqrt() + rho);
+        let low = -dnorm2 * (2.0 * rho.sqrt() - rho).max(rho);
+        let mut emp_max = f64::NEG_INFINITY;
+        let mut emp_min = f64::INFINITY;
+        let mut viol = 0;
+        for _ in 0..trials {
+            let (lmin, lmax) = extremes(&u, &dvec, SketchKind::Gaussian, m.min(n), &mut rng);
+            emp_max = emp_max.max(lmax);
+            emp_min = emp_min.min(lmin);
+            if lmax > up || lmin < low {
+                viol += 1;
+            }
+        }
+        t52.row(vec![
+            format!("{rho}"),
+            m.to_string(),
+            format!("{up:.3}"),
+            format!("{emp_max:.3}"),
+            format!("{low:.3}"),
+            format!("{emp_min:.3}"),
+            format!("{viol}/{trials} (≤ {:.0} expected)", (delta * trials as f64).ceil()),
+        ]);
+    }
+    println!("Theorem 5.2 (Gaussian embeddings):\n{}", t52.to_string());
+
+    // ---- Theorem 5.1 (SRHT): m_delta = 16 log(16 d_e/δ)(√d_e + √(8 log(2n/δ)))²
+    let mut t51 = MarkdownTable::new(&["rho", "m", "thr max(√ρ,ρ)·||D||²", "emp max |λ|", "violations"]);
+    for rho in [0.5f64, 0.25] {
+        // Theorem 5.1's explicit constants exceed n at this scale (the
+        // bound is worst-case in log(n/δ)); use the asymptotic scaling
+        // d_e log(d_e)/ρ to show the *practical* sharpness, capped at n/2
+        // so the subsampling is non-trivial.
+        let m_delta = sketchsolve::adaptive::theory::m_delta_asymptotic(SketchKind::Srht, de, delta);
+        let m = (((8.0 * m_delta / rho).ceil() as usize).min(n / 2)).max(4);
+        let thr = dnorm2 * rho.sqrt().max(rho);
+        let mut emp = f64::NEG_INFINITY;
+        let mut viol = 0;
+        for _ in 0..trials {
+            let (lmin, lmax) = extremes(&u, &dvec, SketchKind::Srht, m, &mut rng);
+            let dev = lmax.abs().max(lmin.abs());
+            emp = emp.max(dev);
+            if dev > thr {
+                viol += 1;
+            }
+        }
+        t51.row(vec![
+            format!("{rho}"),
+            m.to_string(),
+            format!("{thr:.3}"),
+            format!("{emp:.3}"),
+            format!("{viol}/{trials}"),
+        ]);
+    }
+    println!(
+        "Theorem 5.1 (SRHT; at d_e log d_e / rho scaling — the explicit-constant\nbound exceeds n at this testbed scale):\n{}",
+        t51.to_string()
+    );
+
+    // ---- Theorem 5.3: covariance estimation
+    println!("Theorem 5.3 (covariance estimation):");
+    let mut t53 = MarkdownTable::new(&["rho", "m", "bound", "emp sup", "emp -inf", "violations"]);
+    // Sigma = diag decay; d_Sigma analog of d_e
+    let svals: Vec<f64> = (0..d).map(|j| 0.97f64.powi(j as i32)).collect();
+    let d_sigma: f64 = svals.iter().sum::<f64>() / svals[0];
+    let snorm = svals[0];
+    for rho in [0.25f64, 0.1] {
+        let m = (((d_sigma.sqrt() + (8.0 * (16.0f64 / delta).ln()).sqrt()).powi(2)) / rho).ceil() as usize;
+        let bound_up = snorm * (2.0 * rho.sqrt() + rho);
+        let bound_low = snorm * (2.0 * rho.sqrt() - rho).max(rho);
+        let mut sup_emp = f64::NEG_INFINITY;
+        let mut inf_emp = f64::INFINITY;
+        let mut viol = 0;
+        for _ in 0..trials {
+            // empirical covariance of m samples from N(0, diag(svals))
+            let mut acc = Matrix::zeros(d, d);
+            for _ in 0..m {
+                let x: Vec<f64> = (0..d).map(|j| svals[j].sqrt() * rng.gaussian()).collect();
+                for i in 0..d {
+                    for j in 0..d {
+                        acc.data[i * d + j] += x[i] * x[j] / m as f64;
+                    }
+                }
+            }
+            for i in 0..d {
+                acc.data[i * d + i] -= svals[i];
+            }
+            let eigs = eig::jacobi_eigenvalues(&acc, 1e-9, 40);
+            sup_emp = sup_emp.max(eigs[0]);
+            inf_emp = inf_emp.min(eigs[d - 1]);
+            if eigs[0] > bound_up || eigs[d - 1] < -bound_low {
+                viol += 1;
+            }
+        }
+        t53.row(vec![
+            format!("{rho}"),
+            m.to_string(),
+            format!("±{bound_up:.3}/{bound_low:.3}"),
+            format!("{sup_emp:.3}"),
+            format!("{inf_emp:.3}"),
+            format!("{viol}/{trials}"),
+        ]);
+    }
+    println!("{}", t53.to_string());
+    println!("expected shape: zero (or <= delta fraction) violations per theorem; empirical");
+    println!("deviations within ~2x of the bound, confirming the sharp constants of §5.");
+}

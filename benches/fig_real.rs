@@ -1,0 +1,67 @@
+//! Regenerates Figures 4–9 (real datasets, proxied offline — DESIGN.md §5):
+//! the solver roster over each dataset's ridge problem, plus the
+//! multiclass batched solve that the paper's hot-encoding experiments use.
+//!
+//! `cargo bench --bench fig_real -- [--dataset cifar100|svhn|dilbert|
+//!  guillermo|ova_lung|wesad|all] [--scale 16] [--out results]`
+
+use sketchsolve::adaptive::AdaptiveConfig;
+use sketchsolve::bench_harness::figures::{panel_summary, paper_roster, run_panel, write_panel_csvs};
+use sketchsolve::bench_harness::scale::PROXY_SCALE_DEFAULT;
+use sketchsolve::coordinator::MultiRhsSolver;
+use sketchsolve::data::proxies::{proxy_spec, ProxyName};
+use sketchsolve::util::Flags;
+
+fn main() {
+    let flags = Flags::parse();
+    let names: Vec<ProxyName> = match flags.get_or("dataset", "all").as_str() {
+        "all" => ProxyName::all().to_vec(),
+        s => vec![ProxyName::parse(s).expect("unknown dataset")],
+    };
+    let scale = flags.get_parse_or("scale", PROXY_SCALE_DEFAULT);
+    let out = flags.get_or("out", "results");
+    let t_max = flags.get_parse_or("iters", 60usize);
+    let tol = flags.get_parse_or("tol", 1e-10f64);
+
+    for name in names {
+        let spec = proxy_spec(name);
+        let fig = 4 + ProxyName::all().iter().position(|n| *n == name).unwrap();
+        let ds = spec.build(scale, 4000 + fig as u64);
+        println!(
+            "\n=== Figure {fig}: {} proxy  n={} d={} c={}  (paper: n={} d={}) ===",
+            name.name(),
+            ds.a.rows,
+            ds.a.cols,
+            spec.classes,
+            spec.n_full,
+            spec.d_full
+        );
+        for nu in [1e-1f64, 1e-2] {
+            let de = ds.effective_dimension(nu);
+            println!("\n--- nu = {nu:.0e}  (d_e = {de:.0}) ---");
+            let prob = ds.problem_for_class(0, nu);
+            let results = run_panel(&prob, &paper_roster(), t_max, tol, fig as u64);
+            let panel = format!("fig{fig}_{}_nu{nu:.0e}", name.name());
+            write_panel_csvs(&out, &panel, &results).expect("write csvs");
+            println!("{}", panel_summary(&results).to_string());
+        }
+
+        // multiclass batched solve (all c classes share sketch+factor)
+        if spec.classes > 1 {
+            let b = ds.b_matrix();
+            let lambda = vec![1.0; ds.a.cols];
+            let batcher = MultiRhsSolver::new(AdaptiveConfig { tol, ..Default::default() }, t_max);
+            let t0 = std::time::Instant::now();
+            let rep = batcher.solve(&ds.a, &lambda, 1e-1, &b);
+            println!(
+                "multiclass batch (c={}): {:.3}s total, pilot m={} ({} doublings), {} followers",
+                spec.classes,
+                t0.elapsed().as_secs_f64(),
+                rep.pilot.final_m,
+                rep.pilot.sketch_doublings,
+                rep.followers.len()
+            );
+        }
+    }
+    println!("\nCSV traces written to `{out}/`");
+}

@@ -1,0 +1,46 @@
+//! Regenerates Figures 1–3 (synthetic datasets): relative error vs
+//! iteration, relative error vs CPU time, and adaptive sketch size vs
+//! iteration, for the paper's solver roster over the ν sweep.
+//!
+//! `cargo bench --bench fig_synthetic -- [--fig 1|2|3|all] [--paper-scale]
+//!  [--out results] [--iters 60]`
+//!
+//! Default dims are testbed-scaled (see `bench_harness::scale`); CSVs land
+//! in `results/` and a markdown summary prints per panel.
+
+use sketchsolve::bench_harness::figures::{panel_summary, paper_roster, run_panel, write_panel_csvs};
+use sketchsolve::bench_harness::scale::fig_dims;
+use sketchsolve::data::synthetic::SyntheticSpec;
+use sketchsolve::util::Flags;
+
+fn main() {
+    let flags = Flags::parse();
+    let figs: Vec<usize> = match flags.get_or("fig", "all").as_str() {
+        "all" => vec![1, 2, 3],
+        s => vec![s.parse().expect("--fig 1|2|3|all")],
+    };
+    let paper_scale = flags.has("paper-scale");
+    let out = flags.get_or("out", "results");
+    let t_max = flags.get_parse_or("iters", 60usize);
+    let tol = flags.get_parse_or("tol", 1e-10f64);
+
+    for fig in figs {
+        let dims = fig_dims(fig, paper_scale).expect("fig 1..3");
+        println!(
+            "\n=== Figure {fig}: synthetic n={} d={} (sigma_j = 0.995^(j*7000/d)) ===",
+            dims.n, dims.d
+        );
+        let spec = SyntheticSpec::paper_profile(dims.n, dims.d);
+        let ds = spec.build(1000 + fig as u64);
+        for &nu in dims.nus {
+            let de = spec.effective_dimension(nu);
+            println!("\n--- nu = {nu:.0e}  (d_e = {de:.0}, d_e/d = {:.3}) ---", de / dims.d as f64);
+            let prob = ds.problem(nu);
+            let results = run_panel(&prob, &paper_roster(), t_max, tol, fig as u64 * 100);
+            let panel = format!("fig{fig}_nu{nu:.0e}");
+            write_panel_csvs(&out, &panel, &results).expect("write csvs");
+            println!("{}", panel_summary(&results).to_string());
+        }
+    }
+    println!("CSV traces written to `{out}/` (err_vs_iter, err_vs_time, m_vs_iter per panel)");
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmarks of the substrate hot paths: GEMM/SYRK, Cholesky, FWHT,
+//! sketch application, preconditioner solves, and PJRT artifact dispatch.
+//! This is the §Perf instrument — run before/after each optimization.
+//!
+//! `cargo bench --bench micro -- [--quick]`
+
+use sketchsolve::bench_harness::runner::bench_median;
+use sketchsolve::linalg::{matmul, syrk_t, Cholesky, Matrix};
+use sketchsolve::precond::SketchedPreconditioner;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::util::Flags;
+
+fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+fn main() {
+    let flags = Flags::parse();
+    let quick = flags.has("quick");
+    let reps = if quick { 3 } else { 7 };
+    let mut rng = Rng::seed_from(0xFEED);
+
+    println!("== L3 substrate micro-benchmarks ==\n");
+
+    // GEMM
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512)] {
+        let a = Matrix::from_vec(m, k, rng.gaussian_vec(m * k));
+        let b = Matrix::from_vec(k, n, rng.gaussian_vec(k * n));
+        let st = bench_median(&format!("gemm {m}x{k}x{n}"), 1, reps, || matmul(&a, &b));
+        println!("{}   {:.2} GFLOP/s", st.line(), gflops(2.0 * (m * k * n) as f64, st.median_s));
+    }
+
+    // SYRK (the H_S formation hot-spot)
+    for &(m, d) in &[(1024usize, 512usize), (2048, 512)] {
+        let a = Matrix::from_vec(m, d, rng.gaussian_vec(m * d));
+        let st = bench_median(&format!("syrk {m}x{d}"), 1, reps, || syrk_t(&a));
+        println!("{}   {:.2} GFLOP/s", st.line(), gflops((m * d * d) as f64, st.median_s));
+    }
+
+    // Cholesky
+    for &d in &[256usize, 512] {
+        let a = Matrix::from_vec(d + 8, d, rng.gaussian_vec((d + 8) * d));
+        let mut h = syrk_t(&a);
+        for i in 0..d {
+            h.data[i * d + i] += 1.0;
+        }
+        let st = bench_median(&format!("cholesky {d}"), 1, reps, || Cholesky::factor(&h).unwrap());
+        println!("{}   {:.2} GFLOP/s", st.line(), gflops((d * d * d) as f64 / 3.0, st.median_s));
+    }
+
+    // FWHT
+    for &(n, d) in &[(4096usize, 128usize), (16384, 128)] {
+        let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+        let st = bench_median(&format!("fwht {n}x{d}"), 1, reps, || {
+            let mut x = a.clone();
+            sketchsolve::linalg::fwht_rows(&mut x);
+            x
+        });
+        let butterflies = (n as f64) * (n as f64).log2() * d as f64;
+        println!("{}   {:.2} Gop/s", st.line(), gflops(2.0 * butterflies, st.median_s));
+    }
+
+    // sketch application
+    let (n, d) = (16384usize, 256usize);
+    let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    for kind in [SketchKind::Sjlt { s: 1 }, SketchKind::Srht, SketchKind::Gaussian] {
+        let m = 512;
+        let sk = kind.sample(m, n, &mut rng);
+        let st = bench_median(&format!("sketch {} m={m} ({n}x{d})", kind.name()), 1, reps, || sk.apply(&a));
+        println!("{}", st.line());
+    }
+
+    // preconditioner solve (primal + woodbury)
+    for &m in &[128usize, 1024] {
+        let sa = Matrix::from_vec(m, 512, rng.gaussian_vec(m * 512));
+        let pre = SketchedPreconditioner::build(sa, &vec![1.0; 512], 0.1).unwrap();
+        let z = rng.gaussian_vec(512);
+        let path = if pre.is_woodbury() { "woodbury" } else { "primal" };
+        let st = bench_median(&format!("precond solve d=512 m={m} ({path})"), 2, reps * 3, || pre.solve(&z));
+        println!("{}", st.line());
+    }
+
+    // PJRT dispatch (if artifacts present)
+    if let Ok(engine) = sketchsolve::runtime::Engine::load("artifacts") {
+        if engine.has("gradient", &[4096, 512]) {
+            println!("\n== L2/L1 PJRT artifact dispatch ==\n");
+            let (n, d) = (4096usize, 512usize);
+            let a32: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+            let x32: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let b32 = x32.clone();
+            let lam32 = vec![1.0f32; d];
+            let nu232 = [0.01f32];
+            let st = bench_median("pjrt gradient 4096x512 (f32)", 1, reps, || {
+                engine
+                    .run(
+                        "gradient",
+                        &[n, d],
+                        &[(&a32, &[n, d]), (&x32, &[d]), (&b32, &[d]), (&lam32, &[d]), (&nu232, &[1])],
+                    )
+                    .unwrap()
+            });
+            println!("{}   {:.2} GFLOP/s", st.line(), gflops(4.0 * (n * d) as f64, st.median_s));
+            // cached-device-buffer path (the XlaPcg hot loop)
+            let a_buf = engine.upload_f32(&a32, &[n, d]).unwrap();
+            let b_buf = engine.upload_f32(&b32, &[d]).unwrap();
+            let lam_buf = engine.upload_f32(&lam32, &[d]).unwrap();
+            let nu2_buf = engine.upload_f32(&nu232, &[1]).unwrap();
+            let st = bench_median("pjrt gradient cached-A (f32)", 1, reps, || {
+                let x_buf = engine.upload_f32(&x32, &[d]).unwrap();
+                engine
+                    .run_buffers("gradient", &[n, d], &[&a_buf, &x_buf, &b_buf, &lam_buf, &nu2_buf])
+                    .unwrap()
+            });
+            println!("{}   {:.2} GFLOP/s", st.line(), gflops(4.0 * (n * d) as f64, st.median_s));
+            let sa32: Vec<f32> = (0..1024 * d).map(|_| rng.gaussian() as f32).collect();
+            let st = bench_median("pjrt sketch_gram 1024x512 (f32)", 1, reps, || {
+                engine
+                    .run("sketch_gram", &[1024, d], &[(&sa32, &[1024, d]), (&lam32, &[d]), (&nu232, &[1])])
+                    .unwrap()
+            });
+            println!("{}   {:.2} GFLOP/s", st.line(), gflops(2.0 * 1024.0 * (d * d) as f64, st.median_s));
+        }
+    } else {
+        println!("\n(no artifacts: skipping PJRT dispatch benches)");
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! Loads the AOT artifacts (`make artifacts` first), builds the scaled
+//! paper-profile ridge problem matching the artifact shape bucket
+//! (n=4096, d=512), and solves it four ways:
+//!   1. direct Cholesky (exact baseline),
+//!   2. native adaptive PCG (pure rust),
+//!   3. XLA-backed PCG — gradient / Hessian-apply / sketched-Gram all
+//!      execute as the L2/L1 PJRT artifacts (Pallas kernels inside),
+//!   4. XLA-backed *adaptive* PCG walking the artifact bucket ladder.
+//!
+//! Verifies all solutions agree and reports the paper's headline metric:
+//! wall-clock + final sketch size vs the oblivious m = 2d baseline.
+//! Results are recorded in EXPERIMENTS.md (§E2E).
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_ridge`
+
+use sketchsolve::adaptive::{AdaptiveConfig, AdaptivePcg};
+use sketchsolve::data::synthetic::SyntheticSpec;
+use sketchsolve::linalg::norm2;
+use sketchsolve::precond::SketchedPreconditioner;
+use sketchsolve::runtime::{Engine, XlaPcg};
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{DirectSolver, Pcg, StopRule};
+
+fn rel_diff(a: &[f64], b: &[f64]) -> f64 {
+    let d: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    norm2(&d) / norm2(b).max(1e-12)
+}
+
+fn main() {
+    let dir = std::env::var("SKETCHSOLVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = match Engine::load(&dir) {
+        Ok(e) if !e.artifacts().is_empty() => e,
+        _ => {
+            eprintln!("no artifacts found in `{dir}` — run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "engine: platform={} artifacts={}",
+        engine.platform(),
+        engine.artifacts().len()
+    );
+
+    // the artifact shape bucket
+    let (n, d, nu) = (4096usize, 512usize, 1e-1f64);
+    let spec = SyntheticSpec::paper_profile(n, d);
+    let ds = spec.build(7);
+    let prob = ds.problem(nu);
+    let de = spec.effective_dimension(nu);
+    println!("workload: ridge n={n} d={d} nu={nu:.0e}  d_e={de:.0}  (scaled paper profile)");
+
+    // 1. exact baseline
+    let exact = DirectSolver::solve(&prob).expect("SPD");
+    println!("\n[1] direct Cholesky        {:>8.3}s   (exact)", exact.secs);
+
+    // 2. oblivious fixed PCG at m = 2d (the standard sketching baseline)
+    let mut rng = sketchsolve::rng::Rng::seed_from(1);
+    let sk = SketchKind::Srht.sample(2 * d, n, &mut rng);
+    let t0 = std::time::Instant::now();
+    let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+    let pcg2d = Pcg::solve_fixed(&prob, &pre, StopRule { max_iters: 40, tol: 1e-12 }, Some(&exact.x));
+    let pcg2d_total = t0.elapsed().as_secs_f64();
+    println!(
+        "[2] PCG (SRHT, m=2d={})  {:>8.3}s   err={:.1e}  iters={}",
+        2 * d,
+        pcg2d_total,
+        pcg2d.final_error_rel(),
+        pcg2d.iterations
+    );
+
+    // 3. native adaptive PCG
+    let cfg = AdaptiveConfig { sketch: SketchKind::Sjlt { s: 1 }, tol: 1e-12, ..Default::default() };
+    let ada = AdaptivePcg::with_config(cfg).solve_traced(&prob, 60, Some(&exact.x));
+    println!(
+        "[3] adaptive PCG (native)  {:>8.3}s   err={:.1e}  final m={} doublings={}",
+        ada.secs,
+        ada.final_error_rel(),
+        ada.final_m,
+        ada.sketch_doublings
+    );
+
+    // 4. XLA-backed PCG at a fixed bucket
+    let xla = XlaPcg::new(&engine);
+    assert!(xla.supports(&prob), "artifacts missing for this shape");
+    let xrep = xla.solve_fixed(&prob, 1024, 40, 1e-12, 11).expect("xla solve");
+    let xerr = rel_diff(&xrep.x, &exact.x);
+    println!(
+        "[4] XLA PCG (m=1024)       {:>8.3}s   x-diff={:.1e}  iters={}   [PJRT: pallas gram+matvec]",
+        xrep.secs, xerr, xrep.iterations
+    );
+
+    // 5. XLA-backed adaptive over the bucket ladder
+    let xada = xla.solve_adaptive(&prob, 20, 1e-10, 13).expect("xla adaptive");
+    let xaerr = rel_diff(&xada.x, &exact.x);
+    println!(
+        "[5] XLA adaptive PCG       {:>8.3}s   x-diff={:.1e}  final m={}",
+        xada.secs, xaerr, xada.final_m
+    );
+
+    // --- verification
+    assert!(pcg2d.final_error_rel() < 1e-9, "pcg 2d did not converge");
+    assert!(ada.final_error_rel() < 1e-9, "adaptive did not converge");
+    assert!(xerr < 1e-4, "xla path disagrees: {xerr}"); // f32 kernels
+    assert!(xaerr < 1e-4, "xla adaptive disagrees: {xaerr}");
+
+    // --- headline metric
+    println!("\nheadline (paper claim: adaptive sketch << 2d, faster end-to-end):");
+    println!(
+        "  final sketch size: adaptive {} vs oblivious {}  ({:.1}x memory saving)",
+        ada.final_m,
+        2 * d,
+        (2 * d) as f64 / ada.final_m as f64
+    );
+    println!(
+        "  wall-clock: direct {:.3}s | pcg-2d {:.3}s | adaptive {:.3}s ({:.1}x vs direct)",
+        exact.secs,
+        pcg2d_total,
+        ada.secs,
+        exact.secs / ada.secs
+    );
+    println!("\nE2E OK — all layers compose (rust coordinator -> PJRT -> pallas kernels).");
+}

@@ -1,0 +1,48 @@
+//! Hyperparameter sweep: the regularization-path workload.
+//!
+//! Ridge regression is usually tuned over a grid of regularization values;
+//! each ν changes the effective dimension and hence the right sketch size.
+//! This example sweeps ν, solves each problem adaptively, and prints how
+//! the discovered sketch size tracks d_e(ν) — the adaptivity story of the
+//! paper in one table.
+//!
+//! Run: `cargo run --release --example hyperparam_sweep`
+
+use sketchsolve::adaptive::{AdaptiveConfig, AdaptivePcg};
+use sketchsolve::bench_harness::MarkdownTable;
+use sketchsolve::data::synthetic::SyntheticSpec;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::DirectSolver;
+
+fn main() {
+    let (n, d) = (4096, 512);
+    let spec = SyntheticSpec::paper_profile(n, d);
+    let ds = spec.build(2025);
+    println!("sweep: n={n} d={d}, paper spectral profile, SJLT(s=1), m_init=1\n");
+
+    let mut table = MarkdownTable::new(&[
+        "nu", "d_e(nu)", "final m", "m / 2d", "doublings", "iters", "time(s)", "err vs direct",
+    ]);
+    for nu in [1.0, 1e-1, 1e-2, 1e-3, 1e-4] {
+        let prob = ds.problem(nu);
+        let exact = DirectSolver::solve(&prob).expect("SPD");
+        let cfg = AdaptiveConfig {
+            sketch: SketchKind::Sjlt { s: 1 },
+            tol: 1e-11,
+            ..Default::default()
+        };
+        let rep = AdaptivePcg::with_config(cfg).solve_traced(&prob, 80, Some(&exact.x));
+        table.row(vec![
+            format!("{nu:.0e}"),
+            format!("{:.0}", spec.effective_dimension(nu)),
+            format!("{}", rep.final_m),
+            format!("{:.2}", rep.final_m as f64 / (2 * d) as f64),
+            format!("{}", rep.sketch_doublings),
+            format!("{}", rep.iterations),
+            format!("{:.3}", rep.secs),
+            format!("{:.1e}", rep.final_error_rel()),
+        ]);
+    }
+    println!("{}", table.to_string());
+    println!("reading: smaller nu -> larger d_e -> the controller doubles further;\nthe sketch stays far below the oblivious 2d baseline whenever d_e << d.");
+}

@@ -1,0 +1,85 @@
+"""AOT pipeline: lower the L2 graphs to HLO text + write the manifest.
+
+HLO *text* is the interchange format (NOT `.serialize()`): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def manifest_entries(quick: bool):
+    """(op, shape-bucket, fn, example-arg specs) for every artifact.
+
+    Shape buckets cover the e2e example (n=4096, d=512 scaled synthetic)
+    plus the sketch-size ladder the adaptive solver doubles through.
+    """
+    if quick:
+        n, d = 256, 64
+        gram_ms = [32, 64, 128]
+    else:
+        n, d = 4096, 512
+        gram_ms = [128, 256, 512, 1024]
+    entries = [
+        ("gradient", [n, d], model.gradient, [spec(n, d), spec(d), spec(d), spec(d), spec(1)]),
+        ("hess_apply", [n, d], model.hess_apply, [spec(n, d), spec(d), spec(d), spec(1)]),
+        ("fwht", [n, d], model.fwht_apply, [spec(n, d)]),
+    ]
+    for m in gram_ms:
+        entries.append(
+            ("sketch_gram", [m, d], model.sketch_gram, [spec(m, d), spec(d), spec(1)])
+        )
+    return entries
+
+
+def to_hlo_text(fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quick", action="store_true", help="small shapes for CI")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = []
+    for op, shape, fn, arg_specs in manifest_entries(args.quick):
+        fname = f"{op}_{'x'.join(str(s) for s in shape)}.hlo.txt"
+        text = to_hlo_text(fn, arg_specs)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts.append({"op": op, "shape": shape, "file": fname})
+        print(f"  {op:<12} {shape!s:<14} -> {fname} ({len(text)} chars)")
+
+    manifest = {"version": 1, "dtype": "f32", "artifacts": artifacts}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

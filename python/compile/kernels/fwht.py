@@ -1,0 +1,55 @@
+"""Pallas kernel: fast Walsh-Hadamard transform along the rows axis.
+
+The SRHT hot-spot. The grid tiles the *column* axis so each kernel
+invocation holds an (n, bd) panel in VMEM and performs all log2(n)
+butterfly stages on it — the HBM <-> VMEM traffic is one round trip per
+panel instead of one per stage (the scheduling insight a CUDA version
+expresses with shared-memory staging; see DESIGN.md Hardware-Adaptation).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; structure (BlockSpec/VMEM footprint) is still TPU-shaped.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column-panel width: n * BD * 4 bytes must fit VMEM (16 MB); BD=128 keeps
+# an n=16384 panel at 8 MB.
+DEFAULT_BD = 128
+
+
+def _fwht_kernel(x_ref, o_ref, *, n):
+    x = x_ref[...]
+    d = x.shape[1]
+    h = 1
+    # static python loop: log2(n) stages, fully unrolled at trace time
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, d)
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n, d)
+        h *= 2
+    o_ref[...] = x
+
+
+def fwht(x, block_d: int = DEFAULT_BD):
+    """Unnormalized FWHT along axis 0 of an (n, d) array, n a power of 2."""
+    n, d = x.shape
+    assert n & (n - 1) == 0, "fwht: n must be a power of two"
+    bd = min(block_d, d)
+    # pad d to a multiple of bd so the grid divides evenly
+    d_pad = ((d + bd - 1) // bd) * bd
+    if d_pad != d:
+        x = jnp.pad(x, ((0, 0), (0, d_pad - d)))
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((n, d_pad), x.dtype),
+        grid=(d_pad // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
+        interpret=True,
+    )(x)
+    return out[:, :d]

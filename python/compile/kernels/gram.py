@@ -1,0 +1,52 @@
+"""Pallas kernel: tiled symmetric Gram matrix (SA)^T (SA).
+
+The H_S formation hot-spot. Grid = (d/bd, d/bd, m/bm) with the reduction
+axis innermost; each (i, j) output tile accumulates bm-row panels of the
+two column blocks. Tiles are MXU-shaped (multiples of 128) and accumulate
+in f32 — the TPU translation of the paper's BLAS-3 `syrk` call.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU-shaped tiles are 128-multiples (MXU); the CPU-serving artifacts use
+# larger blocks to shrink the interpret-mode grid (§Perf L1: 178ms -> 21ms
+# for the 1024x512 Gram at bm=512, bd=256).
+TPU_BM = 128
+TPU_BD = 128
+CPU_BM = 512
+CPU_BD = 256
+
+
+def _gram_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def gram(sa, block_m: int = None, block_d: int = None):
+    """(SA)^T (SA) for sa of shape (m, d)."""
+    m, d = sa.shape
+    bm = min(block_m if block_m else CPU_BM, m)
+    bd = min(block_d if block_d else CPU_BD, d)
+    m_pad = ((m + bm - 1) // bm) * bm
+    d_pad = ((d + bd - 1) // bd) * bd
+    if (m_pad, d_pad) != (m, d):
+        sa = jnp.pad(sa, ((0, m_pad - m), (0, d_pad - d)))
+    out = pl.pallas_call(
+        _gram_kernel,
+        out_shape=jax.ShapeDtypeStruct((d_pad, d_pad), jnp.float32),
+        grid=(d_pad // bd, d_pad // bd, m_pad // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bm, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(sa.astype(jnp.float32), sa.astype(jnp.float32))
+    return out[:d, :d]

@@ -1,0 +1,83 @@
+"""Pallas kernels: blocked matrix-vector products for the iteration path.
+
+`matvec` (y = A x) tiles A into (bn, d) row panels; `matvec_t`
+(y = A^T w) accumulates bd-wide output tiles over row panels with the
+reduction axis innermost. Together they implement the per-iteration
+`A^T (A x)` at O(nd) with one HBM pass over A per product.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-size policy: on a real TPU the row panel is VMEM-bound (bn*d*4B
+# <= ~8MB -> bn=256 at d=512 with double buffering). Under interpret=True
+# on CPU-PJRT each grid step becomes a serial loop iteration with buffer
+# slicing, so the CPU-serving artifacts use the largest block that fits
+# (grid ~ 1): 5x faster end-to-end (see EXPERIMENTS.md §Perf L1).
+TPU_BN = 256
+CPU_BN = 4096
+
+
+def _pick_bn(n, block_n):
+    return min(n, block_n if block_n else CPU_BN)
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+
+def matvec(a, x, block_n: int = None):
+    """y = A x for a: (n, d), x: (d,)."""
+    n, d = a.shape
+    bn = _pick_bn(n, block_n)
+    n_pad = ((n + bn - 1) // bn) * bn
+    if n_pad != n:
+        a = jnp.pad(a, ((0, n_pad - n), (0, 0)))
+    out = pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        interpret=True,
+    )(a.astype(jnp.float32), x.astype(jnp.float32))
+    return out[:n]
+
+
+def _matvec_t_kernel(a_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matvec_t(a, w, block_n: int = None, block_d: int = None):
+    """y = A^T w for a: (n, d), w: (n,)."""
+    n, d = a.shape
+    bn = _pick_bn(n, block_n)
+    bd = min(block_d if block_d else 512, d)
+    n_pad = ((n + bn - 1) // bn) * bn
+    d_pad = ((d + bd - 1) // bd) * bd
+    if (n_pad, d_pad) != (n, d):
+        a = jnp.pad(a, ((0, n_pad - n), (0, d_pad - d)))
+    if n_pad != n:
+        w = jnp.pad(w, (0, n_pad - n))
+    out = pl.pallas_call(
+        _matvec_t_kernel,
+        out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        grid=(d_pad // bd, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j, k: (j,)),
+        interpret=True,
+    )(a.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:d]

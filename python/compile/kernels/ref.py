@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here; pytest
+sweeps shapes with hypothesis and asserts allclose between the two. The
+rust native `linalg` path mirrors these semantics in f64.
+"""
+
+import jax.numpy as jnp
+
+
+def fwht_ref(x):
+    """Unnormalized fast Walsh-Hadamard transform along axis 0.
+
+    x: (n, d) with n a power of two. Matches rust `linalg::fwht_rows`.
+    """
+    n, d = x.shape
+    assert n & (n - 1) == 0, "n must be a power of two"
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, d)
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n, d)
+        h *= 2
+    return x
+
+
+def gram_ref(sa):
+    """Gram matrix (SA)^T (SA). sa: (m, d) -> (d, d)."""
+    return sa.T @ sa
+
+
+def matvec_ref(a, x):
+    """y = A x. a: (n, d), x: (d,) -> (n,)."""
+    return a @ x
+
+
+def matvec_t_ref(a, w):
+    """y = A^T w. a: (n, d), w: (n,) -> (d,)."""
+    return a.T @ w
+
+
+def gradient_ref(a, x, b, lam, nu2):
+    """grad f(x) = A^T (A x) + nu^2 * lam * x - b  (nu2 given as (1,))."""
+    return a.T @ (a @ x) + nu2[0] * lam * x - b
+
+
+def hess_apply_ref(a, p, lam, nu2):
+    """H p = A^T (A p) + nu^2 * lam * p."""
+    return a.T @ (a @ p) + nu2[0] * lam * p
+
+
+def sketch_gram_ref(sa, lam, nu2):
+    """H_S = (SA)^T (SA) + nu^2 * diag(lam)."""
+    return sa.T @ sa + nu2[0] * jnp.diag(lam)

@@ -1,0 +1,43 @@
+"""L2: the solver-iteration compute graphs, built on the L1 Pallas kernels.
+
+These are the dense hot-spots of the paper's solvers (gradient, Hessian
+apply, sketched-Gram formation, the SRHT transform). `aot.py` lowers each
+to HLO text per shape bucket; the rust coordinator executes them via PJRT
+and keeps all control flow (adaptivity, CG recurrences, factorization)
+native. Python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import fwht as fwht_k
+from compile.kernels import gram as gram_k
+from compile.kernels import matvec as matvec_k
+
+
+def gradient(a, x, b, lam, nu2):
+    """grad f(x) = A^T (A x) + nu^2 * lam * x - b.
+
+    a: (n, d), x/b/lam: (d,), nu2: (1,) (scalar packed as rank-1 for a
+    uniform buffer-only calling convention from rust).
+    """
+    ax = matvec_k.matvec(a, x)
+    atax = matvec_k.matvec_t(a, ax)
+    return atax + nu2[0] * lam * x - b
+
+
+def hess_apply(a, p, lam, nu2):
+    """H p = A^T (A p) + nu^2 * lam * p (PCG inner-product path)."""
+    ap = matvec_k.matvec(a, p)
+    atap = matvec_k.matvec_t(a, ap)
+    return atap + nu2[0] * lam * p
+
+
+def sketch_gram(sa, lam, nu2):
+    """H_S = (SA)^T (SA) + nu^2 diag(lam), from the tiled Gram kernel."""
+    g = gram_k.gram(sa)
+    return g + nu2[0] * jnp.diag(lam)
+
+
+def fwht_apply(x):
+    """Unnormalized Walsh-Hadamard transform along rows (SRHT hot-spot)."""
+    return fwht_k.fwht(x)

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes (including non-multiples of the block sizes, so
+the padding paths are exercised) and compares with assert_allclose.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import fwht as fwht_k
+from compile.kernels import gram as gram_k
+from compile.kernels import matvec as matvec_k
+from compile.kernels import ref
+
+RTOL = 2e-4  # f32 accumulation vs f64 numpy
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestFwht:
+    @settings(**SETTINGS)
+    @given(
+        logn=st.integers(min_value=0, max_value=9),
+        d=st.integers(min_value=1, max_value=40),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, logn, d, seed):
+        n = 1 << logn
+        x = rand((n, d), seed)
+        got = np.asarray(fwht_k.fwht(x))
+        want = np.asarray(ref.fwht_ref(x))
+        assert_allclose(got, want, rtol=RTOL, atol=1e-3 * np.sqrt(n))
+
+    def test_involution_up_to_scale(self):
+        # H_unnorm^2 = n * I
+        x = rand((64, 5), 1)
+        twice = np.asarray(fwht_k.fwht(np.asarray(fwht_k.fwht(x))))
+        assert_allclose(twice, 64 * x, rtol=1e-4, atol=1e-3)
+
+    def test_small_block_padding(self):
+        # d smaller than the block width exercises the pad/slice path
+        x = rand((16, 3), 2)
+        got = np.asarray(fwht_k.fwht(x, block_d=128))
+        want = np.asarray(ref.fwht_ref(x))
+        assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+class TestGram:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(min_value=1, max_value=300),
+        d=st.integers(min_value=1, max_value=80),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, m, d, seed):
+        sa = rand((m, d), seed)
+        got = np.asarray(gram_k.gram(sa, block_m=64, block_d=32))
+        want = np.asarray(ref.gram_ref(sa))
+        assert_allclose(got, want, rtol=RTOL, atol=1e-3 * m)
+
+    def test_symmetry(self):
+        sa = rand((70, 33), 3)
+        g = np.asarray(gram_k.gram(sa, block_m=32, block_d=16))
+        assert_allclose(g, g.T, rtol=0, atol=1e-4)
+
+    def test_psd_diagonal(self):
+        sa = rand((50, 20), 4)
+        g = np.asarray(gram_k.gram(sa, block_m=32, block_d=16))
+        assert (np.diag(g) >= -1e-5).all()
+
+
+class TestMatvec:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(min_value=1, max_value=500),
+        d=st.integers(min_value=1, max_value=60),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matvec_matches(self, n, d, seed):
+        a = rand((n, d), seed)
+        x = rand((d,), seed + 1)
+        got = np.asarray(matvec_k.matvec(a, x, block_n=64))
+        want = np.asarray(ref.matvec_ref(a, x))
+        assert_allclose(got, want, rtol=RTOL, atol=1e-3)
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(min_value=1, max_value=500),
+        d=st.integers(min_value=1, max_value=60),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matvec_t_matches(self, n, d, seed):
+        a = rand((n, d), seed)
+        w = rand((n,), seed + 1)
+        got = np.asarray(matvec_k.matvec_t(a, w, block_n=64, block_d=32))
+        want = np.asarray(ref.matvec_t_ref(a, w))
+        assert_allclose(got, want, rtol=RTOL, atol=1e-3 * np.sqrt(n))
+
+    def test_composition_is_hessian_term(self):
+        # A^T (A x) through the two kernels equals the dense product
+        a = rand((130, 17), 5)
+        x = rand((17,), 6)
+        ax = np.asarray(matvec_k.matvec(a, x, block_n=64))
+        atax = np.asarray(matvec_k.matvec_t(a, ax, block_n=64, block_d=16))
+        assert_allclose(atax, a.T @ (a @ x), rtol=1e-3, atol=1e-2)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

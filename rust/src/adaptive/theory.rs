@@ -1,0 +1,172 @@
+//! Theory constants and complexity formulas (Tables 1 & 2, Theorems 5.1/5.2).
+//!
+//! Everything the adaptive mechanism and the complexity benches need:
+//! critical sketch sizes `m_δ`, the test constant `c(α,ρ)`, the doubling
+//! budget `K_max`, and the `C_{ε,δ}` cost model of §4.1.
+
+use crate::sketch::SketchKind;
+
+/// `c(α, ρ) = (1+√ρ)/(1−√ρ) · α` (§1.1 notation).
+pub fn c_alpha_rho(alpha: f64, rho: f64) -> f64 {
+    assert!((0.0..1.0).contains(&rho));
+    let s = rho.sqrt();
+    (1.0 + s) / (1.0 - s) * alpha
+}
+
+/// `K_max = ceil(log2(m_δ / (m_init ρ)))_+` (Theorem 4.1).
+pub fn k_max(m_delta: f64, rho: f64, m_init: usize) -> usize {
+    let v = (m_delta / (m_init as f64 * rho)).log2();
+    if v <= 0.0 {
+        0
+    } else {
+        v.ceil() as usize
+    }
+}
+
+/// Critical sketch size for the SRHT with explicit constants
+/// (Theorem 5.1): `m_δ = 16 log(16 d_e/δ) (√d_e + √(8 log(2n/δ)))²`.
+pub fn m_delta_srht(d_e: f64, n: usize, delta: f64) -> f64 {
+    let l1 = (16.0 * d_e / delta).ln().max(0.0);
+    let l2 = (8.0 * (2.0 * n as f64 / delta).ln()).max(0.0).sqrt();
+    16.0 * l1 * (d_e.sqrt() + l2).powi(2)
+}
+
+/// Critical sketch size for Gaussian embeddings with explicit constants
+/// (Theorem 5.2 with `ω(C)² <= d_e`):
+/// `m_δ = (√d_e + √(8 log(16/δ)))²`.
+pub fn m_delta_gaussian(d_e: f64, delta: f64) -> f64 {
+    (d_e.sqrt() + (8.0 * (16.0 / delta).ln()).sqrt()).powi(2)
+}
+
+/// Critical sketch size for the SJLT with s = 1 (Table 1): `O(d_e²/δ)`.
+/// The constant is not explicit in the paper; we use 1.0 and expose it.
+pub fn m_delta_sjlt(d_e: f64, delta: f64) -> f64 {
+    d_e * d_e / delta
+}
+
+/// Critical sketch size for a given family (`d_e` may be the true effective
+/// dimension or the paper's `NoAda-d` fallback `d`).
+pub fn m_delta(kind: SketchKind, d_e: f64, n: usize, delta: f64) -> f64 {
+    match kind {
+        SketchKind::Srht => m_delta_srht(d_e, n, delta),
+        SketchKind::Gaussian => m_delta_gaussian(d_e, delta),
+        SketchKind::Sjlt { .. } => m_delta_sjlt(d_e, delta),
+    }
+}
+
+/// The big-O (constant-free) sketch sizes of Table 1 — used for the
+/// asymptotic rows of the Table 2 bench.
+pub fn m_delta_asymptotic(kind: SketchKind, d_e: f64, delta: f64) -> f64 {
+    match kind {
+        SketchKind::Srht => d_e * d_e.max(2.0).ln(),
+        SketchKind::Gaussian => d_e,
+        SketchKind::Sjlt { .. } => d_e * d_e / delta,
+    }
+}
+
+/// Inputs for the §4.1.3 total-cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct CostInputs {
+    pub n: usize,
+    pub d: usize,
+    /// Effective dimension (or `d` for the NoAda-d rows).
+    pub d_e: f64,
+    pub eps: f64,
+    pub delta: f64,
+}
+
+/// The three method variants Table 2 compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Our adaptive method (no knowledge of d_e; pays log(m_δ) refreshes).
+    Adaptive,
+    /// Non-adaptive with oracle knowledge of d_e.
+    NoAdaDe,
+    /// Non-adaptive, no knowledge: sketch size scales with d.
+    NoAdaD,
+}
+
+/// Evaluate the time-complexity model `C_{ε,δ}` (eq. 4.2) in flops for a
+/// (sketch, variant) pair. Per-iteration cost is `O(nd)` for IHS/PCG.
+pub fn total_cost(kind: SketchKind, variant: Variant, inp: CostInputs) -> f64 {
+    let n = inp.n as f64;
+    let d = inp.d as f64;
+    let dim = match variant {
+        Variant::NoAdaD => d,
+        _ => inp.d_e,
+    };
+    let md = m_delta_asymptotic(kind, dim, inp.delta);
+    let log_md = md.max(2.0).ln();
+    let iters = match variant {
+        Variant::Adaptive => (1.0 / inp.eps).ln() + log_md * log_md,
+        _ => (1.0 / inp.eps).ln(),
+    };
+    let per_iter = n * d;
+    let refreshes = match variant {
+        Variant::Adaptive => log_md,
+        _ => 1.0,
+    };
+    let sketch_cost = kind.sketch_cost_flops(md as usize, inp.n, inp.d);
+    let factor_cost = md.min(d) * md * d;
+    per_iter * iters + refreshes * (sketch_cost + factor_cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_alpha_rho_values() {
+        assert!((c_alpha_rho(1.0, 0.0) - 1.0).abs() < 1e-12);
+        // rho = 1/4: (1+0.5)/(1-0.5) = 3
+        assert!((c_alpha_rho(1.0, 0.25) - 3.0).abs() < 1e-12);
+        assert!((c_alpha_rho(4.0, 0.25) - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_max_behaviour() {
+        // m_init already >= m_delta/rho: no doublings needed
+        assert_eq!(k_max(8.0, 0.5, 100), 0);
+        // m_delta/rho = 64, m_init 1: 6 doublings
+        assert_eq!(k_max(32.0, 0.5, 1), 6);
+        // non power of two rounds up
+        assert_eq!(k_max(33.0, 0.5, 1), 7);
+    }
+
+    #[test]
+    fn m_delta_orderings() {
+        let d_e = 100.0;
+        let n = 100_000;
+        let delta = 0.01;
+        let g = m_delta_gaussian(d_e, delta);
+        let h = m_delta_srht(d_e, n, delta);
+        let j = m_delta_sjlt(d_e, delta);
+        // Gaussian is the sharpest, SJLT the loosest (d_e^2/delta)
+        assert!(g < h, "gaussian {g} < srht {h}");
+        assert!(h < j, "srht {h} < sjlt {j}");
+        // all grow with d_e
+        assert!(m_delta_gaussian(200.0, delta) > g);
+        assert!(m_delta_srht(200.0, n, delta) > h);
+    }
+
+    #[test]
+    fn adaptive_beats_noada_d_when_de_small() {
+        // headline claim: for d_e << d the adaptive complexity wins
+        let inp = CostInputs { n: 100_000, d: 7_000, d_e: 200.0, eps: 1e-10, delta: 0.01 };
+        for kind in [SketchKind::Srht, SketchKind::Sjlt { s: 1 }, SketchKind::Gaussian] {
+            let ada = total_cost(kind, Variant::Adaptive, inp);
+            let noada_d = total_cost(kind, Variant::NoAdaD, inp);
+            assert!(ada < noada_d, "{kind:?}: {ada} !< {noada_d}");
+        }
+    }
+
+    #[test]
+    fn adaptivity_overhead_is_logarithmic() {
+        // vs the d_e oracle, adaptive pays at most ~log(m_delta) extra
+        let inp = CostInputs { n: 50_000, d: 2_000, d_e: 300.0, eps: 1e-8, delta: 0.05 };
+        let ada = total_cost(SketchKind::Srht, Variant::Adaptive, inp);
+        let oracle = total_cost(SketchKind::Srht, Variant::NoAdaDe, inp);
+        let md = m_delta_asymptotic(SketchKind::Srht, 300.0, 0.05);
+        assert!(ada / oracle <= 2.0 * md.ln(), "ratio {}", ada / oracle);
+    }
+}

@@ -1,0 +1,176 @@
+//! Shared figure runner: the solver roster the paper's figures compare,
+//! run over one (dataset, ν) panel with full tracing, plus CSV/markdown
+//! emission. Used by `benches/fig_synthetic.rs` and `benches/fig_real.rs`.
+
+use crate::adaptive::{AdaptiveConfig, AdaptiveIhs, AdaptivePcg, AdaptivePolyak};
+use crate::bench_harness::report::{fmt_sci, Csv, MarkdownTable};
+use crate::precond::SketchedPreconditioner;
+use crate::problem::Problem;
+use crate::sketch::SketchKind;
+use crate::solvers::{ConjugateGradient, DirectSolver, SolveReport, StopRule};
+
+/// One solver configuration in a figure panel.
+#[derive(Clone, Debug)]
+pub enum MethodSpec {
+    Direct,
+    Cg,
+    /// PCG with a fixed sketch size `mult * d` (paper baseline: mult = 2).
+    PcgFixed { kind: SketchKind, mult: usize },
+    AdaptivePcg { kind: SketchKind },
+    AdaptiveIhs { kind: SketchKind },
+    AdaptivePolyak { kind: SketchKind },
+}
+
+impl MethodSpec {
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Direct => "direct".into(),
+            MethodSpec::Cg => "cg".into(),
+            MethodSpec::PcgFixed { kind, mult } => format!("pcg-{}-{}d", kind.name(), mult),
+            MethodSpec::AdaptivePcg { kind } => format!("ada-pcg-{}", kind.name()),
+            MethodSpec::AdaptiveIhs { kind } => format!("ada-ihs-{}", kind.name()),
+            MethodSpec::AdaptivePolyak { kind } => format!("ada-polyak-{}", kind.name()),
+        }
+    }
+}
+
+/// The paper's default roster: direct, CG, PCG(m=2d) with SRHT+SJLT,
+/// adaptive PCG with SRHT+SJLT, adaptive IHS with SJLT.
+pub fn paper_roster() -> Vec<MethodSpec> {
+    vec![
+        MethodSpec::Direct,
+        MethodSpec::Cg,
+        MethodSpec::PcgFixed { kind: SketchKind::Srht, mult: 2 },
+        MethodSpec::PcgFixed { kind: SketchKind::Sjlt { s: 1 }, mult: 2 },
+        MethodSpec::AdaptivePcg { kind: SketchKind::Srht },
+        MethodSpec::AdaptivePcg { kind: SketchKind::Sjlt { s: 1 } },
+        MethodSpec::AdaptiveIhs { kind: SketchKind::Sjlt { s: 1 } },
+    ]
+}
+
+/// Run the roster on one problem with exact-error tracing.
+pub fn run_panel(
+    prob: &Problem,
+    roster: &[MethodSpec],
+    t_max: usize,
+    tol: f64,
+    seed: u64,
+) -> Vec<(String, SolveReport)> {
+    let exact = DirectSolver::solve(prob).expect("H is SPD");
+    let x_star = exact.x.clone();
+    let mut out = Vec::new();
+    for spec in roster {
+        let rep = match spec {
+            MethodSpec::Direct => exact.clone(),
+            MethodSpec::Cg => ConjugateGradient::solve(
+                prob,
+                StopRule { max_iters: t_max * 10, tol: tol.sqrt() },
+                Some(&x_star),
+            ),
+            MethodSpec::PcgFixed { kind, mult } => {
+                let m = (mult * prob.d()).min(crate::linalg::next_pow2(prob.n()));
+                let mut rng = crate::rng::Rng::seed_from(seed);
+                let sk = kind.sample(m, prob.n(), &mut rng);
+                let t0 = std::time::Instant::now();
+                let pre = SketchedPreconditioner::from_sketch(prob, &sk).expect("SPD");
+                let mut rep = crate::solvers::Pcg::solve_fixed(
+                    prob,
+                    &pre,
+                    StopRule { max_iters: t_max, tol },
+                    Some(&x_star),
+                );
+                rep.secs = t0.elapsed().as_secs_f64(); // include sketch+factor
+                rep.method = spec.label();
+                rep
+            }
+            MethodSpec::AdaptivePcg { kind } => {
+                let cfg = AdaptiveConfig { sketch: *kind, seed, tol, ..Default::default() };
+                AdaptivePcg::with_config(cfg).solve_traced(prob, t_max, Some(&x_star))
+            }
+            MethodSpec::AdaptiveIhs { kind } => {
+                let cfg = AdaptiveConfig { sketch: *kind, seed, tol, ..Default::default() };
+                AdaptiveIhs::with_config(cfg).solve_traced(prob, t_max * 2, Some(&x_star))
+            }
+            MethodSpec::AdaptivePolyak { kind } => {
+                let cfg = AdaptiveConfig { sketch: *kind, seed, tol, ..Default::default() };
+                AdaptivePolyak::with_config(cfg).solve_traced(prob, t_max * 2, Some(&x_star))
+            }
+        };
+        out.push((spec.label(), rep));
+    }
+    out
+}
+
+/// Write the three per-panel CSVs the paper's figure columns plot:
+/// error-vs-iteration, error-vs-time, sketch-size-vs-iteration.
+pub fn write_panel_csvs(
+    dir: &str,
+    panel: &str,
+    results: &[(String, SolveReport)],
+) -> std::io::Result<()> {
+    let mut err_iter = Csv::new(&["method", "t", "delta_rel"]);
+    let mut err_time = Csv::new(&["method", "secs", "delta_rel"]);
+    let mut m_iter = Csv::new(&["method", "t", "m"]);
+    for (label, rep) in results {
+        for r in &rep.trace {
+            err_iter.row(&[label.clone(), r.t.to_string(), format!("{:e}", r.delta_rel)]);
+            err_time.row(&[label.clone(), format!("{}", r.secs), format!("{:e}", r.delta_rel)]);
+            m_iter.row(&[label.clone(), r.t.to_string(), r.m.to_string()]);
+        }
+    }
+    err_iter.save(&format!("{dir}/{panel}_err_vs_iter.csv"))?;
+    err_time.save(&format!("{dir}/{panel}_err_vs_time.csv"))?;
+    m_iter.save(&format!("{dir}/{panel}_m_vs_iter.csv"))?;
+    Ok(())
+}
+
+/// Markdown summary row set for a panel.
+pub fn panel_summary(results: &[(String, SolveReport)]) -> MarkdownTable {
+    let mut t = MarkdownTable::new(&["method", "iters", "final m", "time(s)", "delta_T/delta_0"]);
+    for (label, rep) in results {
+        t.row(vec![
+            label.clone(),
+            rep.iterations.to_string(),
+            if rep.final_m == 0 { "-".into() } else { rep.final_m.to_string() },
+            format!("{:.3}", rep.secs),
+            fmt_sci(rep.final_error_rel()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn roster_runs_and_everyone_converges() {
+        let ds = SyntheticSpec::paper_profile(512, 64).build(3);
+        let prob = ds.problem(1e-1);
+        let results = run_panel(&prob, &paper_roster(), 40, 1e-10, 1);
+        assert_eq!(results.len(), 7);
+        for (label, rep) in &results {
+            if label == "direct" {
+                continue;
+            }
+            assert!(
+                rep.final_error_rel() < 1e-6,
+                "{label}: rel {}",
+                rep.final_error_rel()
+            );
+        }
+    }
+
+    #[test]
+    fn panel_csvs_written(){
+        let dir = std::env::temp_dir().join("sketchsolve_panel_test");
+        let ds = SyntheticSpec::paper_profile(256, 32).build(5);
+        let prob = ds.problem(1e-1);
+        let results = run_panel(&prob, &[MethodSpec::Cg], 20, 1e-8, 1);
+        write_panel_csvs(dir.to_str().unwrap(), "t", &results).unwrap();
+        for f in ["t_err_vs_iter.csv", "t_err_vs_time.csv", "t_m_vs_iter.csv"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Benchmark harness: timing with warmup/repeats, CSV + markdown table
+//! emission, and the shared figure/table runners behind `benches/` and the
+//! `sketchsolve bench` subcommand. (criterion is unavailable offline; this
+//! carries the subset the experiment suite needs.)
+
+pub mod figures;
+pub mod report;
+pub mod runner;
+pub mod scale;
+
+pub use report::{Csv, MarkdownTable};
+pub use runner::{bench_median, BenchStats};

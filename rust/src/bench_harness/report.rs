@@ -1,0 +1,142 @@
+//! CSV and markdown emitters for experiment outputs.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// A CSV writer accumulating rows in memory.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, values: &[String]) {
+        assert_eq!(values.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(values.to_vec());
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = Path::new(path).parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Markdown table builder for EXPERIMENTS.md-style reporting.
+#[derive(Debug, Default, Clone)]
+pub struct MarkdownTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MarkdownTable {
+    pub fn new(header: &[&str]) -> MarkdownTable {
+        MarkdownTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, values: Vec<String>) {
+        assert_eq!(values.len(), self.header.len());
+        self.rows.push(values);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+}
+
+/// Format seconds adaptively (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Format a float in short scientific notation.
+pub fn fmt_sci(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 0.01 && v.abs() < 1000.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Csv::new(&["t", "err"]);
+        c.rowf(&[1.0, 0.5]);
+        c.rowf(&[2.0, 0.25]);
+        let s = c.to_string();
+        assert!(s.starts_with("t,err\n1,0.5\n2,0.25\n"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn csv_arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into()]);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = MarkdownTable::new(&["method", "time"]);
+        t.row(vec!["pcg".into(), "1.0s".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| method | time |"));
+        assert!(s.contains("|---|---|"));
+        assert!(s.contains("| pcg | 1.0s |"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(0.5e-4), "50.0µs");
+        assert_eq!(fmt_secs(0.05), "50.00ms");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_sci(0.0), "0");
+    }
+}

@@ -1,0 +1,73 @@
+//! Micro-bench runner: warmup + repeated timing with median/min reporting.
+
+use std::time::Instant;
+
+/// Timing statistics over repeats.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub repeats: usize,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, units: f64) -> f64 {
+        units / self.median_s
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} median {:>10.6}s  min {:>10.6}s  mean {:>10.6}s  (n={})",
+            self.name, self.median_s, self.min_s, self.mean_s, self.repeats
+        )
+    }
+}
+
+/// Run `f` with `warmup` throwaway calls then `repeats` timed calls.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench_median<T>(name: &str, warmup: usize, repeats: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(repeats);
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_s = times[times.len() / 2];
+    let min_s = times[0];
+    let max_s = *times.last().unwrap();
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats { name: name.to_string(), repeats: times.len(), median_s, min_s, max_s, mean_s }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench_median("noop", 1, 9, || 42u64);
+        assert!(s.min_s <= s.median_s);
+        assert!(s.median_s <= s.max_s);
+        assert_eq!(s.repeats, 9);
+    }
+
+    #[test]
+    fn measures_work() {
+        let fast = bench_median("fast", 0, 5, || (0..10u64).sum::<u64>());
+        let slow = bench_median("slow", 0, 5, || (0..2_000_000u64).sum::<u64>());
+        assert!(slow.median_s > fast.median_s);
+    }
+}

@@ -1,0 +1,66 @@
+//! Experiment scaling: paper dimensions vs. the 1-CPU testbed defaults.
+//!
+//! The paper ran on a 64-CPU / 3 TB node; this image has 1 CPU / 35 GB.
+//! Every figure bench accepts `--paper-scale` for the original dimensions
+//! and otherwise runs the scaled defaults below, which preserve the
+//! spectral-decay profile (and hence the `d_e/d` ratios) of each figure.
+
+/// Scaled and paper-scale dimensions for the synthetic figures.
+#[derive(Clone, Copy, Debug)]
+pub struct FigDims {
+    pub fig: usize,
+    pub n: usize,
+    pub d: usize,
+    /// Regularization sweep for this figure.
+    pub nus: &'static [f64],
+}
+
+/// Paper dimensions of Figures 1–3.
+pub const PAPER_FIGS: [FigDims; 3] = [
+    FigDims { fig: 1, n: 16_384, d: 7_000, nus: &[1e-1, 1e-2, 1e-3, 1e-4] },
+    FigDims { fig: 2, n: 131_072, d: 7_000, nus: &[1e-1, 1e-2, 1e-3, 1e-4] },
+    FigDims { fig: 3, n: 524_288, d: 14_000, nus: &[1e-2, 1e-3, 1e-4] },
+];
+
+/// Testbed-scaled dimensions (n stays a power of two so the synthetic
+/// builder's Hadamard factorization is exact).
+pub const SCALED_FIGS: [FigDims; 3] = [
+    FigDims { fig: 1, n: 4_096, d: 768, nus: &[1e-1, 1e-2, 1e-3, 1e-4] },
+    FigDims { fig: 2, n: 16_384, d: 768, nus: &[1e-1, 1e-2, 1e-3, 1e-4] },
+    FigDims { fig: 3, n: 32_768, d: 1_024, nus: &[1e-2, 1e-3, 1e-4] },
+];
+
+/// Resolve figure dims for a scale mode.
+pub fn fig_dims(fig: usize, paper_scale: bool) -> Option<FigDims> {
+    let table = if paper_scale { &PAPER_FIGS } else { &SCALED_FIGS };
+    table.iter().copied().find(|f| f.fig == fig)
+}
+
+/// Default proxy-dataset downscale divisor for the real-data figures.
+pub const PROXY_SCALE_DEFAULT: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_figs_are_powers_of_two() {
+        for f in SCALED_FIGS {
+            assert!(f.n.is_power_of_two(), "fig {} n={}", f.fig, f.n);
+            assert!(f.d < f.n);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(fig_dims(1, true).unwrap().n, 16_384);
+        assert_eq!(fig_dims(3, false).unwrap().d, 1_024);
+        assert!(fig_dims(9, false).is_none());
+    }
+
+    #[test]
+    fn nu_sweeps_match_paper() {
+        assert_eq!(fig_dims(1, true).unwrap().nus.len(), 4);
+        assert_eq!(fig_dims(3, true).unwrap().nus.len(), 3);
+    }
+}

@@ -1,0 +1,215 @@
+//! Configuration system: a TOML-subset parser + typed experiment configs.
+//!
+//! Supports the subset the launcher uses: `[section]` headers,
+//! `key = value` with string / number / bool / inline arrays, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A parsed config: section -> key -> raw value string.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// Config value types.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value, String> {
+        let raw = raw.trim();
+        if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+            return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+        }
+        if raw == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if raw.starts_with('[') && raw.ends_with(']') {
+            let inner = &raw[1..raw.len() - 1];
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in split_top_level(inner) {
+                    items.push(Value::parse(&part)?);
+                }
+            }
+            return Ok(Value::Arr(items));
+        }
+        raw.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| format!("cannot parse value: {raw:?}"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Arr(a) => a.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Split "1, 2, [3, 4]" at top-level commas.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = match line.find('#') {
+                // only strip comments outside quotes (simple heuristic:
+                // quote-free prefix)
+                Some(pos) if !line[..pos].contains('"') || line[..pos].matches('"').count() % 2 == 0 => &line[..pos],
+                _ => line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = Value::parse(v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.sections.entry(section.clone()).or_default().insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[solver]
+rho = 0.125
+sketch = "sjlt"
+m_init = 1
+adaptive = true
+
+[experiment]
+nus = [0.1, 0.01, 0.001]
+name = "fig1"  # inline comment
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get_f64("solver", "rho", 0.0), 0.125);
+        assert_eq!(cfg.get_str("solver", "sketch", ""), "sjlt");
+        assert_eq!(cfg.get_usize("solver", "m_init", 0), 1);
+        assert!(cfg.get_bool("solver", "adaptive", false));
+        assert_eq!(cfg.get_str("experiment", "name", ""), "fig1");
+        let nus = cfg.get("experiment", "nus").unwrap().as_f64_vec().unwrap();
+        assert_eq!(nus, vec![0.1, 0.01, 0.001]);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_f64("x", "y", 7.0), 7.0);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("k = @@@").is_err());
+    }
+}

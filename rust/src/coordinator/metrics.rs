@@ -1,0 +1,108 @@
+//! Service metrics: lock-free counters + trace export.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregate counters for a running service. All methods are thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    iterations: AtomicU64,
+    sketch_doublings: AtomicU64,
+    /// Nanoseconds accumulated per phase.
+    ns_solve: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn job_submitted(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_completed(&self, iterations: usize, doublings: usize, secs: f64) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.iterations.fetch_add(iterations as u64, Ordering::Relaxed);
+        self.sketch_doublings.fetch_add(doublings as u64, Ordering::Relaxed);
+        self.ns_solve.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn job_failed(&self) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (submitted, completed, failed).
+    pub fn job_counts(&self) -> (u64, u64, u64) {
+        (
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn total_iterations(&self) -> u64 {
+        self.iterations.load(Ordering::Relaxed)
+    }
+
+    pub fn total_doublings(&self) -> u64 {
+        self.sketch_doublings.load(Ordering::Relaxed)
+    }
+
+    pub fn solve_seconds(&self) -> f64 {
+        self.ns_solve.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let (s, c, f) = self.job_counts();
+        format!(
+            "jobs {s} submitted / {c} done / {f} failed; {} iters, {} doublings, {:.3}s solving",
+            self.total_iterations(),
+            self.total_doublings(),
+            self.solve_seconds()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.job_submitted();
+        m.job_submitted();
+        m.job_completed(10, 3, 0.5);
+        m.job_failed();
+        assert_eq!(m.job_counts(), (2, 1, 1));
+        assert_eq!(m.total_iterations(), 10);
+        assert_eq!(m.total_doublings(), 3);
+        assert!((m.solve_seconds() - 0.5).abs() < 1e-6);
+        assert!(m.summary().contains("2 submitted"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    m.job_submitted();
+                    m.job_completed(1, 0, 0.001);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.job_counts().0, 400);
+        assert_eq!(m.total_iterations(), 400);
+    }
+}

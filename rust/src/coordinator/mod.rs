@@ -1,0 +1,23 @@
+//! L3 coordinator: the solve-as-a-service layer.
+//!
+//! A deployment of this library is a long-lived process receiving solve
+//! requests (ridge problems over registered datasets, possibly multi-class
+//! = multi-RHS). The coordinator owns:
+//! - [`service::SolveService`] — worker threads + job queue (tokio is
+//!   unavailable offline; the workload is CPU-bound dense algebra, so a
+//!   thread pool is the right runtime anyway),
+//! - [`batcher`] — multi-RHS batching: all class columns share sketching
+//!   and factorization work (the paper's hot-encoded multiclass setting),
+//! - [`router`] — solver selection policy (direct / CG / PCG-2d /
+//!   adaptive) from cheap problem statistics,
+//! - [`metrics`] — counters + per-iteration traces for the figures.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use batcher::MultiRhsSolver;
+pub use metrics::Metrics;
+pub use router::{route, Route, RouterPolicy};
+pub use service::{JobSpec, JobStatus, SolveService};

@@ -1,0 +1,126 @@
+//! Solver routing: pick the right method for a problem from cheap
+//! statistics, mirroring the decision table of the paper's experiments.
+//!
+//! - tiny problems → direct factorization (no sketching overhead can win);
+//! - well-conditioned problems (large ν relative to the top singular
+//!   value) → plain CG;
+//! - otherwise → adaptive PCG, the paper's headline method; a fixed
+//!   `m = 2d` PCG route is available for oblivious deployments.
+
+use crate::problem::Problem;
+use crate::sketch::SketchKind;
+
+/// Routing decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Route {
+    Direct,
+    Cg { max_iters: usize },
+    PcgFixed { m: usize, sketch: SketchKind },
+    AdaptivePcg { sketch: SketchKind },
+}
+
+/// Tunable routing thresholds.
+#[derive(Debug, Clone)]
+pub struct RouterPolicy {
+    /// Below this d, direct solve wins outright.
+    pub direct_d_max: usize,
+    /// Below this n*d (flop proxy), direct solve wins.
+    pub direct_nd_max: usize,
+    /// Condition-number proxy above which CG is hopeless.
+    pub cg_cond_max: f64,
+    /// Sketch family for the sketched routes.
+    pub sketch: SketchKind,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> Self {
+        RouterPolicy {
+            direct_d_max: 64,
+            direct_nd_max: 1 << 16,
+            cg_cond_max: 1e4,
+            sketch: SketchKind::Sjlt { s: 1 },
+        }
+    }
+}
+
+/// Cheap condition proxy: `(σ̂_max² + ν²)/ν²` with `σ̂_max` estimated by a
+/// few power iterations on `A^T A` (O(nd) each).
+pub fn condition_proxy(prob: &Problem, iters: usize) -> f64 {
+    let mut rng = crate::rng::Rng::seed_from(0x5EED);
+    let n = prob.n();
+    let d = prob.d();
+    let mut work = vec![0.0; n];
+    let (smax2, _) = crate::linalg::eig::power_iteration(
+        d,
+        |v, out| {
+            crate::linalg::matvec_into(&prob.a, v, &mut work);
+            crate::linalg::matvec_t_into(&prob.a, &work, out);
+        },
+        iters,
+        &mut rng,
+    );
+    let nu2 = prob.nu * prob.nu;
+    (smax2.max(0.0) + nu2) / nu2
+}
+
+/// Route a problem.
+pub fn route(prob: &Problem, policy: &RouterPolicy) -> Route {
+    let n = prob.n();
+    let d = prob.d();
+    if d <= policy.direct_d_max || n * d <= policy.direct_nd_max {
+        return Route::Direct;
+    }
+    let cond = condition_proxy(prob, 12);
+    if cond <= policy.cg_cond_max {
+        // CG iterations ~ sqrt(cond) * log(1/eps)
+        let iters = (cond.sqrt() * 30.0).ceil() as usize;
+        return Route::Cg { max_iters: iters.clamp(16, 4 * d) };
+    }
+    Route::AdaptivePcg { sketch: policy.sketch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn gauss_problem(n: usize, d: usize, nu: f64, seed: u64) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = rng.gaussian_vec(d);
+        Problem::ridge(a, b, nu)
+    }
+
+    #[test]
+    fn tiny_problem_goes_direct() {
+        let p = gauss_problem(100, 10, 0.1, 1);
+        assert_eq!(route(&p, &RouterPolicy::default()), Route::Direct);
+    }
+
+    #[test]
+    fn well_conditioned_goes_cg() {
+        // nu large → condition proxy small
+        let p = gauss_problem(1024, 128, 50.0, 2);
+        let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
+        assert!(matches!(route(&p, &policy), Route::Cg { .. }));
+    }
+
+    #[test]
+    fn ill_conditioned_goes_adaptive() {
+        let mut a = Matrix::zeros(1024, 128);
+        for j in 0..128 {
+            a.set(j, j, 0.9f64.powi(j as i32));
+        }
+        let p = Problem::ridge(a, vec![1.0; 128], 1e-6);
+        let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
+        assert!(matches!(route(&p, &policy), Route::AdaptivePcg { .. }));
+    }
+
+    #[test]
+    fn condition_proxy_tracks_nu() {
+        let p_hi = gauss_problem(256, 32, 1e-3, 3);
+        let p_lo = gauss_problem(256, 32, 10.0, 3);
+        assert!(condition_proxy(&p_hi, 20) > condition_proxy(&p_lo, 20));
+    }
+}

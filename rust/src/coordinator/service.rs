@@ -1,0 +1,238 @@
+//! The solve service: a worker pool draining a job queue.
+//!
+//! Jobs carry a problem handle plus a routing override; workers route,
+//! solve and publish results. The pool is std::thread based (tokio is
+//! unavailable offline and the work is CPU-bound); the queue is an
+//! mpsc channel behind a mutex'd receiver (fan-out).
+
+use crate::adaptive::{AdaptiveConfig, AdaptivePcg};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{route, Route, RouterPolicy};
+use crate::problem::Problem;
+use crate::sketch::SketchKind;
+use crate::solvers::{ConjugateGradient, DirectSolver, Pcg, SolveReport, StopRule};
+use crate::precond::SketchedPreconditioner;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A solve request.
+#[derive(Clone)]
+pub struct JobSpec {
+    pub id: u64,
+    pub problem: Arc<Problem>,
+    /// None = let the router decide.
+    pub route_override: Option<Route>,
+    pub t_max: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+/// Job lifecycle states.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}
+
+/// Completed job output.
+pub struct JobResult {
+    pub id: u64,
+    pub report: Result<SolveReport, String>,
+}
+
+/// The service handle.
+pub struct SolveService {
+    tx: Option<mpsc::Sender<JobSpec>>,
+    results_rx: mpsc::Receiver<JobResult>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    status: Arc<Mutex<HashMap<u64, JobStatus>>>,
+}
+
+impl SolveService {
+    /// Start a service with `workers` threads and a routing policy.
+    pub fn start(workers: usize, policy: RouterPolicy) -> SolveService {
+        let (tx, rx) = mpsc::channel::<JobSpec>();
+        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let status: Arc<Mutex<HashMap<u64, JobStatus>>> = Arc::new(Mutex::new(HashMap::new()));
+
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let rx = rx.clone();
+            let results_tx = results_tx.clone();
+            let metrics = metrics.clone();
+            let status = status.clone();
+            let policy = policy.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let job = match job {
+                    Ok(j) => j,
+                    Err(_) => break, // channel closed: shut down
+                };
+                status.lock().unwrap().insert(job.id, JobStatus::Running);
+                let outcome = run_job(&job, &policy);
+                match &outcome {
+                    Ok(rep) => {
+                        metrics.job_completed(rep.iterations, rep.sketch_doublings, rep.secs);
+                        status.lock().unwrap().insert(job.id, JobStatus::Done);
+                    }
+                    Err(e) => {
+                        metrics.job_failed();
+                        status.lock().unwrap().insert(job.id, JobStatus::Failed(e.clone()));
+                    }
+                }
+                let _ = results_tx.send(JobResult { id: job.id, report: outcome });
+            }));
+        }
+
+        SolveService { tx: Some(tx), results_rx, workers: handles, metrics, status }
+    }
+
+    /// Submit a job (non-blocking).
+    pub fn submit(&self, job: JobSpec) {
+        self.status.lock().unwrap().insert(job.id, JobStatus::Queued);
+        self.metrics.job_submitted();
+        self.tx.as_ref().expect("service stopped").send(job).expect("workers alive");
+    }
+
+    /// Status of a job id (None if unknown).
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.status.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block for the next finished job.
+    pub fn next_result(&self) -> Option<JobResult> {
+        self.results_rx.recv().ok()
+    }
+
+    /// Close the queue and join workers; returns remaining results.
+    pub fn shutdown(mut self) -> Vec<JobResult> {
+        drop(self.tx.take()); // closes the channel -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut out = Vec::new();
+        while let Ok(r) = self.results_rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+fn run_job(job: &JobSpec, policy: &RouterPolicy) -> Result<SolveReport, String> {
+    let decided = job.route_override.clone().unwrap_or_else(|| route(&job.problem, policy));
+    let stop = StopRule { max_iters: job.t_max, tol: job.tol };
+    match decided {
+        Route::Direct => DirectSolver::solve(&job.problem).map_err(|e| e.to_string()),
+        Route::Cg { max_iters } => Ok(ConjugateGradient::solve(
+            &job.problem,
+            StopRule { max_iters: max_iters.min(job.t_max.max(1)), tol: job.tol },
+            None,
+        )),
+        Route::PcgFixed { m, sketch } => {
+            let mut rng = crate::rng::Rng::seed_from(job.seed);
+            let sk = sketch.sample(m.min(crate::linalg::next_pow2(job.problem.n())), job.problem.n(), &mut rng);
+            let pre = SketchedPreconditioner::from_sketch(&job.problem, &sk).map_err(|e| e.to_string())?;
+            Ok(Pcg::solve_fixed(&job.problem, &pre, stop, None))
+        }
+        Route::AdaptivePcg { sketch } => {
+            let cfg = AdaptiveConfig {
+                sketch,
+                seed: job.seed,
+                tol: job.tol,
+                ..Default::default()
+            };
+            Ok(AdaptivePcg::with_config(cfg).solve(&job.problem, job.t_max))
+        }
+    }
+}
+
+/// Convenience for a default fixed-PCG route at m = 2d (the paper's
+/// oblivious baseline).
+pub fn pcg_2d_route(d: usize, sketch: SketchKind) -> Route {
+    Route::PcgFixed { m: 2 * d, sketch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn toy_problem(seed: u64) -> Arc<Problem> {
+        let mut rng = Rng::seed_from(seed);
+        let (n, d) = (96, 16);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = rng.gaussian_vec(d);
+        Arc::new(Problem::ridge(a, b, 0.5))
+    }
+
+    #[test]
+    fn jobs_complete_and_metrics_track() {
+        let svc = SolveService::start(2, RouterPolicy::default());
+        for id in 0..6u64 {
+            svc.submit(JobSpec {
+                id,
+                problem: toy_problem(id),
+                route_override: None,
+                t_max: 50,
+                tol: 1e-10,
+                seed: id,
+            });
+        }
+        let mut done = 0;
+        while done < 6 {
+            let r = svc.next_result().expect("result");
+            assert!(r.report.is_ok(), "job {} failed: {:?}", r.id, r.report.as_ref().err());
+            assert_eq!(svc.status(r.id), Some(JobStatus::Done));
+            done += 1;
+        }
+        let (s, c, f) = svc.metrics.job_counts();
+        assert_eq!((s, c, f), (6, 6, 0));
+        let leftover = svc.shutdown();
+        assert!(leftover.is_empty());
+    }
+
+    #[test]
+    fn route_override_respected() {
+        let svc = SolveService::start(1, RouterPolicy::default());
+        svc.submit(JobSpec {
+            id: 1,
+            problem: toy_problem(9),
+            route_override: Some(Route::Cg { max_iters: 40 }),
+            t_max: 40,
+            tol: 1e-8,
+            seed: 1,
+        });
+        let r = svc.next_result().unwrap();
+        assert_eq!(r.report.unwrap().method, "cg");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn adaptive_route_works_through_service() {
+        let svc = SolveService::start(1, RouterPolicy::default());
+        svc.submit(JobSpec {
+            id: 2,
+            problem: toy_problem(11),
+            route_override: Some(Route::AdaptivePcg { sketch: SketchKind::Sjlt { s: 1 } }),
+            t_max: 40,
+            tol: 1e-10,
+            seed: 2,
+        });
+        let r = svc.next_result().unwrap();
+        let rep = r.report.unwrap();
+        assert!(rep.method.starts_with("adaptive_pcg"));
+        assert!(rep.final_residual_decrement() < 1e-9);
+        svc.shutdown();
+    }
+}

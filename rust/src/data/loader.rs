@@ -1,0 +1,202 @@
+//! Dataset loading from disk: numeric CSV (features + optional label
+//! column), the escape hatch for running the solvers on *actual* OpenML
+//! downloads when network access exists (the proxies in `proxies.rs` are
+//! the offline default).
+
+use crate::linalg::Matrix;
+use std::io::BufRead;
+
+/// A loaded tabular dataset.
+pub struct LoadedDataset {
+    /// n x d features.
+    pub a: Matrix,
+    /// Labels (length n) if a label column was designated.
+    pub labels: Option<Vec<f64>>,
+}
+
+/// Loader errors.
+#[derive(Debug)]
+pub enum LoadError {
+    Io(std::io::Error),
+    Parse { line: usize, msg: String },
+    Inconsistent { line: usize, expected: usize, got: usize },
+    Empty,
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Io(e) => write!(f, "io: {e}"),
+            LoadError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            LoadError::Inconsistent { line, expected, got } => {
+                write!(f, "line {line}: expected {expected} fields, got {got}")
+            }
+            LoadError::Empty => write!(f, "no data rows"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+impl From<std::io::Error> for LoadError {
+    fn from(e: std::io::Error) -> Self {
+        LoadError::Io(e)
+    }
+}
+
+/// Parse CSV text. `label_col`: index of the label column (None = all
+/// columns are features). A non-numeric first row is treated as a header
+/// and skipped.
+pub fn parse_csv(text: &str, label_col: Option<usize>) -> Result<LoadedDataset, LoadError> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        let parsed: Result<Vec<f64>, _> = fields.iter().map(|s| s.parse::<f64>()).collect();
+        let vals = match parsed {
+            Ok(v) => v,
+            Err(e) => {
+                if rows.is_empty() && width.is_none() {
+                    continue; // header row
+                }
+                return Err(LoadError::Parse { line: lineno + 1, msg: e.to_string() });
+            }
+        };
+        if let Some(w) = width {
+            if vals.len() != w {
+                return Err(LoadError::Inconsistent { line: lineno + 1, expected: w, got: vals.len() });
+            }
+        } else {
+            width = Some(vals.len());
+        }
+        match label_col {
+            Some(lc) => {
+                let mut v = vals;
+                if lc >= v.len() {
+                    return Err(LoadError::Parse { line: lineno + 1, msg: format!("label col {lc} out of range") });
+                }
+                labels.push(v.remove(lc));
+                rows.push(v);
+            }
+            None => rows.push(vals),
+        }
+    }
+    if rows.is_empty() {
+        return Err(LoadError::Empty);
+    }
+    let n = rows.len();
+    let d = rows[0].len();
+    let mut a = Matrix::zeros(n, d);
+    for (i, r) in rows.into_iter().enumerate() {
+        a.row_mut(i).copy_from_slice(&r);
+    }
+    Ok(LoadedDataset { a, labels: label_col.map(|_| labels) })
+}
+
+/// Load a CSV file from disk.
+pub fn load_csv(path: &str, label_col: Option<usize>) -> Result<LoadedDataset, LoadError> {
+    let file = std::fs::File::open(path)?;
+    let mut text = String::new();
+    let mut reader = std::io::BufReader::new(file);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        text.push_str(&line);
+    }
+    parse_csv(&text, label_col)
+}
+
+/// Standardize features in place: zero mean, unit variance per column
+/// (constant columns are left centered).
+pub fn standardize(a: &mut Matrix) {
+    let n = a.rows as f64;
+    for j in 0..a.cols {
+        let mut mean = 0.0;
+        for i in 0..a.rows {
+            mean += a.at(i, j);
+        }
+        mean /= n;
+        let mut var = 0.0;
+        for i in 0..a.rows {
+            let v = a.at(i, j) - mean;
+            var += v * v;
+        }
+        var /= n;
+        let scale = if var > 1e-24 { 1.0 / var.sqrt() } else { 1.0 };
+        for i in 0..a.rows {
+            let v = (a.at(i, j) - mean) * scale;
+            a.set(i, j, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+f1,f2,label
+1.0, 2.0, 0
+3.0, 4.0, 1
+5.0, 6.0, 0
+";
+
+    #[test]
+    fn parses_with_header_and_label() {
+        let ds = parse_csv(SAMPLE, Some(2)).unwrap();
+        assert_eq!(ds.a.rows, 3);
+        assert_eq!(ds.a.cols, 2);
+        assert_eq!(ds.labels.as_ref().unwrap(), &vec![0.0, 1.0, 0.0]);
+        assert_eq!(ds.a.at(1, 1), 4.0);
+    }
+
+    #[test]
+    fn parses_without_label() {
+        let ds = parse_csv("1,2\n3,4\n", None).unwrap();
+        assert!(ds.labels.is_none());
+        assert_eq!(ds.a.at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(matches!(
+            parse_csv("1,2\n3\n", None),
+            Err(LoadError::Inconsistent { line: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(matches!(parse_csv("# only comments\n", None), Err(LoadError::Empty)));
+    }
+
+    #[test]
+    fn standardize_moments() {
+        let mut a = Matrix::from_vec(4, 2, vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        standardize(&mut a);
+        for j in 0..2 {
+            let col = a.col(j);
+            let mean: f64 = col.iter().sum::<f64>() / 4.0;
+            let var: f64 = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn loads_into_solver_pipeline() {
+        let ds = parse_csv(SAMPLE, Some(2)).unwrap();
+        let mut a = ds.a;
+        standardize(&mut a);
+        let prob = crate::problem::Problem::ridge_from_labels(a, &ds.labels.unwrap(), 1.0);
+        let rep = crate::solvers::DirectSolver::solve(&prob).unwrap();
+        assert!(rep.x.iter().all(|v| v.is_finite()));
+    }
+}

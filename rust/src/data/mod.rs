@@ -1,0 +1,10 @@
+//! Dataset layer: synthetic spectra (Figures 1–3), real-dataset proxies
+//! (Figures 4–9) and the random-features map used by the WESAD pipeline.
+
+pub mod loader;
+pub mod proxies;
+pub mod random_features;
+pub mod synthetic;
+
+pub use proxies::{proxy_spec, ProxyName};
+pub use synthetic::{Dataset, SyntheticSpec};

@@ -1,0 +1,254 @@
+//! Proxies for the paper's real OpenML datasets (Figures 4–9).
+//!
+//! This image has no network access, so each dataset is replaced by a
+//! synthetic matrix with the same `(n, d, c)` and a spectral profile chosen
+//! to mimic the original's conditioning (power-law bulk + low-rank head —
+//! the empirical shape of image/tabular Gram spectra). The solvers interact
+//! with `A` only through its spectrum (via `C_S` and `d_e`), so matching
+//! the profile preserves convergence and adaptivity behaviour; see
+//! DESIGN.md §5 for the substitution argument.
+
+use super::synthetic::{Dataset, Spectrum, SyntheticSpec};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// The six real datasets of the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProxyName {
+    Cifar100,
+    Svhn,
+    Dilbert,
+    Guillermo,
+    OvaLung,
+    Wesad,
+}
+
+impl ProxyName {
+    pub fn parse(s: &str) -> Option<ProxyName> {
+        match s.to_ascii_lowercase().as_str() {
+            "cifar100" | "cifar-100" => Some(ProxyName::Cifar100),
+            "svhn" => Some(ProxyName::Svhn),
+            "dilbert" => Some(ProxyName::Dilbert),
+            "guillermo" => Some(ProxyName::Guillermo),
+            "ova_lung" | "ovalung" | "ova-lung" => Some(ProxyName::OvaLung),
+            "wesad" => Some(ProxyName::Wesad),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProxyName::Cifar100 => "cifar100",
+            ProxyName::Svhn => "svhn",
+            ProxyName::Dilbert => "dilbert",
+            ProxyName::Guillermo => "guillermo",
+            ProxyName::OvaLung => "ova_lung",
+            ProxyName::Wesad => "wesad",
+        }
+    }
+
+    pub fn all() -> [ProxyName; 6] {
+        [
+            ProxyName::Cifar100,
+            ProxyName::Svhn,
+            ProxyName::Dilbert,
+            ProxyName::Guillermo,
+            ProxyName::OvaLung,
+            ProxyName::Wesad,
+        ]
+    }
+}
+
+/// Paper-reported dimensions and a spectral profile per dataset.
+#[derive(Clone, Debug)]
+pub struct ProxySpec {
+    pub name: ProxyName,
+    /// Paper dimensions.
+    pub n_full: usize,
+    pub d_full: usize,
+    /// Number of classes (RHS columns after one-hot encoding).
+    pub classes: usize,
+    /// Power-law exponent for the spectral bulk `σ_j ∝ (j+1)^{-p}`.
+    pub power: f64,
+    /// Fraction of energy in a fast-decaying low-rank head.
+    pub head_rank_frac: f64,
+}
+
+/// Paper dimensions + profile for each dataset. Power-law exponents are
+/// chosen to mirror the qualitative conditioning the paper reports (image
+/// data: heavy head + fast decay; RFF features: very fast decay).
+pub fn proxy_spec(name: ProxyName) -> ProxySpec {
+    match name {
+        ProxyName::Cifar100 => ProxySpec { name, n_full: 60_000, d_full: 3_073, classes: 100, power: 1.1, head_rank_frac: 0.02 },
+        ProxyName::Svhn => ProxySpec { name, n_full: 99_289, d_full: 3_073, classes: 10, power: 1.2, head_rank_frac: 0.02 },
+        ProxyName::Dilbert => ProxySpec { name, n_full: 10_000, d_full: 2_001, classes: 5, power: 0.9, head_rank_frac: 0.05 },
+        ProxyName::Guillermo => ProxySpec { name, n_full: 20_000, d_full: 4_297, classes: 2, power: 0.8, head_rank_frac: 0.05 },
+        // n < d in the paper: exercised through the dual/Woodbury path
+        ProxyName::OvaLung => ProxySpec { name, n_full: 1_545, d_full: 10_936, classes: 2, power: 0.7, head_rank_frac: 0.1 },
+        ProxyName::Wesad => ProxySpec { name, n_full: 250_000, d_full: 10_000, classes: 2, power: 1.5, head_rank_frac: 0.01 },
+    }
+}
+
+impl ProxySpec {
+    /// Scale (n, d) down by `1/scale` for the 1-CPU testbed, preserving the
+    /// n:d aspect ratio and the spectral profile. `scale = 1` is paper size.
+    pub fn scaled(&self, scale: usize) -> (usize, usize) {
+        let n = (self.n_full / scale).max(64);
+        let mut d = (self.d_full / scale).max(16);
+        if d > n {
+            // preserve the n < d character for OVA-Lung but keep it usable:
+            // the library dualizes; for the proxy we keep d > n mildly.
+            d = d.min(n * 8);
+        }
+        (n, d)
+    }
+
+    /// Singular-value profile at dimension d: low-rank head (fraction of
+    /// dims with slow decay) followed by a power-law bulk.
+    pub fn singular_values(&self, d: usize) -> Vec<f64> {
+        let head = ((d as f64 * self.head_rank_frac) as usize).max(1);
+        (0..d)
+            .map(|j| {
+                if j < head {
+                    // slowly decaying head, normalized to start at 1
+                    1.0 / (1.0 + j as f64 / head as f64)
+                } else {
+                    let jj = (j - head + 1) as f64;
+                    0.5 * jj.powf(-self.power)
+                }
+            })
+            .collect()
+    }
+
+    /// Realize the proxy: data matrix with this spectrum plus a one-hot
+    /// label matrix Y (n x classes) from a planted linear classifier.
+    pub fn build(&self, scale: usize, seed: u64) -> ProxyDataset {
+        let (n, d) = self.scaled(scale);
+        let min_nd = n.min(d);
+        let spec = SyntheticSpec {
+            n: n.max(d),
+            d: min_nd,
+            spectrum: Spectrum::Explicit(self.singular_values(min_nd)),
+            noise: 0.05,
+        };
+        // Build the (possibly transposed) factorized matrix then orient.
+        let ds = spec.build(seed);
+        let a = if d > n {
+            // tall build then transpose to get n x d with n < d
+            ds.a.transpose()
+        } else {
+            ds.a
+        };
+        let (n_eff, _d_eff) = (a.rows, a.cols);
+
+        // one-hot labels from a planted classifier over the data
+        let mut rng = Rng::seed_from(seed ^ 0xABCD);
+        let c = self.classes;
+        let w = Matrix::from_vec(a.cols, c, (0..a.cols * c).map(|_| rng.gaussian()).collect());
+        let scores = crate::linalg::matmul(&a, &w);
+        let mut y = Matrix::zeros(n_eff, c);
+        for i in 0..n_eff {
+            let row = scores.row(i);
+            let mut best = 0;
+            for k in 1..c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            y.set(i, best, 1.0);
+        }
+        ProxyDataset { spec: self.clone(), a, y, sigmas: ds.sigmas }
+    }
+}
+
+/// A realized proxy dataset with one-hot labels (multi-RHS problem).
+pub struct ProxyDataset {
+    pub spec: ProxySpec,
+    /// n x d data matrix.
+    pub a: Matrix,
+    /// n x c one-hot labels.
+    pub y: Matrix,
+    /// Singular values of the built matrix (length min(n,d)).
+    pub sigmas: Vec<f64>,
+}
+
+impl ProxyDataset {
+    /// Ridge problem for one class column.
+    pub fn problem_for_class(&self, class: usize, nu: f64) -> crate::problem::Problem {
+        let yk = self.y.col(class);
+        crate::problem::Problem::ridge_from_labels(self.a.clone(), &yk, nu)
+    }
+
+    /// The full multi-RHS linear term `B = A^T Y` (d x c).
+    pub fn b_matrix(&self) -> Matrix {
+        crate::linalg::matmul(&self.a.transpose(), &self.y)
+    }
+
+    /// Exact effective dimension at ν.
+    pub fn effective_dimension(&self, nu: f64) -> f64 {
+        crate::problem::Problem::effective_dimension_from_singular_values(&self.sigmas, nu)
+    }
+}
+
+/// Build a single-RHS `Dataset` view for APIs that want one (class 0).
+pub fn as_single_rhs(p: &ProxyDataset) -> Dataset {
+    let y0 = p.y.col(0);
+    let b = crate::linalg::matvec_t(&p.a, &y0);
+    Dataset { a: p.a.clone(), b, y: y0, sigmas: p.sigmas.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_specs_have_paper_dims() {
+        let s = proxy_spec(ProxyName::Cifar100);
+        assert_eq!((s.n_full, s.d_full, s.classes), (60_000, 3_073, 100));
+        let s = proxy_spec(ProxyName::OvaLung);
+        assert!(s.n_full < s.d_full, "OVA-Lung is underdetermined");
+        let s = proxy_spec(ProxyName::Wesad);
+        assert_eq!(s.d_full, 10_000);
+    }
+
+    #[test]
+    fn scaled_dims_reasonable() {
+        for name in ProxyName::all() {
+            let s = proxy_spec(name);
+            let (n, d) = s.scaled(32);
+            assert!(n >= 64 && d >= 16, "{name:?}: {n}x{d}");
+            assert!(n <= s.n_full && d <= s.d_full);
+        }
+    }
+
+    #[test]
+    fn build_produces_one_hot_labels() {
+        let s = proxy_spec(ProxyName::Dilbert);
+        let ds = s.build(64, 5);
+        let (n, c) = (ds.y.rows, ds.y.cols);
+        assert_eq!(c, 5);
+        for i in 0..n {
+            let row_sum: f64 = ds.y.row(i).iter().sum();
+            assert_eq!(row_sum, 1.0, "row {i} not one-hot");
+        }
+    }
+
+    #[test]
+    fn effective_dimension_sensible() {
+        let s = proxy_spec(ProxyName::Wesad);
+        let ds = s.build(256, 6);
+        let de_hi = ds.effective_dimension(1e-3);
+        let de_lo = ds.effective_dimension(1e-1);
+        assert!(de_lo < de_hi);
+        assert!(de_hi <= ds.sigmas.len() as f64);
+    }
+
+    #[test]
+    fn problem_for_class_solves() {
+        let s = proxy_spec(ProxyName::Guillermo);
+        let ds = s.build(128, 7);
+        let prob = ds.problem_for_class(0, 0.1);
+        let rep = crate::solvers::DirectSolver::solve(&prob).unwrap();
+        assert!(rep.x.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,116 @@
+//! Random Fourier features (RFF) map approximating the Gaussian kernel
+//! `exp(-γ ||x-x'||²)` — the WESAD pipeline of the paper (γ = 0.01,
+//! d = 10000 features on the E4-device windows).
+//!
+//! `z(x) = sqrt(2/D) * cos(W x + b)` with `W ~ N(0, 2γ)` rows and
+//! `b ~ U[0, 2π)` gives `E[z(x)^T z(x')] = exp(-γ||x-x'||²)`.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A sampled random-features map from `p` raw features to `d` components.
+pub struct RandomFeatures {
+    /// d x p frequency matrix.
+    w: Matrix,
+    /// Phase offsets, length d.
+    b: Vec<f64>,
+    scale: f64,
+}
+
+impl RandomFeatures {
+    /// Sample a map with kernel bandwidth γ.
+    pub fn sample(p: usize, d: usize, gamma: f64, rng: &mut Rng) -> RandomFeatures {
+        let sd = (2.0 * gamma).sqrt();
+        let w = Matrix::from_vec(d, p, (0..d * p).map(|_| sd * rng.gaussian()).collect());
+        let b = (0..d).map(|_| 2.0 * std::f64::consts::PI * rng.uniform()).collect();
+        RandomFeatures { w, b, scale: (2.0 / d as f64).sqrt() }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Map a raw data matrix (n x p) to features (n x d).
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.w.cols, "raw feature dim mismatch");
+        let n = x.rows;
+        let d = self.w.rows;
+        let mut out = Matrix::zeros(n, d);
+        for i in 0..n {
+            let xi = x.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..d {
+                let wj = self.w.row(j);
+                let dot = crate::linalg::dot(wj, xi);
+                orow[j] = self.scale * (dot + self.b[j]).cos();
+            }
+        }
+        out
+    }
+}
+
+/// Synthetic multichannel sensor windows standing in for the WESAD E4 data:
+/// per-window summary features of a few sinusoid+noise channels, n windows,
+/// 14 raw features (mirroring the 1-second-window wrangling the paper
+/// references).
+pub fn synthetic_sensor_windows(n: usize, rng: &mut Rng) -> Matrix {
+    let p = 14;
+    let mut x = Matrix::zeros(n, p);
+    for i in 0..n {
+        let t = i as f64 / 64.0;
+        // two latent physiological "states" modulating the channels
+        let state = if (i / 512) % 2 == 0 { 1.0 } else { 1.6 };
+        let row = x.row_mut(i);
+        for j in 0..p {
+            let freq = 0.1 + 0.07 * j as f64;
+            let base = state * (freq * t * 2.0 * std::f64::consts::PI).sin();
+            row[j] = base + 0.3 * rng.gaussian();
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_approximation() {
+        // z(x)^T z(x') should approximate exp(-gamma ||x - x'||^2)
+        let mut rng = Rng::seed_from(201);
+        let p = 6;
+        let gamma = 0.05;
+        let rf = RandomFeatures::sample(p, 4096, gamma, &mut rng);
+        let x = Matrix::from_vec(2, p, (0..2 * p).map(|_| rng.gaussian()).collect());
+        let z = rf.apply(&x);
+        let k_emp = crate::linalg::dot(z.row(0), z.row(1));
+        let dist2: f64 = (0..p).map(|j| (x.at(0, j) - x.at(1, j)).powi(2)).sum();
+        let k_true = (-gamma * dist2).exp();
+        assert!((k_emp - k_true).abs() < 0.06, "emp {k_emp} true {k_true}");
+    }
+
+    #[test]
+    fn self_kernel_near_one() {
+        let mut rng = Rng::seed_from(203);
+        let rf = RandomFeatures::sample(5, 2048, 0.01, &mut rng);
+        let x = Matrix::from_vec(1, 5, rng.gaussian_vec(5));
+        let z = rf.apply(&x);
+        let k = crate::linalg::dot(z.row(0), z.row(0));
+        assert!((k - 1.0).abs() < 0.1, "self kernel {k}");
+    }
+
+    #[test]
+    fn sensor_windows_shape_and_variation() {
+        let mut rng = Rng::seed_from(205);
+        let x = synthetic_sensor_windows(1024, &mut rng);
+        assert_eq!(x.rows, 1024);
+        assert_eq!(x.cols, 14);
+        // channels are not constant
+        for j in 0..14 {
+            let col = x.col(j);
+            let mean = col.iter().sum::<f64>() / 1024.0;
+            let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 1024.0;
+            assert!(var > 0.01, "channel {j} flat");
+        }
+    }
+}

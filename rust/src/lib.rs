@@ -1,0 +1,32 @@
+//! # sketchsolve
+//!
+//! A production-oriented reproduction of *"Fast Convex Quadratic
+//! Optimization Solvers with Adaptive Sketching-based Preconditioners"*
+//! (Lacotte & Pilanci, 2021).
+//!
+//! The library solves regularized least-squares programs
+//! `min_x 1/2 <x, Hx> - b^T x` with `H = A^T A + nu^2 * Lambda` using
+//! randomized preconditioned first-order methods whose sketch size adapts
+//! at runtime to the (unknown) effective dimension of the data.
+//!
+//! Architecture (see DESIGN.md):
+//! - **L3 (this crate)**: solver coordinator — adaptive controller,
+//!   request batching for multi-RHS (multiclass) problems, routing, metrics.
+//! - **L2/L1 (python/, build time only)**: JAX compute graphs + Pallas
+//!   kernels AOT-lowered to HLO text, executed from Rust via PJRT
+//!   (`runtime` module). Python is never on the request path.
+
+pub mod adaptive;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod precond;
+pub mod problem;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod solvers;
+pub mod testing;
+pub mod util;

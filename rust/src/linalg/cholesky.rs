@@ -1,0 +1,236 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! Used for (i) the direct baseline solver on `H`, (ii) factorizing the
+//! sketched preconditioner `H_S` when `m >= d`, and (iii) the Woodbury
+//! inner system `W_S` when `m < d` (see `precond`).
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor of a symmetric positive definite matrix.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    /// `n x n` lower-triangular factor L with `A = L L^T`.
+    pub l: Matrix,
+}
+
+/// Errors from the factorization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CholeskyError {
+    /// A non-positive pivot was hit at the given index: the matrix is not
+    /// (numerically) positive definite.
+    NotPositiveDefinite { index: usize, pivot: f64 },
+}
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite { index, pivot } => {
+                write!(f, "matrix not positive definite (pivot {pivot:.3e} at index {index})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
+
+impl Cholesky {
+    /// Factor a symmetric positive definite matrix. Only the lower triangle
+    /// of `a` is read. Right-looking blocked algorithm: the trailing-update
+    /// (`A22 -= L21 L21^T`) dominates and runs as a cache-blocked SYRK.
+    pub fn factor(a: &Matrix) -> Result<Cholesky, CholeskyError> {
+        assert_eq!(a.rows, a.cols, "cholesky: matrix must be square");
+        let n = a.rows;
+        let mut l = a.clone();
+        const NB: usize = 64;
+        for kb in (0..n).step_by(NB) {
+            let ke = (kb + NB).min(n);
+            // factor the diagonal block [kb..ke) unblocked
+            for k in kb..ke {
+                let mut pivot = l.data[k * n + k];
+                // subtract within-panel contributions
+                for p in kb..k {
+                    let v = l.data[k * n + p];
+                    pivot -= v * v;
+                }
+                if pivot <= 0.0 || !pivot.is_finite() {
+                    return Err(CholeskyError::NotPositiveDefinite { index: k, pivot });
+                }
+                let lkk = pivot.sqrt();
+                l.data[k * n + k] = lkk;
+                let inv = 1.0 / lkk;
+                // update column k below the diagonal (within panel width)
+                for i in k + 1..n {
+                    let mut v = l.data[i * n + k];
+                    for p in kb..k {
+                        v -= l.data[i * n + p] * l.data[k * n + p];
+                    }
+                    l.data[i * n + k] = v * inv;
+                }
+            }
+            // trailing update: A[ke.., ke..] -= L[ke.., kb..ke) * L[ke.., kb..ke)^T
+            // lower triangle only. 2-wide j unroll: each panel row of i is
+            // streamed once against two j rows (§Perf: ~1.5x on the
+            // update-dominated large-d factorizations).
+            let w = ke - kb;
+            for i in ke..n {
+                let pi_start = i * n + kb;
+                let mut j = ke;
+                while j + 1 <= i {
+                    let pj0 = j * n + kb;
+                    let pj1 = (j + 1) * n + kb;
+                    let mut s0 = 0.0;
+                    let mut s1 = 0.0;
+                    for p in 0..w {
+                        let li = l.data[pi_start + p];
+                        s0 += li * l.data[pj0 + p];
+                        s1 += li * l.data[pj1 + p];
+                    }
+                    l.data[i * n + j] -= s0;
+                    l.data[i * n + j + 1] -= s1;
+                    j += 2;
+                }
+                if j <= i {
+                    let pj_start = j * n + kb;
+                    let mut s = 0.0;
+                    for p in 0..w {
+                        s += l.data[pi_start + p] * l.data[pj_start + p];
+                    }
+                    l.data[i * n + j] -= s;
+                }
+            }
+        }
+        // zero the strict upper triangle for cleanliness
+        for i in 0..n {
+            for j in i + 1..n {
+                l.data[i * n + j] = 0.0;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve `A x = b` given the factorization (two triangular solves).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// In-place solve (allocation-free hot path).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        forward_sub(&self.l, x);
+        backward_sub_t(&self.l, x);
+    }
+
+    /// Solve for multiple right-hand sides stored as columns of `B` (d x k).
+    pub fn solve_matrix(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows;
+        assert_eq!(b.rows, n);
+        // work column-by-column on a transposed copy for contiguity
+        let bt = b.transpose(); // k x n, rows are RHS
+        let mut xt = Matrix::zeros(bt.rows, n);
+        for r in 0..bt.rows {
+            let mut col = bt.row(r).to_vec();
+            self.solve_in_place(&mut col);
+            xt.row_mut(r).copy_from_slice(&col);
+        }
+        xt.transpose()
+    }
+
+    /// log-determinant of A (= 2 * sum log diag(L)). Used by diagnostics.
+    pub fn log_det(&self) -> f64 {
+        let n = self.l.rows;
+        2.0 * (0..n).map(|i| self.l.data[i * n + i].ln()).sum::<f64>()
+    }
+}
+
+/// Solve `L y = b` in place (L lower-triangular).
+pub fn forward_sub(l: &Matrix, x: &mut [f64]) {
+    let n = l.rows;
+    assert_eq!(x.len(), n);
+    for i in 0..n {
+        let row = &l.data[i * n..i * n + i];
+        let mut s = x[i];
+        for (p, &lv) in row.iter().enumerate() {
+            s -= lv * x[p];
+        }
+        x[i] = s / l.data[i * n + i];
+    }
+}
+
+/// Solve `L^T x = y` in place (L lower-triangular, so L^T is upper).
+pub fn backward_sub_t(l: &Matrix, x: &mut [f64]) {
+    let n = l.rows;
+    assert_eq!(x.len(), n);
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        // L^T[i][j] = L[j][i] for j > i
+        for j in i + 1..n {
+            s -= l.data[j * n + i] * x[j];
+        }
+        x[i] = s / l.data[i * n + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matvec, syrk_t};
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        // A^T A + I is SPD
+        let a = Matrix::from_vec(n + 3, n, (0..(n + 3) * n).map(|_| rng.gaussian()).collect());
+        let mut g = syrk_t(&a);
+        for i in 0..n {
+            g.data[i * n + i] += 1.0;
+        }
+        g
+    }
+
+    #[test]
+    fn factor_roundtrip() {
+        let mut rng = Rng::seed_from(3);
+        for &n in &[1, 2, 5, 33, 64, 100, 129] {
+            let a = spd(&mut rng, n);
+            let ch = Cholesky::factor(&a).unwrap();
+            let rec = matmul(&ch.l, &ch.l.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-8 * (n as f64), "n={}", n);
+        }
+    }
+
+    #[test]
+    fn solve_matches() {
+        let mut rng = Rng::seed_from(5);
+        let n = 47;
+        let a = spd(&mut rng, n);
+        let ch = Cholesky::factor(&a).unwrap();
+        let xtrue: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let b = matvec(&a, &xtrue);
+        let x = ch.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - xtrue[i]).abs() < 1e-8, "i={}", i);
+        }
+    }
+
+    #[test]
+    fn solve_matrix_multiple_rhs() {
+        let mut rng = Rng::seed_from(9);
+        let n = 20;
+        let k = 4;
+        let a = spd(&mut rng, n);
+        let ch = Cholesky::factor(&a).unwrap();
+        let xtrue = Matrix::from_vec(n, k, (0..n * k).map(|_| rng.gaussian()).collect());
+        let b = matmul(&a, &xtrue);
+        let x = ch.solve_matrix(&b);
+        assert!(x.max_abs_diff(&xtrue) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(matches!(
+            Cholesky::factor(&a),
+            Err(CholeskyError::NotPositiveDefinite { .. })
+        ));
+    }
+}

@@ -1,0 +1,194 @@
+//! Symmetric eigenvalue routines.
+//!
+//! Two tools, matched to how the paper uses spectra:
+//! - a cyclic Jacobi eigensolver for small dense symmetric matrices
+//!   (test oracles, concentration experiments on `C_S`),
+//! - power/shifted-power iteration for extreme eigenvalues of an operator
+//!   given only as a matvec closure (large `C_S` without materializing it).
+
+use super::matrix::{dot, norm2, Matrix};
+use crate::rng::Rng;
+
+/// All eigenvalues of a symmetric matrix via cyclic Jacobi rotations.
+/// Returns eigenvalues sorted in non-increasing order. O(n^3) per sweep;
+/// intended for n up to a few hundred.
+pub fn jacobi_eigenvalues(a: &Matrix, tol: f64, max_sweeps: usize) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // apply rotation G(p,q,theta) on both sides
+                for k in 0..n {
+                    let akp = m.at(k, p);
+                    let akq = m.at(k, q);
+                    m.set(k, p, c * akp - s * akq);
+                    m.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = m.at(p, k);
+                    let aqk = m.at(q, k);
+                    m.set(p, k, c * apk - s * aqk);
+                    m.set(q, k, s * apk + c * aqk);
+                }
+            }
+        }
+    }
+    let mut eigs: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    eigs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eigs
+}
+
+/// Largest eigenvalue (and eigenvector) of a symmetric PSD operator given as
+/// a matvec closure, by power iteration.
+pub fn power_iteration<F: FnMut(&[f64], &mut [f64])>(
+    n: usize,
+    mut matvec: F,
+    iters: usize,
+    rng: &mut Rng,
+) -> (f64, Vec<f64>) {
+    let mut v = rng.gaussian_vec(n);
+    let nv = norm2(&v);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut w = vec![0.0; n];
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        matvec(&v, &mut w);
+        lambda = dot(&v, &w);
+        let nw = norm2(&w);
+        if nw == 0.0 {
+            return (0.0, v);
+        }
+        for i in 0..n {
+            v[i] = w[i] / nw;
+        }
+    }
+    (lambda, v)
+}
+
+/// Extreme eigenvalues (min, max) of a symmetric operator via power
+/// iteration plus a spectral shift: `lambda_min(M) = s - lambda_max(sI - M)`
+/// where `s >= lambda_max(M)`.
+pub fn extreme_eigenvalues<F: FnMut(&[f64], &mut [f64])>(
+    n: usize,
+    mut matvec: F,
+    iters: usize,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    let (lmax, _) = power_iteration(n, &mut matvec, iters, rng);
+    let shift = lmax.abs() * 1.5 + 1.0;
+    let mut tmp = vec![0.0; n];
+    let (lshift, _) = power_iteration(
+        n,
+        |v, out| {
+            matvec(v, &mut tmp);
+            for i in 0..n {
+                out[i] = shift * v[i] - tmp[i];
+            }
+        },
+        iters,
+        rng,
+    );
+    (shift - lshift, lmax)
+}
+
+/// Operator norm ||M||_2 of a symmetric (possibly indefinite) matrix given
+/// as a matvec, via power iteration on M^2.
+pub fn sym_opnorm<F: FnMut(&[f64], &mut [f64])>(
+    n: usize,
+    mut matvec: F,
+    iters: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut tmp = vec![0.0; n];
+    let (l2, _) = power_iteration(
+        n,
+        |v, out| {
+            matvec(v, &mut tmp);
+            matvec(&tmp, out);
+        },
+        iters,
+        rng,
+    );
+    l2.max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matvec as dense_matvec;
+
+    #[test]
+    fn jacobi_on_diagonal() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let e = jacobi_eigenvalues(&a, 1e-12, 30);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 2.0).abs() < 1e-10);
+        assert!((e[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = jacobi_eigenvalues(&a, 1e-14, 50);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_matches_jacobi() {
+        let mut rng = Rng::seed_from(17);
+        let n = 24;
+        // random SPD
+        let b = Matrix::from_vec(n + 2, n, (0..(n + 2) * n).map(|_| rng.gaussian()).collect());
+        let mut g = crate::linalg::gemm::syrk_t(&b);
+        for i in 0..n {
+            g.data[i * n + i] += 0.5;
+        }
+        let eigs = jacobi_eigenvalues(&g, 1e-12, 50);
+        let gm = g.clone();
+        let (lmin, lmax) = extreme_eigenvalues(
+            n,
+            |v, out| out.copy_from_slice(&dense_matvec(&gm, v)),
+            600,
+            &mut rng,
+        );
+        assert!((lmax - eigs[0]).abs() / eigs[0] < 1e-3, "lmax {lmax} vs {}", eigs[0]);
+        assert!((lmin - eigs[n - 1]).abs() / eigs[0] < 1e-3, "lmin {lmin} vs {}", eigs[n - 1]);
+    }
+
+    #[test]
+    fn opnorm_of_indefinite() {
+        let mut rng = Rng::seed_from(19);
+        // diag(2, -5, 1): opnorm 5
+        let a = Matrix::diag(&[2.0, -5.0, 1.0]);
+        let nrm = sym_opnorm(3, |v, out| out.copy_from_slice(&dense_matvec(&a, v)), 500, &mut rng);
+        assert!((nrm - 5.0).abs() < 1e-6);
+    }
+}

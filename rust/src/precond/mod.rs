@@ -1,0 +1,224 @@
+//! The sketched preconditioner `H_S = (SA)^T (SA) + nu^2 Lambda` and its
+//! cached factorization (§4.1.1).
+//!
+//! Two regimes:
+//! - **m >= d (primal)**: form `H_S` (O(m d^2)) and Cholesky it (O(d^3));
+//!   each solve is O(d^2).
+//! - **m < d (Woodbury)**: form `W_S = SA Λ^{-1} (SA)^T + ν^2 I_m`
+//!   (O(m^2 d)), Cholesky it (O(m^3)); each solve is O(m d) via
+//!   `v = Λ^{-1}/ν^2 (I − (SA)^T W_S^{-1} SA Λ^{-1}) z`.
+//!
+//! The factorization is refreshed whenever the adaptive controller doubles
+//! the sketch size and samples a fresh embedding.
+
+use crate::linalg::{matvec_into, matvec_t_into, syrk_t, Cholesky, CholeskyError, Matrix};
+use crate::problem::Problem;
+use crate::sketch::Sketch;
+
+/// Factorized `H_S`, ready to solve `H_S v = z` repeatedly.
+pub struct SketchedPreconditioner {
+    /// Sketch size m used to build this preconditioner.
+    pub m: usize,
+    inner: Inner,
+    /// Flop count spent building (sketch application excluded; that is
+    /// accounted by the caller who owns SA).
+    pub factor_flops: f64,
+}
+
+enum Inner {
+    /// m >= d: Cholesky of H_S (d x d).
+    Primal { chol: Cholesky },
+    /// m < d: Woodbury with Cholesky of W_S (m x m). Keeps SA around.
+    Woodbury {
+        sa: Matrix,
+        chol: Cholesky,
+        /// Λ^{-1} diagonal.
+        lam_inv: Vec<f64>,
+        nu2: f64,
+        /// scratch buffers (solve is done with interior mutability-free
+        /// API: buffers passed per call)
+        d: usize,
+    },
+}
+
+impl SketchedPreconditioner {
+    /// Build from an already-computed sketch `SA` (m x d) and the problem's
+    /// regularization. Chooses the primal or Woodbury path by m vs d.
+    pub fn build(sa: Matrix, lambda: &[f64], nu: f64) -> Result<Self, CholeskyError> {
+        let m = sa.rows;
+        let d = sa.cols;
+        assert_eq!(lambda.len(), d);
+        let nu2 = nu * nu;
+        if m >= d {
+            // H_S = (SA)^T (SA) + nu^2 Lambda
+            let mut h = syrk_t(&sa);
+            for i in 0..d {
+                h.data[i * d + i] += nu2 * lambda[i];
+            }
+            let chol = Cholesky::factor(&h)?;
+            let flops = (m * d * d) as f64 + (d * d * d) as f64 / 3.0;
+            Ok(SketchedPreconditioner { m, inner: Inner::Primal { chol }, factor_flops: flops })
+        } else {
+            // W_S = SA Λ^{-1} (SA)^T + ν^2 I_m
+            let lam_inv: Vec<f64> = lambda.iter().map(|&l| 1.0 / l).collect();
+            // scale columns of SA by lam_inv^{1/2} then SYRK on rows:
+            // W = (SA Λ^{-1/2})(SA Λ^{-1/2})^T
+            let mut scaled = sa.clone();
+            for r in 0..m {
+                let row = scaled.row_mut(r);
+                for j in 0..d {
+                    row[j] *= lam_inv[j].sqrt();
+                }
+            }
+            // W[i][j] = <scaled_i, scaled_j>
+            let mut w = Matrix::zeros(m, m);
+            for i in 0..m {
+                for j in i..m {
+                    let v = crate::linalg::dot(scaled.row(i), scaled.row(j));
+                    w.data[i * m + j] = v;
+                    w.data[j * m + i] = v;
+                }
+            }
+            for i in 0..m {
+                w.data[i * m + i] += nu2;
+            }
+            let chol = Cholesky::factor(&w)?;
+            let flops = (m * m * d) as f64 + (m * m * m) as f64 / 3.0;
+            Ok(SketchedPreconditioner {
+                m,
+                inner: Inner::Woodbury { sa, chol, lam_inv, nu2, d },
+                factor_flops: flops,
+            })
+        }
+    }
+
+    /// Convenience: sample-free build directly from a problem + sketch.
+    pub fn from_sketch(problem: &Problem, sketch: &Sketch) -> Result<Self, CholeskyError> {
+        let sa = sketch.apply(&problem.a);
+        Self::build(sa, &problem.lambda, problem.nu)
+    }
+
+    /// Solve `H_S v = z`. Returns a fresh vector.
+    pub fn solve(&self, z: &[f64]) -> Vec<f64> {
+        let mut v = z.to_vec();
+        self.solve_in_place(&mut v);
+        v
+    }
+
+    /// Solve `H_S v = z` in place (z becomes v). Allocation cost is O(m)
+    /// scratch on the Woodbury path only.
+    pub fn solve_in_place(&self, z: &mut [f64]) {
+        match &self.inner {
+            Inner::Primal { chol } => chol.solve_in_place(z),
+            Inner::Woodbury { sa, chol, lam_inv, nu2, d } => {
+                let d = *d;
+                debug_assert_eq!(z.len(), d);
+                // u = Λ^{-1} z
+                let mut u = vec![0.0; d];
+                for i in 0..d {
+                    u[i] = lam_inv[i] * z[i];
+                }
+                // t = SA u   (m)
+                let mut t = vec![0.0; sa.rows];
+                matvec_into(sa, &u, &mut t);
+                // t = W_S^{-1} t
+                chol.solve_in_place(&mut t);
+                // w = (SA)^T t   (d)
+                let mut w = vec![0.0; d];
+                matvec_t_into(sa, &t, &mut w);
+                // v = Λ^{-1}/ν^2 (z - w)  — note Woodbury identity
+                //   v = Λ^{-1}/ν^2 (I - (SA)^T W^{-1} SA Λ^{-1}) z
+                for i in 0..d {
+                    z[i] = lam_inv[i] / nu2 * (z[i] - w[i]);
+                }
+            }
+        }
+    }
+
+    /// Quadratic form `z^T H_S^{-1} z` — the approximate Newton decrement
+    /// inner product (eq. 2.3) given an existing solve result.
+    pub fn newton_decrement(&self, grad: &[f64]) -> f64 {
+        let v = self.solve(grad);
+        0.5 * crate::linalg::dot(grad, &v)
+    }
+
+    /// True if the Woodbury (m < d) path is active.
+    pub fn is_woodbury(&self) -> bool {
+        matches!(self.inner, Inner::Woodbury { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matvec, Matrix};
+    use crate::rng::Rng;
+    use crate::sketch::SketchKind;
+    use crate::testing::{check, PropConfig};
+
+    /// Dense H_S for validation.
+    fn dense_hs(sa: &Matrix, lambda: &[f64], nu: f64) -> Matrix {
+        let d = sa.cols;
+        let mut h = syrk_t(sa);
+        for i in 0..d {
+            h.data[i * d + i] += nu * nu * lambda[i];
+        }
+        h
+    }
+
+    #[test]
+    fn primal_and_woodbury_agree_with_dense() {
+        check("H_S solve matches dense", PropConfig { cases: 16, ..Default::default() }, |rng, case| {
+            let d = 3 + rng.below(12);
+            let m = if case % 2 == 0 { d + rng.below(10) } else { 1 + rng.below(d.max(2) - 1) };
+            let nu = 0.2 + rng.uniform();
+            let lambda: Vec<f64> = (0..d).map(|_| 1.0 + rng.uniform()).collect();
+            let sa = Matrix::from_vec(m, d, (0..m * d).map(|_| rng.gaussian()).collect());
+            let p = SketchedPreconditioner::build(sa.clone(), &lambda, nu).map_err(|e| e.to_string())?;
+            assert_eq!(p.is_woodbury(), m < d);
+            let h = dense_hs(&sa, &lambda, nu);
+            let z: Vec<f64> = rng.gaussian_vec(d);
+            let v = p.solve(&z);
+            let hz = matvec(&h, &v);
+            for i in 0..d {
+                let err = (hz[i] - z[i]).abs();
+                if err > 1e-7 * (1.0 + z[i].abs()) {
+                    return Err(format!("m={m} d={d}: residual {err} at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn newton_decrement_positive() {
+        let mut rng = Rng::seed_from(71);
+        let (m, d) = (6, 10); // woodbury path
+        let sa = Matrix::from_vec(m, d, (0..m * d).map(|_| rng.gaussian()).collect());
+        let lambda = vec![1.0; d];
+        let p = SketchedPreconditioner::build(sa, &lambda, 0.5).unwrap();
+        let g = rng.gaussian_vec(d);
+        assert!(p.newton_decrement(&g) > 0.0);
+        let zero = vec![0.0; d];
+        assert_eq!(p.newton_decrement(&zero), 0.0);
+    }
+
+    #[test]
+    fn from_sketch_end_to_end() {
+        let mut rng = Rng::seed_from(73);
+        let (n, d) = (64, 8);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = rng.gaussian_vec(d);
+        let prob = crate::problem::Problem::ridge(a, b, 0.7);
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }] {
+            let sk = kind.sample(16, n, &mut rng);
+            let p = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+            assert_eq!(p.m, 16);
+            // solving with the preconditioner then applying dense H_S
+            // round-trips (validated in detail above) — here just smoke.
+            let z = rng.gaussian_vec(d);
+            let v = p.solve(&z);
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! The convex quadratic program of eq. (1.1):
+//! `x* = argmin_x 1/2 <x, Hx> - b^T x` with `H = A^T A + nu^2 * Lambda`.
+
+use crate::linalg::{axpy, dot, matvec_into, matvec_t_into, Matrix};
+
+/// A regularized least-squares / convex quadratic problem instance.
+///
+/// `H` is never materialized: the solvers only need `H v` products
+/// (two matvecs against `A` plus the diagonal term) and the gradient
+/// `∇f(x) = Hx − b`.
+#[derive(Clone)]
+pub struct Problem {
+    /// Data matrix, n x d (n >= d after dualization if needed).
+    pub a: Matrix,
+    /// Linear term, length d.
+    pub b: Vec<f64>,
+    /// Diagonal of Lambda (all entries >= 1 per the paper's assumption).
+    pub lambda: Vec<f64>,
+    /// Regularization parameter nu > 0.
+    pub nu: f64,
+}
+
+impl Problem {
+    /// Ridge-regression style problem: `Lambda = I`, `b` given directly in
+    /// the quadratic form (i.e. `b = A^T y` for least-squares data `y`).
+    pub fn ridge(a: Matrix, b: Vec<f64>, nu: f64) -> Problem {
+        assert_eq!(a.cols, b.len(), "b must have length d");
+        assert!(nu > 0.0, "nu must be positive");
+        let d = a.cols;
+        Problem { a, b, lambda: vec![1.0; d], nu }
+    }
+
+    /// Ridge problem from raw regression data `(A, y)`: sets `b = A^T y`.
+    pub fn ridge_from_labels(a: Matrix, y: &[f64], nu: f64) -> Problem {
+        assert_eq!(a.rows, y.len());
+        let b = crate::linalg::matvec_t(&a, y);
+        Problem::ridge(a, b, nu)
+    }
+
+    /// General form with a diagonal `Lambda >= I`.
+    pub fn general(a: Matrix, b: Vec<f64>, lambda: Vec<f64>, nu: f64) -> Problem {
+        assert_eq!(a.cols, b.len());
+        assert_eq!(a.cols, lambda.len());
+        assert!(nu > 0.0);
+        assert!(lambda.iter().all(|&l| l >= 1.0), "Lambda must dominate I_d");
+        Problem { a, b, lambda, nu }
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.cols
+    }
+
+    /// `out = H v = A^T (A v) + nu^2 * Lambda v`, using `work` (length n)
+    /// as scratch. Allocation-free.
+    pub fn hess_apply(&self, v: &[f64], out: &mut [f64], work: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.d());
+        debug_assert_eq!(out.len(), self.d());
+        debug_assert_eq!(work.len(), self.n());
+        matvec_into(&self.a, v, work);
+        matvec_t_into(&self.a, work, out);
+        let nu2 = self.nu * self.nu;
+        for i in 0..self.d() {
+            out[i] += nu2 * self.lambda[i] * v[i];
+        }
+    }
+
+    /// Gradient `∇f(x) = Hx − b` into `out`.
+    pub fn gradient(&self, x: &[f64], out: &mut [f64], work: &mut [f64]) {
+        self.hess_apply(x, out, work);
+        for i in 0..self.d() {
+            out[i] -= self.b[i];
+        }
+    }
+
+    /// Objective value `f(x) = 1/2 <x, Hx> - b^T x`.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        let mut hx = vec![0.0; self.d()];
+        let mut work = vec![0.0; self.n()];
+        self.hess_apply(x, &mut hx, &mut work);
+        0.5 * dot(x, &hx) - dot(&self.b, x)
+    }
+
+    /// Error measure `delta_x = 1/2 ||x - x*||_H^2` given a reference
+    /// solution (computed by the direct solver in experiments).
+    pub fn error_to(&self, x: &[f64], x_star: &[f64]) -> f64 {
+        let mut diff: Vec<f64> = x.iter().zip(x_star).map(|(a, b)| a - b).collect();
+        let mut hd = vec![0.0; self.d()];
+        let mut work = vec![0.0; self.n()];
+        self.hess_apply(&diff, &mut hd, &mut work);
+        let e = 0.5 * dot(&diff, &hd);
+        // guard tiny negative from roundoff
+        axpy(0.0, &hd, &mut diff); // keep borrowck simple; no-op
+        e.max(0.0)
+    }
+
+    /// Exact effective dimension `d_e = tr(A_nu) / ||A_nu||_2` where
+    /// `A_nu = A^T A (A^T A + nu^2 Lambda)^{-1}`, computed from the
+    /// singular values of `A Lambda^{-1/2}` if supplied by the caller.
+    ///
+    /// For synthetic data the singular values are known analytically; for
+    /// general data use `effective_dimension_exact` (O(d^3)).
+    pub fn effective_dimension_from_singular_values(sigmas: &[f64], nu: f64) -> f64 {
+        let nu2 = nu * nu;
+        let top = sigmas.iter().map(|s| s * s / (s * s + nu2)).sum::<f64>();
+        let smax2 = sigmas.iter().fold(0.0f64, |m, &s| m.max(s * s));
+        if smax2 == 0.0 {
+            return 0.0;
+        }
+        top / (smax2 / (smax2 + nu2))
+    }
+
+    /// The dual program of eq. (1.2): for underdetermined data (n < d),
+    /// solve over `w ∈ R^n` with the Gram operator
+    /// `(A Λ^{-1/2})(A Λ^{-1/2})^T + ν² I_n` and recover the primal
+    /// solution as `x* = Λ^{-1}/ν² (b − A^T w*)` where `w*` solves the
+    /// dual with linear term `A Λ^{-1} b`. This is how the paper assumes
+    /// n ≥ d WLOG (and how the OVA-Lung experiment is run).
+    pub fn dual(&self) -> DualProblem {
+        let n = self.n();
+        let d = self.d();
+        // B = (A Λ^{-1/2})^T is d x n, so the dual data matrix (rows x
+        // cols with rows >= cols semantics) is B with "n_dual" = d rows.
+        let mut bmat = Matrix::zeros(d, n);
+        for i in 0..n {
+            let arow = self.a.row(i);
+            for j in 0..d {
+                bmat.data[j * n + i] = arow[j] / self.lambda[j].sqrt();
+            }
+        }
+        // dual linear term: A Λ^{-1} b (length n)
+        let lam_inv_b: Vec<f64> = (0..d).map(|j| self.b[j] / self.lambda[j]).collect();
+        let dual_b = crate::linalg::matvec(&self.a, &lam_inv_b);
+        let dual = Problem::ridge(bmat, dual_b, self.nu);
+        DualProblem { dual, primal_lambda: self.lambda.clone(), primal_b: self.b.clone(), nu: self.nu }
+    }
+
+    /// Exact effective dimension via the eigenvalues of `Lambda^{-1/2} A^T A
+    /// Lambda^{-1/2}` (Jacobi eigensolver; O(d^3), for d up to ~500 use
+    /// only in experiments/tests).
+    pub fn effective_dimension_exact(&self) -> f64 {
+        let d = self.d();
+        let mut g = crate::linalg::syrk_t(&self.a);
+        // scale by Lambda^{-1/2} on both sides
+        for i in 0..d {
+            for j in 0..d {
+                let s = (self.lambda[i] * self.lambda[j]).sqrt();
+                g.data[i * d + j] /= s;
+            }
+        }
+        let eigs = crate::linalg::eig::jacobi_eigenvalues(&g, 1e-10, 60);
+        let sigmas: Vec<f64> = eigs.iter().map(|&e| e.max(0.0).sqrt()).collect();
+        Problem::effective_dimension_from_singular_values(&sigmas, self.nu)
+    }
+}
+
+/// The dualized problem of eq. (1.2) plus the primal-recovery mapping.
+pub struct DualProblem {
+    /// The n-dimensional quadratic program (data matrix is d x n, so its
+    /// "n >= d" orientation is restored whenever the original had n < d).
+    pub dual: Problem,
+    primal_lambda: Vec<f64>,
+    primal_b: Vec<f64>,
+    nu: f64,
+}
+
+impl DualProblem {
+    /// Map a dual solution `w*` back to the primal `x*`:
+    /// `x* = Λ^{-1}/ν² (b − A^T w̃)` with `w̃ = Λ^{-1/2}-unscaled dual
+    /// iterate`. The dual problem's data matrix is `(AΛ^{-1/2})^T`, so
+    /// `A^T w̃ = Λ^{1/2} · (dual data)·w`.
+    pub fn recover_primal(&self, w: &[f64]) -> Vec<f64> {
+        let d = self.primal_lambda.len();
+        // (AΛ^{-1/2})^T w has length d; multiply by Λ^{1/2} to undo scaling
+        let bw = crate::linalg::matvec(&self.dual.a, w);
+        debug_assert_eq!(bw.len(), d);
+        let nu2 = self.nu * self.nu;
+        (0..d)
+            .map(|j| (self.primal_b[j] - self.primal_lambda[j].sqrt() * bw[j]) / (self.primal_lambda[j] * nu2))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matvec, syrk_t};
+    use crate::rng::Rng;
+
+    fn toy(rng: &mut Rng, n: usize, d: usize, nu: f64) -> Problem {
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = rng.gaussian_vec(d);
+        Problem::ridge(a, b, nu)
+    }
+
+    #[test]
+    fn hess_apply_matches_dense() {
+        let mut rng = Rng::seed_from(31);
+        let p = toy(&mut rng, 20, 7, 0.3);
+        let v = rng.gaussian_vec(7);
+        let mut out = vec![0.0; 7];
+        let mut work = vec![0.0; 20];
+        p.hess_apply(&v, &mut out, &mut work);
+        // dense H
+        let mut h = syrk_t(&p.a);
+        for i in 0..7 {
+            h.data[i * 7 + i] += p.nu * p.nu;
+        }
+        let hv = matvec(&h, &v);
+        for i in 0..7 {
+            assert!((out[i] - hv[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gradient_zero_at_solution() {
+        let mut rng = Rng::seed_from(33);
+        let p = toy(&mut rng, 30, 5, 0.5);
+        // solve exactly via dense Cholesky
+        let mut h = syrk_t(&p.a);
+        for i in 0..5 {
+            h.data[i * 5 + i] += p.nu * p.nu;
+        }
+        let ch = crate::linalg::Cholesky::factor(&h).unwrap();
+        let xstar = ch.solve(&p.b);
+        let mut g = vec![0.0; 5];
+        let mut work = vec![0.0; 30];
+        p.gradient(&xstar, &mut g, &mut work);
+        assert!(crate::linalg::norm2(&g) < 1e-9);
+        // objective at x* is below objective elsewhere
+        let other = rng.gaussian_vec(5);
+        assert!(p.objective(&xstar) < p.objective(&other));
+    }
+
+    #[test]
+    fn effective_dimension_bounds() {
+        // d_e <= d always; small for heavy regularization
+        let sig: Vec<f64> = (0..50).map(|j| 0.9f64.powi(j)).collect();
+        let de_small_nu = Problem::effective_dimension_from_singular_values(&sig, 1e-6);
+        let de_big_nu = Problem::effective_dimension_from_singular_values(&sig, 10.0);
+        assert!(de_small_nu <= 50.0 + 1e-9);
+        assert!(de_big_nu < de_small_nu);
+        assert!(de_big_nu >= 1.0 - 1e-9); // at least ~1 by normalization
+    }
+
+    #[test]
+    fn effective_dimension_exact_matches_analytic() {
+        let mut rng = Rng::seed_from(35);
+        // diagonal A: singular values known
+        let d = 10;
+        let n = 16;
+        let mut a = Matrix::zeros(n, d);
+        let sigs: Vec<f64> = (0..d).map(|j| 0.8f64.powi(j as i32)).collect();
+        for j in 0..d {
+            a.set(j, j, sigs[j]);
+        }
+        let b = rng.gaussian_vec(d);
+        let p = Problem::ridge(a, b, 0.3);
+        let de1 = p.effective_dimension_exact();
+        let de2 = Problem::effective_dimension_from_singular_values(&sigs, 0.3);
+        assert!((de1 - de2).abs() < 1e-6, "{de1} vs {de2}");
+    }
+
+    #[test]
+    fn error_to_is_newton_decrement() {
+        // delta_x = 1/2 ||x - x*||_H^2 should equal
+        // 1/2 ||grad f(x)||_{H^{-1}}^2 at any x
+        let mut rng = Rng::seed_from(37);
+        let p = toy(&mut rng, 25, 6, 0.4);
+        let d = 6;
+        let mut h = syrk_t(&p.a);
+        for i in 0..d {
+            h.data[i * d + i] += p.nu * p.nu;
+        }
+        let ch = crate::linalg::Cholesky::factor(&h).unwrap();
+        let xstar = ch.solve(&p.b);
+        let x = rng.gaussian_vec(d);
+        let delta = p.error_to(&x, &xstar);
+        let mut g = vec![0.0; d];
+        let mut work = vec![0.0; 25];
+        p.gradient(&x, &mut g, &mut work);
+        let hinv_g = ch.solve(&g);
+        let nd = 0.5 * dot(&g, &hinv_g);
+        assert!((delta - nd).abs() / delta.max(1e-12) < 1e-8);
+        let _ = matmul(&p.a.transpose(), &p.a); // exercise transpose path
+    }
+}

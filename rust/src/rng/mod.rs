@@ -1,0 +1,208 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! xoshiro256++ core (public-domain algorithm by Blackman & Vigna) with the
+//! distributions the sketching library needs: uniform, Gaussian (polar
+//! Box–Muller), Rademacher signs, and sampling without replacement. The
+//! whole experiment suite is seeded, so every figure regenerates bit-
+//! identically.
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    gauss_cache: Option<f64>,
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    (x << k) | (x >> (64 - k))
+}
+
+/// splitmix64, used to expand a seed into the xoshiro state.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seeded construction; any u64 seed is fine (expanded via splitmix64).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_cache: None }
+    }
+
+    /// Next raw u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 top bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // Lemire's method would be faster; modulo bias is negligible for
+        // n << 2^64 and this is not a hot path.
+        (self.next_u64() % (n as u64)) as usize
+    }
+
+    /// Standard Gaussian via the polar (Marsaglia) method with caching.
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_cache.take() {
+            return g;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_cache = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Random sign in {-1.0, +1.0}.
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Vector of n Gaussians.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.gaussian()).collect()
+    }
+
+    /// Vector of n Rademacher signs.
+    pub fn rademacher_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rademacher()).collect()
+    }
+
+    /// `m` distinct indices sampled uniformly without replacement from
+    /// `[0, n)` (partial Fisher–Yates).
+    pub fn sample_without_replacement(&mut self, m: usize, n: usize) -> Vec<usize> {
+        assert!(m <= n, "cannot sample {m} from {n} without replacement");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+
+    /// Random permutation of [0, n).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        self.sample_without_replacement(n, n)
+    }
+
+    /// Fork a child RNG with a decorrelated stream (for per-job seeding).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed_from(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Rng::seed_from(1);
+        let n = 20000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::seed_from(2);
+        let n = 50000;
+        let xs = rng.gaussian_vec(n);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn rademacher_balance() {
+        let mut rng = Rng::seed_from(3);
+        let n = 20000;
+        let s: f64 = rng.rademacher_vec(n).iter().sum();
+        assert!(s.abs() < 300.0);
+        for v in rng.rademacher_vec(10) {
+            assert!(v == 1.0 || v == -1.0);
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut rng = Rng::seed_from(4);
+        let idx = rng.sample_without_replacement(50, 100);
+        assert_eq!(idx.len(), 50);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50);
+        assert!(*sorted.last().unwrap() < 100);
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut rng = Rng::seed_from(5);
+        let mut p = rng.permutation(64);
+        p.sort_unstable();
+        assert_eq!(p, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut rng = Rng::seed_from(6);
+        let mut c1 = rng.fork(1);
+        let mut c2 = rng.fork(2);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

@@ -1,0 +1,244 @@
+//! The PJRT execution engine: artifact registry + compile-once dispatch.
+
+use crate::util::json::JsonValue;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Logical op name ("gradient", "sketch_gram", "fwht", "hess_apply"...).
+    pub op: String,
+    /// Shape bucket key, e.g. [4096, 512] = (n, d).
+    pub shape: Vec<usize>,
+    /// HLO-text file name relative to the artifacts dir.
+    pub file: String,
+}
+
+impl ArtifactEntry {
+    fn key(&self) -> String {
+        key_of(&self.op, &self.shape)
+    }
+}
+
+fn key_of(op: &str, shape: &[usize]) -> String {
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    format!("{}:{}", op, dims.join("x"))
+}
+
+/// Engine errors.
+#[derive(Debug)]
+pub enum EngineError {
+    Io(String),
+    Manifest(String),
+    Xla(String),
+    NoArtifact(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Io(e) => write!(f, "io: {e}"),
+            EngineError::Manifest(e) => write!(f, "manifest: {e}"),
+            EngineError::Xla(e) => write!(f, "xla: {e}"),
+            EngineError::NoArtifact(k) => write!(f, "no artifact for {k}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// PJRT engine holding one compiled executable per artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Engine {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on the PJRT CPU client. Missing manifest → empty engine (native
+    /// fallback everywhere), mirroring a deployment without AOT kernels.
+    pub fn load(dir: &str) -> Result<Engine, EngineError> {
+        let client = xla::PjRtClient::cpu().map_err(|e| EngineError::Xla(e.to_string()))?;
+        let mut engine = Engine { client, exes: HashMap::new(), entries: Vec::new() };
+        let manifest_path: PathBuf = Path::new(dir).join("manifest.json");
+        if !manifest_path.exists() {
+            return Ok(engine);
+        }
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| EngineError::Io(e.to_string()))?;
+        let doc = JsonValue::parse(&text).map_err(EngineError::Manifest)?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| EngineError::Manifest("missing 'artifacts' array".into()))?;
+        for a in arts {
+            let op = a
+                .get("op")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| EngineError::Manifest("artifact missing op".into()))?
+                .to_string();
+            let shape: Vec<usize> = a
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| EngineError::Manifest("artifact missing shape".into()))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| EngineError::Manifest("artifact missing file".into()))?
+                .to_string();
+            let entry = ArtifactEntry { op, shape, file };
+            engine.compile_entry(dir, entry)?;
+        }
+        Ok(engine)
+    }
+
+    fn compile_entry(&mut self, dir: &str, entry: ArtifactEntry) -> Result<(), EngineError> {
+        let path = Path::new(dir).join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| EngineError::Xla(e.to_string()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| EngineError::Xla(e.to_string()))?;
+        self.exes.insert(entry.key(), exe);
+        self.entries.push(entry);
+        Ok(())
+    }
+
+    /// All loaded artifacts.
+    pub fn artifacts(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Is an (op, shape) pair available?
+    pub fn has(&self, op: &str, shape: &[usize]) -> bool {
+        self.exes.contains_key(&key_of(op, shape))
+    }
+
+    /// Execute an artifact. Inputs are (data, dims) pairs in f32; output is
+    /// the flattened f32 payload of each tuple element.
+    pub fn run(
+        &self,
+        op: &str,
+        shape: &[usize],
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>, EngineError> {
+        let key = key_of(op, shape);
+        let exe = self.exes.get(&key).ok_or(EngineError::NoArtifact(key))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| EngineError::Xla(e.to_string()))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| EngineError::Xla(e.to_string()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| EngineError::Xla(e.to_string()))?;
+        // aot.py lowers with return_tuple=True: unwrap all elements
+        let parts = lit.to_tuple().map_err(|e| EngineError::Xla(e.to_string()))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| EngineError::Xla(e.to_string()))?);
+        }
+        Ok(out)
+    }
+
+    /// Upload host data once to a device-resident buffer (f32). Use with
+    /// [`Engine::run_buffers`] to keep large constants (the data matrix A)
+    /// on device across iterations — the §Perf fix that removed the
+    /// per-call H2D copy from the solve hot path.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer, EngineError> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| EngineError::Xla(e.to_string()))
+    }
+
+    /// Upload f64 host data as an f32 device buffer.
+    pub fn upload_f64(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer, EngineError> {
+        let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+        self.upload_f32(&f32s, dims)
+    }
+
+    /// Execute an artifact over pre-uploaded device buffers (zero host
+    /// copies for the inputs). Output is downloaded and flattened.
+    pub fn run_buffers(
+        &self,
+        op: &str,
+        shape: &[usize],
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>, EngineError> {
+        let key = key_of(op, shape);
+        let exe = self.exes.get(&key).ok_or(EngineError::NoArtifact(key))?;
+        let result = exe.execute_b(inputs).map_err(|e| EngineError::Xla(e.to_string()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| EngineError::Xla(e.to_string()))?;
+        let parts = lit.to_tuple().map_err(|e| EngineError::Xla(e.to_string()))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| EngineError::Xla(e.to_string()))?);
+        }
+        Ok(out)
+    }
+
+    /// Execute with f64 host data (converted to f32 at the boundary; the
+    /// AOT kernels are f32, matching accelerator practice).
+    pub fn run_f64(
+        &self,
+        op: &str,
+        shape: &[usize],
+        inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<Vec<f64>>, EngineError> {
+        let f32_bufs: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|(d, _)| d.iter().map(|&v| v as f32).collect())
+            .collect();
+        let refs: Vec<(&[f32], &[usize])> = f32_bufs
+            .iter()
+            .zip(inputs.iter())
+            .map(|(buf, (_, dims))| (buf.as_slice(), *dims))
+            .collect();
+        let outs = self.run(op, shape, &refs)?;
+        Ok(outs.into_iter().map(|v| v.into_iter().map(|x| x as f64).collect()).collect())
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_dir_gives_empty_engine() {
+        let tmp = std::env::temp_dir().join("sketchsolve_empty_artifacts");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let eng = Engine::load(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(eng.artifacts().len(), 0);
+        assert!(!eng.has("gradient", &[4, 4]));
+        assert!(matches!(
+            eng.run("gradient", &[4, 4], &[]),
+            Err(EngineError::NoArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        let tmp = std::env::temp_dir().join("sketchsolve_bad_manifest");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "{\"artifacts\": \"nope\"}").unwrap();
+        assert!(matches!(
+            Engine::load(tmp.to_str().unwrap()),
+            Err(EngineError::Manifest(_))
+        ));
+    }
+}

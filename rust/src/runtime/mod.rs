@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the solver hot path.
+//!
+//! `make artifacts` (build time, python) writes `artifacts/manifest.json`
+//! plus one HLO-text module per (op, shape) bucket. At startup the
+//! [`Engine`] compiles each module once on the PJRT CPU client; solvers ask
+//! for ops by name + shape and fall back to the native `linalg` path when
+//! no artifact matches (bitwise-different but numerically equivalent f32 vs
+//! f64 — tolerances documented in python/tests).
+
+mod engine;
+pub mod xla_path;
+
+pub use engine::{ArtifactEntry, Engine, EngineError};
+pub use xla_path::XlaPcg;

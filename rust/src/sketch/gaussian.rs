@@ -1,0 +1,73 @@
+//! Gaussian embedding: i.i.d. entries `N(0, 1/m)`.
+//!
+//! The classical dense random projection. Strongest (sharpest) subspace
+//! embedding constants — critical sketch size `m_delta = (sqrt(d_e) +
+//! sqrt(8 log(16/delta)))^2` per Theorem 5.2 — but the most expensive to
+//! apply: `O(mnd)` flops for a dense data matrix.
+
+use crate::linalg::{matmul, Matrix};
+use crate::rng::Rng;
+
+/// A sampled dense Gaussian sketching matrix.
+pub struct GaussianSketch {
+    /// m x n dense matrix with entries N(0, 1/m).
+    s: Matrix,
+}
+
+impl GaussianSketch {
+    /// Sample an `m x n` Gaussian embedding.
+    pub fn sample(m: usize, n: usize, rng: &mut Rng) -> GaussianSketch {
+        let scale = 1.0 / (m as f64).sqrt();
+        let data = (0..m * n).map(|_| rng.gaussian() * scale).collect();
+        GaussianSketch { s: Matrix::from_vec(m, n, data) }
+    }
+
+    pub fn m(&self) -> usize {
+        self.s.rows
+    }
+
+    pub fn n(&self) -> usize {
+        self.s.cols
+    }
+
+    /// `S * A` by dense GEMM.
+    pub fn apply(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows, self.n(), "apply: A must have n rows");
+        matmul(&self.s, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_scaling() {
+        let mut rng = Rng::seed_from(41);
+        let s = GaussianSketch::sample(64, 128, &mut rng);
+        assert_eq!(s.m(), 64);
+        assert_eq!(s.n(), 128);
+        // entries ~ N(0, 1/64): empirical variance of all entries
+        let var: f64 = s.s.data.iter().map(|v| v * v).sum::<f64>() / (64.0 * 128.0);
+        assert!((var - 1.0 / 64.0).abs() < 0.003, "var={var}");
+    }
+
+    #[test]
+    fn norm_preservation_in_expectation() {
+        // ||S x||^2 ~ ||x||^2 for a fixed x, averaged over draws
+        let mut rng = Rng::seed_from(43);
+        let n = 50;
+        let x: Vec<f64> = rng.gaussian_vec(n);
+        let xnorm2: f64 = x.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let reps = 60;
+        for _ in 0..reps {
+            let s = GaussianSketch::sample(32, n, &mut rng);
+            let xm = Matrix::from_vec(n, 1, x.clone());
+            let sx = s.apply(&xm);
+            acc += sx.data.iter().map(|v| v * v).sum::<f64>();
+        }
+        let ratio = acc / reps as f64 / xnorm2;
+        assert!((ratio - 1.0).abs() < 0.15, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,220 @@
+//! Random embeddings (sketching matrices) of §2.1.
+//!
+//! Three families, all exposed through [`SketchKind`]/[`Sketch`]:
+//! - **Gaussian** — i.i.d. `N(0, 1/m)` entries; `O(mnd)` apply.
+//! - **SRHT** — subsampled randomized Hadamard transform
+//!   `S = sqrt(n'/m) R H E` with power-of-two zero padding;
+//!   `O(n d log n)` apply via the FWHT.
+//! - **SJLT** — sparse Johnson–Lindenstrauss / OSNAP with `s` nonzeros per
+//!   column; `O(s nnz(A))` apply.
+
+use crate::linalg::{fwht_rows, next_pow2, Matrix};
+use crate::rng::Rng;
+
+mod gaussian;
+mod sjlt;
+mod srht;
+
+pub use gaussian::GaussianSketch;
+pub use sjlt::SjltSketch;
+pub use srht::SrhtSketch;
+
+/// The sketch families the library supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    Gaussian,
+    Srht,
+    /// SJLT/OSNAP with `s` nonzeros per column (paper default: s = 1).
+    Sjlt {
+        s: usize,
+    },
+}
+
+impl SketchKind {
+    pub fn name(&self) -> String {
+        match self {
+            SketchKind::Gaussian => "gaussian".into(),
+            SketchKind::Srht => "srht".into(),
+            SketchKind::Sjlt { s } => format!("sjlt{s}"),
+        }
+    }
+
+    /// Parse from CLI strings: "gaussian" | "srht" | "sjlt" | "sjlt<k>".
+    pub fn parse(s: &str) -> Option<SketchKind> {
+        match s {
+            "gaussian" | "gauss" => Some(SketchKind::Gaussian),
+            "srht" => Some(SketchKind::Srht),
+            "sjlt" => Some(SketchKind::Sjlt { s: 1 }),
+            other => other
+                .strip_prefix("sjlt")
+                .and_then(|k| k.parse().ok())
+                .map(|s| SketchKind::Sjlt { s }),
+        }
+    }
+
+    /// Sample a fresh `m x n` embedding of this kind.
+    pub fn sample(&self, m: usize, n: usize, rng: &mut Rng) -> Sketch {
+        match self {
+            SketchKind::Gaussian => Sketch::Gaussian(GaussianSketch::sample(m, n, rng)),
+            SketchKind::Srht => Sketch::Srht(SrhtSketch::sample(m, n, rng)),
+            SketchKind::Sjlt { s } => Sketch::Sjlt(SjltSketch::sample(m, n, *s, rng)),
+        }
+    }
+
+    /// Flop estimate of forming `S A` for an n x d matrix (the
+    /// `C_sketch^{m,n,d}` cost of §4.1.1); used by the complexity
+    /// calculator behind Table 2.
+    pub fn sketch_cost_flops(&self, m: usize, n: usize, d: usize) -> f64 {
+        match self {
+            SketchKind::Gaussian => 2.0 * (m * n * d) as f64,
+            SketchKind::Srht => {
+                let np = next_pow2(n);
+                (np as f64) * (d as f64) * (np as f64).log2() + (m * d) as f64
+            }
+            SketchKind::Sjlt { s } => (*s * n * d) as f64 * 2.0,
+        }
+    }
+}
+
+/// A sampled sketching matrix. `apply` computes `S * A` without ever
+/// materializing dense `S` for the structured families.
+pub enum Sketch {
+    Gaussian(GaussianSketch),
+    Srht(SrhtSketch),
+    Sjlt(SjltSketch),
+}
+
+impl Sketch {
+    /// Number of rows m (embedding dimension).
+    pub fn m(&self) -> usize {
+        match self {
+            Sketch::Gaussian(s) => s.m(),
+            Sketch::Srht(s) => s.m(),
+            Sketch::Sjlt(s) => s.m(),
+        }
+    }
+
+    /// Number of columns n (original dimension).
+    pub fn n(&self) -> usize {
+        match self {
+            Sketch::Gaussian(s) => s.n(),
+            Sketch::Srht(s) => s.n(),
+            Sketch::Sjlt(s) => s.n(),
+        }
+    }
+
+    /// Compute `S * A` (`A` is n x d, result m x d).
+    pub fn apply(&self, a: &Matrix) -> Matrix {
+        match self {
+            Sketch::Gaussian(s) => s.apply(a),
+            Sketch::Srht(s) => s.apply(a),
+            Sketch::Sjlt(s) => s.apply(a),
+        }
+    }
+
+    /// Materialize dense `S` (tests / small-scale diagnostics only).
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut eye = Matrix::eye(n);
+        // S = S * I_n
+        let d = self.apply(&mut eye);
+        d
+    }
+}
+
+/// Scaled FWHT helper shared by SRHT: applies `H diag(signs)` to the rows
+/// axis of `a` after zero-padding rows to a power of two; returns the
+/// padded, transformed matrix (unnormalized Hadamard).
+pub(crate) fn hadamard_signs(a: &Matrix, signs: &[f64]) -> Matrix {
+    let np = next_pow2(a.rows);
+    assert_eq!(signs.len(), a.rows);
+    let mut x = a.pad_rows(np);
+    for i in 0..a.rows {
+        let s = signs[i];
+        if s != 1.0 {
+            for v in x.row_mut(i) {
+                *v *= s;
+            }
+        }
+    }
+    fwht_rows(&mut x);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, syrk_t};
+    use crate::testing::{check, PropConfig};
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }, SketchKind::Sjlt { s: 4 }] {
+            assert_eq!(SketchKind::parse(&k.name()), Some(k));
+        }
+        assert_eq!(SketchKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn apply_matches_dense_for_all_kinds() {
+        check("S.apply == dense(S) @ A", PropConfig { cases: 12, ..Default::default() }, |rng, case| {
+            let n = 8 + rng.below(40);
+            let d = 1 + rng.below(10);
+            let m = 1 + rng.below(n);
+            let kind = match case % 4 {
+                0 => SketchKind::Gaussian,
+                1 => SketchKind::Srht,
+                2 => SketchKind::Sjlt { s: 1 },
+                _ => SketchKind::Sjlt { s: 3.min(m) },
+            };
+            let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+            let s = kind.sample(m, n, rng);
+            let sa1 = s.apply(&a);
+            let sd = s.to_dense();
+            assert_eq!(sd.rows, m);
+            assert_eq!(sd.cols, n);
+            let sa2 = matmul(&sd, &a);
+            let diff = sa1.max_abs_diff(&sa2);
+            if diff > 1e-9 {
+                return Err(format!("{kind:?} n={n} d={d} m={m} diff={diff}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// E[S^T S] = I_n for all families: check the Gram of a tall stack of
+    /// sampled sketches concentrates near identity.
+    #[test]
+    fn unbiasedness_of_gram() {
+        let mut rng = Rng::seed_from(1234);
+        let n = 16;
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 4 }] {
+            // SRHT cannot exceed m = n_pad; dense families use m >> n
+            let m = if kind == SketchKind::Srht { n } else { 64 };
+            // average S^T S over several draws
+            let reps = 24;
+            let mut acc = Matrix::zeros(n, n);
+            for _ in 0..reps {
+                let s = kind.sample(m, n, &mut rng);
+                let sd = s.to_dense();
+                let g = syrk_t(&sd);
+                for i in 0..n * n {
+                    acc.data[i] += g.data[i] / reps as f64;
+                }
+            }
+            let eye = Matrix::eye(n);
+            let dev = acc.max_abs_diff(&eye);
+            assert!(dev < 0.25, "{kind:?}: E[S^T S] far from I (dev {dev})");
+        }
+    }
+
+    #[test]
+    fn sketch_cost_ordering() {
+        // for dense A and large m: sjlt < srht < gaussian
+        let (m, n, d) = (2048, 65536, 512);
+        let g = SketchKind::Gaussian.sketch_cost_flops(m, n, d);
+        let h = SketchKind::Srht.sketch_cost_flops(m, n, d);
+        let j = SketchKind::Sjlt { s: 1 }.sketch_cost_flops(m, n, d);
+        assert!(j < h && h < g);
+    }
+}

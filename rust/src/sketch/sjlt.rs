@@ -1,0 +1,119 @@
+//! Sparse Johnson–Lindenstrauss Transform (SJLT / OSNAP).
+//!
+//! For each column of `S`, `s` distinct rows are chosen uniformly without
+//! replacement and the corresponding entries are `±1/sqrt(s)`. Apply cost
+//! is `O(s · nnz(A))`, independent of the sketch size m. The paper uses
+//! s = 1 by default; the general `s >= 1` (OSNAP) is supported.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A sampled SJLT embedding in compressed per-column form.
+pub struct SjltSketch {
+    m: usize,
+    n: usize,
+    s: usize,
+    /// For column j, entries [j*s .. (j+1)*s) give the target rows.
+    rows: Vec<u32>,
+    /// Matching signs (already scaled by 1/sqrt(s)).
+    vals: Vec<f64>,
+}
+
+impl SjltSketch {
+    /// Sample an `m x n` SJLT with `s` nonzeros per column.
+    pub fn sample(m: usize, n: usize, s: usize, rng: &mut Rng) -> SjltSketch {
+        assert!(s >= 1, "SJLT: s must be >= 1");
+        let s = s.min(m); // cannot place more nonzeros than rows
+        let scale = 1.0 / (s as f64).sqrt();
+        let mut rows = Vec::with_capacity(n * s);
+        let mut vals = Vec::with_capacity(n * s);
+        for _ in 0..n {
+            if s == 1 {
+                // fast path: single row draw
+                rows.push(rng.below(m) as u32);
+                vals.push(rng.rademacher() * scale);
+            } else {
+                for r in rng.sample_without_replacement(s, m) {
+                    rows.push(r as u32);
+                    vals.push(rng.rademacher() * scale);
+                }
+            }
+        }
+        SjltSketch { m, n, s, rows, vals }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn nnz_per_col(&self) -> usize {
+        self.s
+    }
+
+    /// `S * A`: scatter-accumulate rows of A into the m output rows.
+    /// Cost `O(s · n · d)` for dense A (i.e. `O(s · nnz(A))`).
+    pub fn apply(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows, self.n, "apply: A must have n rows");
+        let d = a.cols;
+        let mut out = Matrix::zeros(self.m, d);
+        for j in 0..self.n {
+            let arow = a.row(j);
+            for k in 0..self.s {
+                let idx = j * self.s + k;
+                let r = self.rows[idx] as usize;
+                let v = self.vals[idx];
+                let orow = &mut out.data[r * d..r * d + d];
+                for t in 0..d {
+                    orow[t] += v * arow[t];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_structure() {
+        let mut rng = Rng::seed_from(61);
+        let s = SjltSketch::sample(10, 30, 3, &mut rng);
+        assert_eq!(s.nnz_per_col(), 3);
+        // per column: distinct rows, values ±1/sqrt(3)
+        for j in 0..30 {
+            let mut rs: Vec<u32> = s.rows[j * 3..(j + 1) * 3].to_vec();
+            rs.sort_unstable();
+            rs.dedup();
+            assert_eq!(rs.len(), 3, "column {j} has repeated rows");
+            for &v in &s.vals[j * 3..(j + 1) * 3] {
+                assert!((v.abs() - 1.0 / 3f64.sqrt()).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn s_clamped_to_m() {
+        let mut rng = Rng::seed_from(63);
+        let s = SjltSketch::sample(2, 5, 10, &mut rng);
+        assert_eq!(s.nnz_per_col(), 2);
+    }
+
+    #[test]
+    fn column_norms_preserved_exactly() {
+        // Each column of S has exactly unit norm, so ||S e_j|| = 1
+        let mut rng = Rng::seed_from(65);
+        let s = SjltSketch::sample(8, 12, 2, &mut rng);
+        let eye = Matrix::eye(12);
+        let sd = s.apply(&eye);
+        for j in 0..12 {
+            let norm2: f64 = sd.col(j).iter().map(|v| v * v).sum();
+            assert!((norm2 - 1.0).abs() < 1e-12);
+        }
+    }
+}

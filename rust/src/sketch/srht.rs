@@ -1,0 +1,114 @@
+//! Subsampled Randomized Hadamard Transform (SRHT).
+//!
+//! `S = sqrt(n'/m) * R * H * E` where `E = diag(signs)` (Rademacher),
+//! `H` is the normalized Hadamard transform of size `n' = next_pow2(n)`
+//! (data is zero-padded, the standard practice noted in the paper's
+//! footnote 2), and `R` subsamples `m` rows uniformly without replacement.
+//!
+//! Apply cost is `O(n' d log n')` independent of m — the favorable
+//! trade-off that makes the SRHT the default for dense data.
+
+use super::hadamard_signs;
+use crate::linalg::{next_pow2, Matrix};
+use crate::rng::Rng;
+
+/// A sampled SRHT embedding.
+pub struct SrhtSketch {
+    n: usize,
+    n_pad: usize,
+    m: usize,
+    /// Rademacher signs for E (length n — padding rows are zero anyway).
+    signs: Vec<f64>,
+    /// Row indices kept by R (m of them, sampled without replacement
+    /// from [0, n_pad)).
+    rows: Vec<usize>,
+}
+
+impl SrhtSketch {
+    /// Sample an SRHT for data with `n` rows, sketch size `m`.
+    pub fn sample(m: usize, n: usize, rng: &mut Rng) -> SrhtSketch {
+        let n_pad = next_pow2(n);
+        assert!(m <= n_pad, "SRHT: m must be <= padded n");
+        let signs = rng.rademacher_vec(n);
+        let rows = rng.sample_without_replacement(m, n_pad);
+        SrhtSketch { n, n_pad, m, signs, rows }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `S * A` via sign flip + FWHT + row subsampling + scaling.
+    ///
+    /// Normalization: the unnormalized FWHT computes `H_u = sqrt(n') H`,
+    /// and `S = sqrt(n'/m) R H E`, so the total scale on the output of the
+    /// unnormalized transform is `sqrt(n'/m) / sqrt(n') = 1/sqrt(m)`.
+    pub fn apply(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows, self.n, "apply: A must have n rows");
+        let x = hadamard_signs(a, &self.signs); // n_pad x d, unnormalized
+        let mut out = x.select_rows(&self.rows);
+        out.scale(1.0 / (self.m as f64).sqrt());
+        out
+    }
+
+    /// The padded dimension n' (exposed for cost accounting).
+    pub fn n_pad(&self) -> usize {
+        self.n_pad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_distinct_and_in_range() {
+        let mut rng = Rng::seed_from(51);
+        let s = SrhtSketch::sample(20, 100, &mut rng); // n_pad = 128
+        assert_eq!(s.n_pad(), 128);
+        let mut r = s.rows.clone();
+        r.sort_unstable();
+        r.dedup();
+        assert_eq!(r.len(), 20);
+        assert!(*r.last().unwrap() < 128);
+    }
+
+    #[test]
+    fn isometry_when_m_equals_npad() {
+        // With m = n' and no subsampling randomness beyond permutation,
+        // S is orthogonal up to scaling: ||S x||^2 = (n'/m) ||H E x||^2 = ||x_padded||^2
+        let mut rng = Rng::seed_from(53);
+        let n = 32; // power of two: no padding
+        let s = SrhtSketch::sample(n, n, &mut rng);
+        let a = Matrix::from_vec(n, 2, (0..n * 2).map(|_| rng.gaussian()).collect());
+        let sa = s.apply(&a);
+        // column norms preserved exactly (R is then a permutation)
+        for j in 0..2 {
+            let orig: f64 = a.col(j).iter().map(|v| v * v).sum();
+            let sk: f64 = sa.col(j).iter().map(|v| v * v).sum();
+            assert!((orig - sk).abs() < 1e-9 * orig);
+        }
+    }
+
+    #[test]
+    fn expectation_preserves_norms_with_padding() {
+        let mut rng = Rng::seed_from(55);
+        let n = 48; // pads to 64
+        let x: Vec<f64> = rng.gaussian_vec(n);
+        let xnorm2: f64 = x.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let reps = 80;
+        for _ in 0..reps {
+            let s = SrhtSketch::sample(16, n, &mut rng);
+            let xm = Matrix::from_vec(n, 1, x.clone());
+            let sx = s.apply(&xm);
+            acc += sx.data.iter().map(|v| v * v).sum::<f64>();
+        }
+        let ratio = acc / reps as f64 / xnorm2;
+        assert!((ratio - 1.0).abs() < 0.2, "ratio={ratio}");
+    }
+}

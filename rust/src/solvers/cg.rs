@@ -1,0 +1,127 @@
+//! Standard (unpreconditioned) conjugate gradient baseline on
+//! `H x = b`. Convergence degrades with the condition number — exactly the
+//! behaviour the paper's figures show for decreasing `nu`.
+
+use crate::linalg::{axpy, dot, norm2};
+use crate::problem::Problem;
+use crate::solvers::{ErrTracker, IterRecord, SolveReport, StopRule};
+use std::time::Instant;
+
+/// Conjugate gradient method (Hestenes–Stiefel) on the implicit `H`.
+pub struct ConjugateGradient;
+
+impl ConjugateGradient {
+    /// Run CG from `x0 = 0` with the given stopping rule. `x_star` (if
+    /// provided) enables exact-error tracing for the figures.
+    pub fn solve(prob: &Problem, stop: StopRule, x_star: Option<&[f64]>) -> SolveReport {
+        let d = prob.d();
+        let n = prob.n();
+        let t0 = Instant::now();
+        let x0 = vec![0.0; d];
+        let err = ErrTracker::new(prob, &x0, x_star);
+
+        let mut x = x0;
+        // r = b - Hx = b at x0 = 0
+        let mut r = prob.b.clone();
+        let mut p = r.clone();
+        let mut rs = dot(&r, &r);
+        let rs0 = rs.max(1e-300);
+        let mut hp = vec![0.0; d];
+        let mut work = vec![0.0; n];
+
+        let mut trace = vec![IterRecord {
+            t: 0,
+            secs: 0.0,
+            m: 0,
+            delta_tilde: 0.5 * rs, // ||grad||^2/2: no preconditioner
+            delta_rel: if x_star.is_some() { 1.0 } else { f64::NAN },
+        }];
+
+        let mut t = 0;
+        while t < stop.max_iters {
+            prob.hess_apply(&p, &mut hp, &mut work);
+            let php = dot(&p, &hp);
+            if php <= 0.0 || !php.is_finite() {
+                break; // numerical breakdown
+            }
+            let alpha = rs / php;
+            axpy(alpha, &p, &mut x);
+            axpy(-alpha, &hp, &mut r);
+            let rs_new = dot(&r, &r);
+            let beta = rs_new / rs;
+            for i in 0..d {
+                p[i] = r[i] + beta * p[i];
+            }
+            rs = rs_new;
+            t += 1;
+            trace.push(IterRecord {
+                t,
+                secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+                m: 0,
+                delta_tilde: 0.5 * rs,
+                delta_rel: err.rel(prob, &x),
+            });
+            if stop.tol > 0.0 && rs / rs0 <= stop.tol * stop.tol {
+                break;
+            }
+        }
+
+        let _ = norm2(&r);
+        SolveReport {
+            method: "cg".into(),
+            x,
+            iterations: t,
+            trace,
+            final_m: 0,
+            sketch_doublings: 0,
+            secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+            sketch_flops: 0.0,
+            factor_flops: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+    use crate::solvers::DirectSolver;
+
+    #[test]
+    fn converges_on_well_conditioned() {
+        let mut rng = Rng::seed_from(91);
+        let (n, d) = (60, 15);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = rng.gaussian_vec(d);
+        let prob = Problem::ridge(a, b, 1.0);
+        let exact = DirectSolver::solve(&prob).unwrap();
+        let rep = ConjugateGradient::solve(&prob, StopRule { max_iters: 200, tol: 1e-12 }, Some(&exact.x));
+        assert!(rep.final_error_rel() < 1e-12, "rel err {}", rep.final_error_rel());
+        // CG on d-dim quadratic converges in <= d iterations (exact arithmetic)
+        assert!(rep.iterations <= 40);
+    }
+
+    #[test]
+    fn slow_on_ill_conditioned() {
+        // exponential spectral decay + tiny nu => large condition number:
+        // CG needs many more iterations than d_e would suggest
+        let mut rng = Rng::seed_from(93);
+        let (n, d) = (128, 32);
+        let mut a = Matrix::zeros(n, d);
+        for j in 0..d {
+            a.set(j, j, 0.7f64.powi(j as i32));
+        }
+        // random rotation of rows to make it non-trivial
+        for i in d..n {
+            for j in 0..d {
+                a.set(i, j, 1e-4 * rng.gaussian());
+            }
+        }
+        let b = rng.gaussian_vec(d);
+        let prob = Problem::ridge(a, b, 1e-5);
+        let exact = DirectSolver::solve(&prob).unwrap();
+        let rep10 = ConjugateGradient::solve(&prob, StopRule { max_iters: 5, tol: 0.0 }, Some(&exact.x));
+        assert!(rep10.final_error_rel() > 1e-8, "should not converge in 5 iters");
+    }
+}

@@ -1,0 +1,186 @@
+//! Solver suite: the baselines (direct, CG, fixed-sketch PCG/IHS) and the
+//! preconditioned first-order methods the adaptive controller drives.
+//!
+//! The central abstraction is [`PreconditionedMethod`] — the paper's
+//! Definition 2.3 made operational: a method that, given a preconditioner
+//! `H_S`, proposes the next iterate from the span of preconditioned
+//! gradients, and exposes its `(ρ, φ(ρ), α)`-linear-convergence certificate
+//! (Condition 2.4) so Algorithm 4.1 can run its improvement test.
+
+pub mod block_pcg;
+pub mod cg;
+pub mod direct;
+pub mod ihs;
+pub mod pcg;
+pub mod polyak;
+
+pub use block_pcg::{BlockPcg, BlockSolveReport};
+pub use cg::ConjugateGradient;
+pub use direct::DirectSolver;
+pub use ihs::Ihs;
+pub use pcg::Pcg;
+pub use polyak::PolyakIhs;
+
+use crate::precond::SketchedPreconditioner;
+use crate::problem::Problem;
+
+/// A preconditioned first-order method (Definition 2.3) with a
+/// `(ρ, φ(ρ), α)`-linear-convergence certificate (Condition 2.4).
+///
+/// Protocol: `restart` at a point with a (possibly new) preconditioner,
+/// then repeat `propose` → (`commit` | discard). A proposal carries the
+/// candidate iterate and its approximate Newton decrement
+/// `δ̃⁺ = 1/2 ∇f(x⁺)ᵀ H_S⁻¹ ∇f(x⁺)` (eq. 2.3), the quantity the adaptive
+/// improvement test consumes.
+pub trait PreconditionedMethod {
+    /// Method name for reports.
+    fn name(&self) -> &'static str;
+
+    /// The `α` constant of Condition 2.4.
+    fn alpha(&self) -> f64;
+
+    /// The rate function `φ(ρ)` of Condition 2.4.
+    fn phi(&self, rho: f64) -> f64;
+
+    /// Reset state to start at `x` with preconditioner `pre`.
+    fn restart(&mut self, prob: &Problem, pre: &SketchedPreconditioner, x: &[f64]);
+
+    /// Re-anchor at the *current* iterate with a new preconditioner.
+    /// Default: full restart. Methods that already hold `∇f(x_t)` override
+    /// this to skip the O(nd) gradient recomputation — the §Perf fix that
+    /// removed one full data pass per sketch-size doubling.
+    fn rebase(&mut self, prob: &Problem, pre: &SketchedPreconditioner) {
+        let x = self.current().to_vec();
+        self.restart(prob, pre, &x);
+    }
+
+    /// Compute the candidate next iterate and its approximate Newton
+    /// decrement `δ̃⁺` without committing.
+    fn propose(&mut self, prob: &Problem, pre: &SketchedPreconditioner) -> Proposal;
+
+    /// Accept the last proposal: the candidate becomes the current iterate.
+    fn commit(&mut self);
+
+    /// Current iterate.
+    fn current(&self) -> &[f64];
+
+    /// Approximate Newton decrement at the current iterate.
+    fn current_decrement(&self) -> f64;
+
+    /// `‖∇f(x_t)‖²` at the current iterate (preconditioner-independent).
+    fn current_grad_norm2(&self) -> f64;
+}
+
+/// A proposed iterate from a preconditioned method.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    pub x_plus: Vec<f64>,
+    /// `δ̃⁺ = 1/2 ∇f(x⁺)ᵀ H_S⁻¹ ∇f(x⁺)`.
+    pub delta_tilde_plus: f64,
+    /// `‖∇f(x⁺)‖²` — preconditioner-independent, used for termination
+    /// across sketch-size changes (Remark 4.2 discussion).
+    pub grad_norm2_plus: f64,
+}
+
+/// One row of a solver trace: everything the paper's figures plot.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    /// Iteration index (accepted iterations only).
+    pub t: usize,
+    /// Cumulative wall-clock seconds since solve start.
+    pub secs: f64,
+    /// Sketch size in effect (0 for unsketched methods).
+    pub m: usize,
+    /// Approximate Newton decrement `δ̃_t` (NaN for methods without one).
+    pub delta_tilde: f64,
+    /// Exact relative error `δ_t/δ_0` when `x*` was provided, else NaN.
+    pub delta_rel: f64,
+}
+
+/// Full outcome of a solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    pub method: String,
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub trace: Vec<IterRecord>,
+    /// Final sketch size (0 for unsketched methods).
+    pub final_m: usize,
+    /// Number of times the sketch size was increased (adaptive only).
+    pub sketch_doublings: usize,
+    /// Wall-clock seconds total.
+    pub secs: f64,
+    /// Accounting: flops spent sketching / factorizing (estimates).
+    pub sketch_flops: f64,
+    pub factor_flops: f64,
+}
+
+impl SolveReport {
+    /// `δ̃_T / δ̃_0` — the decrement-based convergence measure.
+    pub fn final_residual_decrement(&self) -> f64 {
+        match (self.trace.first(), self.trace.last()) {
+            (Some(f), Some(l)) if f.delta_tilde > 0.0 => l.delta_tilde / f.delta_tilde,
+            _ => f64::NAN,
+        }
+    }
+
+    /// `δ_T / δ_0` when x* was provided to the tracer.
+    pub fn final_error_rel(&self) -> f64 {
+        self.trace.last().map(|r| r.delta_rel).unwrap_or(f64::NAN)
+    }
+}
+
+/// Helper shared by solver loops: compute the exact relative error
+/// `δ_t/δ_0` against an optional reference solution.
+///
+/// Error evaluation costs O(nd) — comparable to a whole solver iteration —
+/// so the tracker measures its own time; loops subtract [`overhead`] from
+/// wall-clock so the figures' time axis reflects the solver, not the
+/// instrumentation.
+pub(crate) struct ErrTracker<'a> {
+    x_star: Option<&'a [f64]>,
+    delta0: f64,
+    overhead: std::cell::Cell<f64>,
+}
+
+impl<'a> ErrTracker<'a> {
+    pub fn new(prob: &Problem, x0: &[f64], x_star: Option<&'a [f64]>) -> Self {
+        let delta0 = match x_star {
+            Some(xs) => prob.error_to(x0, xs).max(1e-300),
+            None => 1.0,
+        };
+        ErrTracker { x_star, delta0, overhead: std::cell::Cell::new(0.0) }
+    }
+
+    pub fn rel(&self, prob: &Problem, x: &[f64]) -> f64 {
+        match self.x_star {
+            Some(xs) => {
+                let t = std::time::Instant::now();
+                let e = prob.error_to(x, xs) / self.delta0;
+                self.overhead.set(self.overhead.get() + t.elapsed().as_secs_f64());
+                e
+            }
+            None => f64::NAN,
+        }
+    }
+
+    /// Seconds spent inside `rel` so far.
+    pub fn overhead(&self) -> f64 {
+        self.overhead.get()
+    }
+}
+
+/// Stop criteria shared by the fixed-size solver loops.
+#[derive(Clone, Copy, Debug)]
+pub struct StopRule {
+    /// Maximum accepted iterations.
+    pub max_iters: usize,
+    /// Stop when `δ̃_t/δ̃_0 <= tol` (set 0.0 to disable).
+    pub tol: f64,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        StopRule { max_iters: 100, tol: 0.0 }
+    }
+}

@@ -1,0 +1,298 @@
+//! Polyak-IHS: the IHS update with heavy-ball momentum (eq. A.1), a.k.a.
+//! preconditioned Chebyshev / second-order Richardson iteration.
+//!
+//! Parameters (Corollary A.2): `μ_ρ = 2(1−ρ)/(1+sqrt(1−ρ))`,
+//! `β_ρ = (1−sqrt(1−ρ))/(1+sqrt(1−ρ))`. Asymptotically it matches the PCG
+//! rate; the finite-time certificate `α(t,ρ)·β_ρ^{ω(t)}` (Table 3) is too
+//! loose to drive the adaptive test, which is why the paper (and this
+//! library) mark adaptive Polyak-IHS experimental.
+
+use crate::linalg::{axpy, dot};
+use crate::precond::SketchedPreconditioner;
+use crate::problem::Problem;
+use crate::solvers::{ErrTracker, IterRecord, PreconditionedMethod, Proposal, SolveReport, StopRule};
+use std::time::Instant;
+
+/// Heavy-ball step/momentum parameters for a given ρ (Corollary A.2).
+pub fn polyak_params(rho: f64) -> (f64, f64) {
+    let s = (1.0 - rho).sqrt();
+    let mu = 2.0 * (1.0 - rho) / (1.0 + s);
+    let beta = (1.0 - s) / (1.0 + s);
+    (mu, beta)
+}
+
+/// Polyak-IHS state implementing [`PreconditionedMethod`].
+pub struct PolyakIhs {
+    pub rho: f64,
+    x: Vec<f64>,
+    x_prev: Vec<f64>,
+    g: Vec<f64>,
+    v: Vec<f64>,
+    decrement: f64,
+    pending: Option<PendingP>,
+    work: Vec<f64>,
+}
+
+struct PendingP {
+    x: Vec<f64>,
+    g: Vec<f64>,
+    v: Vec<f64>,
+    decrement: f64,
+}
+
+impl PolyakIhs {
+    pub fn new(rho: f64, d: usize, n: usize) -> PolyakIhs {
+        PolyakIhs {
+            rho,
+            x: vec![0.0; d],
+            x_prev: vec![0.0; d],
+            g: vec![0.0; d],
+            v: vec![0.0; d],
+            decrement: 0.0,
+            pending: None,
+            work: vec![0.0; n],
+        }
+    }
+
+    fn refresh_at(&mut self, prob: &Problem, pre: &SketchedPreconditioner) {
+        prob.gradient(&self.x, &mut self.g, &mut self.work);
+        self.v.copy_from_slice(&self.g);
+        pre.solve_in_place(&mut self.v);
+        self.decrement = 0.5 * dot(&self.g, &self.v);
+    }
+
+    /// Fixed-preconditioner loop.
+    pub fn solve_fixed(
+        prob: &Problem,
+        pre: &SketchedPreconditioner,
+        rho: f64,
+        stop: StopRule,
+        x_star: Option<&[f64]>,
+    ) -> SolveReport {
+        let d = prob.d();
+        let t0 = Instant::now();
+        let x0 = vec![0.0; d];
+        let err = ErrTracker::new(prob, &x0, x_star);
+        let mut pk = PolyakIhs::new(rho, d, prob.n());
+        pk.restart(prob, pre, &x0);
+        let d0 = pk.current_decrement().max(1e-300);
+        let mut trace = vec![IterRecord {
+            t: 0,
+            secs: 0.0,
+            m: pre.m,
+            delta_tilde: d0,
+            delta_rel: if x_star.is_some() { 1.0 } else { f64::NAN },
+        }];
+        let mut t = 0;
+        while t < stop.max_iters {
+            let prop = pk.propose(prob, pre);
+            pk.commit();
+            t += 1;
+            trace.push(IterRecord {
+                t,
+                secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+                m: pre.m,
+                delta_tilde: prop.delta_tilde_plus,
+                delta_rel: err.rel(prob, pk.current()),
+            });
+            if stop.tol > 0.0 && prop.delta_tilde_plus / d0 <= stop.tol {
+                break;
+            }
+        }
+        SolveReport {
+            method: "polyak_ihs".into(),
+            x: pk.current().to_vec(),
+            iterations: t,
+            trace,
+            final_m: pre.m,
+            sketch_doublings: 0,
+            secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+            sketch_flops: 0.0,
+            factor_flops: pre.factor_flops,
+        }
+    }
+}
+
+impl PreconditionedMethod for PolyakIhs {
+    fn name(&self) -> &'static str {
+        "polyak_ihs"
+    }
+
+    /// Worst-case finite-time constant from Corollary A.2 at t=1; the
+    /// adaptive test with this α is correct but very conservative (the
+    /// paper's point about impracticality — kept for completeness).
+    fn alpha(&self) -> f64 {
+        bound::alpha_t(1.0, self.rho)
+    }
+
+    fn phi(&self, rho: f64) -> f64 {
+        let s = (1.0 - rho).sqrt();
+        (1.0 - s) / (1.0 + s)
+    }
+
+    fn restart(&mut self, prob: &Problem, pre: &SketchedPreconditioner, x: &[f64]) {
+        self.x.copy_from_slice(x);
+        self.x_prev.copy_from_slice(x);
+        self.pending = None;
+        self.refresh_at(prob, pre);
+    }
+
+    fn propose(&mut self, prob: &Problem, pre: &SketchedPreconditioner) -> Proposal {
+        let (mu, beta) = polyak_params(self.rho);
+        let mut x_plus = self.x.clone();
+        axpy(-mu, &self.v, &mut x_plus);
+        // momentum term beta (x_t - x_{t-1})
+        for i in 0..x_plus.len() {
+            x_plus[i] += beta * (self.x[i] - self.x_prev[i]);
+        }
+        let mut g_plus = vec![0.0; x_plus.len()];
+        prob.gradient(&x_plus, &mut g_plus, &mut self.work);
+        let mut v_plus = g_plus.clone();
+        pre.solve_in_place(&mut v_plus);
+        let dec_plus = 0.5 * dot(&g_plus, &v_plus);
+        let grad_norm2 = dot(&g_plus, &g_plus);
+        self.pending = Some(PendingP { x: x_plus.clone(), g: g_plus, v: v_plus, decrement: dec_plus });
+        Proposal { x_plus, delta_tilde_plus: dec_plus, grad_norm2_plus: grad_norm2 }
+    }
+
+    fn rebase(&mut self, _prob: &Problem, pre: &SketchedPreconditioner) {
+        self.x_prev.copy_from_slice(&self.x); // kill stale momentum
+        self.v.copy_from_slice(&self.g);
+        pre.solve_in_place(&mut self.v);
+        self.decrement = 0.5 * dot(&self.g, &self.v);
+        self.pending = None;
+    }
+
+    fn commit(&mut self) {
+        let p = self.pending.take().expect("commit without propose");
+        std::mem::swap(&mut self.x_prev, &mut self.x);
+        self.x = p.x;
+        self.g = p.g;
+        self.v = p.v;
+        self.decrement = p.decrement;
+    }
+
+    fn current(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn current_decrement(&self) -> f64 {
+        self.decrement
+    }
+
+    fn current_grad_norm2(&self) -> f64 {
+        dot(&self.g, &self.g)
+    }
+}
+
+/// The finite-time certificate of Corollary A.2 / Table 3.
+pub mod bound {
+    /// `ν(t) = log(t)/log(2) + 1`.
+    pub fn nu_t(t: f64) -> f64 {
+        t.ln() / 2f64.ln() + 1.0
+    }
+
+    /// `ω(t) = t − 2ν(t)`.
+    pub fn omega_t(t: f64) -> f64 {
+        t - 2.0 * nu_t(t)
+    }
+
+    /// `β_ρ`.
+    pub fn beta_rho(rho: f64) -> f64 {
+        let s = (1.0 - rho).sqrt();
+        (1.0 - s) / (1.0 + s)
+    }
+
+    /// `α(t,ρ) = 3^{ν(ν+1)} (1 + 4β + β²)^{2ν}`.
+    pub fn alpha_t(t: f64, rho: f64) -> f64 {
+        let nu = nu_t(t);
+        let b = beta_rho(rho);
+        3f64.powf(nu * (nu + 1.0)) * (1.0 + 4.0 * b + b * b).powf(2.0 * nu)
+    }
+
+    /// Table 3 cell: `(α(t,ρ) · β_ρ^{ω(t)})^{1/t}`; `t = +inf` → `β_ρ`.
+    pub fn table3_cell(t: f64, rho: f64) -> f64 {
+        if !t.is_finite() {
+            return beta_rho(rho);
+        }
+        // work in logs to avoid overflow at small t (alpha is astronomical)
+        let nu = nu_t(t);
+        let b = beta_rho(rho);
+        let log_alpha = nu * (nu + 1.0) * 3f64.ln() + 2.0 * nu * (1.0 + 4.0 * b + b * b).ln();
+        let log_val = log_alpha + omega_t(t) * b.ln();
+        (log_val / t).exp()
+    }
+
+    /// Is convergence guaranteed faster than the IHS at (t, ρ)? I.e. the
+    /// bold-cell condition of Table 3: `α(t,ρ)β_ρ^{ω(t)} <= ρ^t`.
+    pub fn beats_ihs(t: f64, rho: f64) -> bool {
+        table3_cell(t, rho) <= rho
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+    use crate::sketch::SketchKind;
+    use crate::solvers::DirectSolver;
+
+    #[test]
+    fn params_match_paper() {
+        let rho = 0.1f64;
+        let (mu, beta) = polyak_params(rho);
+        let s = (1.0f64 - rho).sqrt();
+        assert!((mu - 2.0 * (1.0 - rho) / (1.0 + s)).abs() < 1e-15);
+        assert!((beta - (1.0 - s) / (1.0 + s)).abs() < 1e-15);
+        // beta_rho ~ rho/4 for small rho (eq. A.8)
+        assert!((bound::beta_rho(1e-4) / (1e-4 / 4.0) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn converges_and_accelerates() {
+        let mut rng = Rng::seed_from(121);
+        let (n, d) = (300, 16);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = rng.gaussian_vec(d);
+        let prob = Problem::ridge(a, b, 0.3);
+        let exact = DirectSolver::solve(&prob).unwrap();
+        // rho must upper-bound the actual embedding deviation, otherwise
+        // the heavy-ball roots leave the unit circle: use a strong sketch.
+        let rho = 0.4;
+        let sk = SketchKind::Gaussian.sample(256, n, &mut rng);
+        let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+        let stop = StopRule { max_iters: 60, tol: 0.0 };
+        let rep_polyak = PolyakIhs::solve_fixed(&prob, &pre, rho, stop, Some(&exact.x));
+        let rep_ihs = crate::solvers::Ihs::solve_fixed(&prob, &pre, rho, stop, Some(&exact.x));
+        assert!(rep_polyak.final_error_rel() < 1e-8, "polyak {}", rep_polyak.final_error_rel());
+        // asymptotically polyak should be at least as good as plain IHS
+        assert!(
+            rep_polyak.final_error_rel() <= rep_ihs.final_error_rel() * 10.0,
+            "polyak {} vs ihs {}",
+            rep_polyak.final_error_rel(),
+            rep_ihs.final_error_rel()
+        );
+    }
+
+    #[test]
+    fn table3_reference_values() {
+        // Paper Table 3, rho = 0.05 row: t=10 → 5.6 ; t=inf → 1.2e-2 ...
+        // and rho=0.01: t=100 → 1.3e-2. Check order of magnitude agreement.
+        let v10 = bound::table3_cell(10.0, 0.05);
+        assert!((v10 / 7.2 - 1.0).abs() < 0.25, "t=10 rho=0.05: {v10}");
+        let vinf = bound::table3_cell(f64::INFINITY, 0.05);
+        assert!((vinf / 1.2e-2 - 1.0).abs() < 0.25, "t=inf rho=0.05: {vinf}");
+        let v100 = bound::table3_cell(100.0, 0.01);
+        assert!((v100 / 1.3e-2 - 1.0).abs() < 0.3, "t=100 rho=0.01: {v100}");
+    }
+
+    #[test]
+    fn beats_ihs_needs_many_iterations() {
+        // the paper: t >~ 100 needed for rho in {0.1, ..., 0.001}
+        for &rho in &[0.1, 0.05, 0.01] {
+            assert!(!bound::beats_ihs(10.0, rho), "rho={rho} t=10 should not beat IHS");
+            assert!(bound::beats_ihs(300.0, rho), "rho={rho} t=300 should beat IHS");
+        }
+    }
+}

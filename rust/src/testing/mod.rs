@@ -1,0 +1,145 @@
+//! Mini property-based testing framework.
+//!
+//! proptest is unavailable in this offline image; this module provides the
+//! subset the test-suite uses: seeded generators over the crate's own `Rng`,
+//! a case runner that reports the failing seed/case, and shrinking for
+//! integer sizes (halving). Property tests across the repo are written
+//! against `check`/`check_sized`.
+
+use crate::rng::Rng;
+
+/// Configuration of a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Seed can be pinned via SKETCHSOLVE_PROP_SEED for reproduction.
+        let seed = std::env::var("SKETCHSOLVE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        PropConfig { cases: 32, seed }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. `prop` gets a per-case RNG and
+/// the case index; it returns `Err(msg)` to signal a failure.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut master = Rng::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.fork(case as u64);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {}): {msg}\n\
+                 reproduce with SKETCHSOLVE_PROP_SEED={}",
+                cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Like `check`, but draws a size in `[lo, hi]` per case and shrinks the
+/// size by halving toward `lo` on failure, reporting the smallest failing
+/// size.
+pub fn check_sized<F>(name: &str, cfg: PropConfig, lo: usize, hi: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    assert!(lo <= hi);
+    let mut master = Rng::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.fork(case as u64);
+        let size = lo + rng.below(hi - lo + 1);
+        let mut failing: Option<(usize, String)> = None;
+        if let Err(msg) = prop(&mut rng.clone(), size) {
+            failing = Some((size, msg));
+            // shrink: bisect toward the smallest failing size (best-effort;
+            // exact when the failure set is upward-closed in size).
+            let mut hi_fail = size;
+            let mut lo_pass = lo; // candidate passing bound
+            if lo_pass < hi_fail {
+                match prop(&mut rng.clone(), lo_pass) {
+                    Err(m) => {
+                        failing = Some((lo_pass, m));
+                    }
+                    Ok(()) => {
+                        while hi_fail - lo_pass > 1 {
+                            let mid = lo_pass + (hi_fail - lo_pass) / 2;
+                            match prop(&mut rng.clone(), mid) {
+                                Err(m) => {
+                                    failing = Some((mid, m));
+                                    hi_fail = mid;
+                                }
+                                Ok(()) => lo_pass = mid,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((sz, msg)) = failing {
+            panic!(
+                "property '{name}' failed at size {sz} (case {case}, seed {}): {msg}\n\
+                 reproduce with SKETCHSOLVE_PROP_SEED={}",
+                cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Assert two floats are close in relative terms.
+pub fn assert_close(a: f64, b: f64, rtol: f64, what: &str) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    if (a - b).abs() / denom > rtol {
+        Err(format!("{what}: {a} vs {b} (rtol {rtol})"))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivially true", PropConfig { cases: 10, seed: 1 }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", PropConfig { cases: 3, seed: 2 }, |_, _| Err("boom".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at size 10")]
+    fn shrinking_reaches_minimal_size() {
+        // fails for any size >= 10; lo=1, so shrinking should land on 10
+        check_sized(
+            "fails at >=10",
+            PropConfig { cases: 5, seed: 3 },
+            1,
+            100,
+            |_, size| if size >= 10 { Err("too big".into()) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn close_check() {
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Tiny command-line flag parser (`--key value`, `--switch`, positionals).
+
+use std::collections::HashMap;
+
+/// Parsed command-line flags.
+#[derive(Debug, Clone, Default)]
+pub struct Flags {
+    pub positional: Vec<String>,
+    values: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Flags {
+    /// Parse from an explicit argument list (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Flags {
+        let mut f = Flags::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    f.values.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    f.values.insert(name.to_string(), v);
+                } else {
+                    f.switches.push(name.to_string());
+                }
+            } else {
+                f.positional.push(arg);
+            }
+        }
+        f
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Flags {
+        Flags::parse_from(std::env::args().skip(1))
+    }
+
+    /// String value of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed value of `--key`.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Typed value with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get_parse(key).unwrap_or(default)
+    }
+
+    /// Is `--name` present as a bare switch (or as `--name true`)?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.get(name) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Flags {
+        Flags::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn values_switches_positionals() {
+        let f = parse("solve --n 100 --verbose --out=res.csv data.txt");
+        assert_eq!(f.positional, vec!["solve", "data.txt"]);
+        assert_eq!(f.get_parse::<usize>("n"), Some(100));
+        assert!(f.has("verbose"));
+        assert_eq!(f.get("out"), Some("res.csv"));
+        assert!(!f.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let f = parse("bench");
+        assert_eq!(f.get_parse_or::<f64>("rho", 0.125), 0.125);
+        assert_eq!(f.get_or("sketch", "sjlt"), "sjlt");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let f = parse("--shift -3");
+        // "-3" does not start with --, so it is consumed as the value
+        assert_eq!(f.get_parse::<i32>("shift"), Some(-3));
+    }
+}

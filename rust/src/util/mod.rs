@@ -1,0 +1,12 @@
+//! Small utilities: CLI flag parsing, JSON/CSV emission, timing.
+//!
+//! clap/serde/criterion are unavailable in this offline image, so the repo
+//! carries minimal equivalents sized to what the binaries actually need.
+
+pub mod flags;
+pub mod json;
+pub mod timer;
+
+pub use flags::Flags;
+pub use json::JsonValue;
+pub use timer::Stopwatch;

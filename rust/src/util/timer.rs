@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Simple stopwatch accumulating named phases (sketching, factorization,
+/// iteration...) so the complexity accounting of §4.1 can be measured.
+#[derive(Debug, Clone, Default)]
+pub struct Stopwatch {
+    laps: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch::default()
+    }
+
+    /// Time a closure and record it under `name`; returns the closure value.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.laps.push((name.to_string(), t0.elapsed().as_secs_f64()));
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn record(&mut self, name: &str, secs: f64) {
+        self.laps.push((name.to_string(), secs));
+    }
+
+    /// Total seconds recorded under `name`.
+    pub fn total(&self, name: &str) -> f64 {
+        self.laps.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
+    }
+
+    /// Grand total.
+    pub fn grand_total(&self) -> f64 {
+        self.laps.iter().map(|(_, t)| t).sum()
+    }
+
+    /// (name, total) pairs in first-seen order.
+    pub fn summary(&self) -> Vec<(String, f64)> {
+        let mut order: Vec<String> = Vec::new();
+        for (n, _) in &self.laps {
+            if !order.contains(n) {
+                order.push(n.clone());
+            }
+        }
+        order.into_iter().map(|n| (n.clone(), self.total(&n))).collect()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.record("a", 1.0);
+        sw.record("b", 2.0);
+        sw.record("a", 0.5);
+        assert!((sw.total("a") - 1.5).abs() < 1e-12);
+        assert!((sw.grand_total() - 3.5).abs() < 1e-12);
+        let s = sw.summary();
+        assert_eq!(s[0].0, "a");
+        assert_eq!(s[1].0, "b");
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, t) = timed(|| 7);
+        assert_eq!(v, 7);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: PJRT engine executing the AOT artifacts vs the native
+//! linalg path. Requires `make artifacts`; tests no-op (pass) when the
+//! artifacts directory is absent so `cargo test` works pre-build.
+
+use sketchsolve::linalg::{fwht_rows, matvec, matvec_t, syrk_t, Matrix};
+use sketchsolve::rng::Rng;
+use sketchsolve::runtime::Engine;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SKETCHSOLVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_engine() -> Option<Engine> {
+    let dir = artifacts_dir()?;
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+/// f32 artifacts vs f64 native: relative tolerance on the output.
+const RTOL: f64 = 2e-3;
+
+fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    let denom = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+    let diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt();
+    diff / denom
+}
+
+#[test]
+fn gradient_artifact_matches_native() {
+    let Some(engine) = load_engine() else { return };
+    let (n, d) = (4096usize, 512usize);
+    if !engine.has("gradient", &[n, d]) {
+        eprintln!("skipping: gradient artifact for {n}x{d} not present");
+        return;
+    }
+    let mut rng = Rng::seed_from(7);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian() / (n as f64).sqrt()).collect());
+    let x = rng.gaussian_vec(d);
+    let b = rng.gaussian_vec(d);
+    let lam = vec![1.0; d];
+    let nu2 = [0.01f64];
+
+    let outs = engine
+        .run_f64(
+            "gradient",
+            &[n, d],
+            &[
+                (&a.data, &[n, d]),
+                (&x, &[d]),
+                (&b, &[d]),
+                (&lam, &[d]),
+                (&nu2, &[1]),
+            ],
+        )
+        .expect("run gradient");
+    assert_eq!(outs.len(), 1);
+
+    // native
+    let prob = sketchsolve::problem::Problem::ridge(a, b, 0.1);
+    let mut g = vec![0.0; d];
+    let mut work = vec![0.0; n];
+    prob.gradient(&x, &mut g, &mut work);
+    let e = rel_err(&outs[0], &g);
+    assert!(e < RTOL, "gradient rel err {e}");
+}
+
+#[test]
+fn sketch_gram_artifact_matches_native() {
+    let Some(engine) = load_engine() else { return };
+    let d = 512usize;
+    let m = 256usize;
+    if !engine.has("sketch_gram", &[m, d]) {
+        eprintln!("skipping: sketch_gram artifact not present");
+        return;
+    }
+    let mut rng = Rng::seed_from(9);
+    let sa = Matrix::from_vec(m, d, (0..m * d).map(|_| rng.gaussian() / (m as f64).sqrt()).collect());
+    let lam = vec![1.0; d];
+    let nu2 = [0.04f64];
+    let outs = engine
+        .run_f64("sketch_gram", &[m, d], &[(&sa.data, &[m, d]), (&lam, &[d]), (&nu2, &[1])])
+        .expect("run sketch_gram");
+    let mut want = syrk_t(&sa);
+    for i in 0..d {
+        want.data[i * d + i] += 0.04;
+    }
+    let e = rel_err(&outs[0], &want.data);
+    assert!(e < RTOL, "sketch_gram rel err {e}");
+}
+
+#[test]
+fn fwht_artifact_matches_native() {
+    let Some(engine) = load_engine() else { return };
+    let (n, d) = (4096usize, 512usize);
+    if !engine.has("fwht", &[n, d]) {
+        eprintln!("skipping: fwht artifact not present");
+        return;
+    }
+    let mut rng = Rng::seed_from(11);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+    let outs = engine.run_f64("fwht", &[n, d], &[(&a.data, &[n, d])]).expect("run fwht");
+    let mut want = a.clone();
+    fwht_rows(&mut want);
+    // FWHT output magnitudes grow like sqrt(n); use relative error
+    let e = rel_err(&outs[0], &want.data);
+    assert!(e < RTOL, "fwht rel err {e}");
+}
+
+#[test]
+fn hess_apply_artifact_matches_native() {
+    let Some(engine) = load_engine() else { return };
+    let (n, d) = (4096usize, 512usize);
+    if !engine.has("hess_apply", &[n, d]) {
+        return;
+    }
+    let mut rng = Rng::seed_from(13);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian() / (n as f64).sqrt()).collect());
+    let p = rng.gaussian_vec(d);
+    let lam: Vec<f64> = (0..d).map(|_| 1.0 + rng.uniform()).collect();
+    let nu2 = [0.09f64];
+    let outs = engine
+        .run_f64("hess_apply", &[n, d], &[(&a.data, &[n, d]), (&p, &[d]), (&lam, &[d]), (&nu2, &[1])])
+        .expect("run hess_apply");
+    // native: A^T(Ap) + nu2*lam*p
+    let ap = matvec(&a, &p);
+    let mut want = matvec_t(&a, &ap);
+    for i in 0..d {
+        want[i] += 0.09 * lam[i] * p[i];
+    }
+    let e = rel_err(&outs[0], &want);
+    assert!(e < RTOL, "hess_apply rel err {e}");
+}
+
+#[test]
+fn engine_inventory_lists_all_ops() {
+    let Some(engine) = load_engine() else { return };
+    let ops: std::collections::HashSet<&str> =
+        engine.artifacts().iter().map(|a| a.op.as_str()).collect();
+    for op in ["gradient", "hess_apply", "fwht", "sketch_gram"] {
+        assert!(ops.contains(op), "missing op {op}");
+    }
+    assert!(engine.platform().contains("cpu") || !engine.platform().is_empty());
+}

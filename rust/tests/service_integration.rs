@@ -1,0 +1,96 @@
+//! Coordinator integration: service + batcher over proxy datasets
+//! (the multiclass ridge serving scenario of the paper's real-data
+//! experiments).
+
+use sketchsolve::adaptive::AdaptiveConfig;
+use sketchsolve::coordinator::{JobSpec, MultiRhsSolver, RouterPolicy, SolveService};
+use sketchsolve::data::proxies::{proxy_spec, ProxyName};
+use sketchsolve::data::synthetic::SyntheticSpec;
+use std::sync::Arc;
+
+#[test]
+fn multiclass_proxy_through_batcher() {
+    let spec = proxy_spec(ProxyName::Dilbert);
+    let ds = spec.build(64, 42); // heavy downscale for CI
+    let b = ds.b_matrix();
+    let lambda = vec![1.0; ds.a.cols];
+    let solver = MultiRhsSolver::new(AdaptiveConfig { tol: 1e-12, ..Default::default() }, 60);
+    let rep = solver.solve(&ds.a, &lambda, 0.1, &b);
+    assert_eq!(rep.x.cols, spec.classes);
+    // verify against the direct multi-RHS solve
+    let ch = {
+        let mut h = sketchsolve::linalg::syrk_t(&ds.a);
+        let d = ds.a.cols;
+        for i in 0..d {
+            h.data[i * d + i] += 0.01;
+        }
+        sketchsolve::linalg::Cholesky::factor(&h).unwrap()
+    };
+    let xref = ch.solve_matrix(&b);
+    let diff = rep.x.max_abs_diff(&xref);
+    assert!(diff < 1e-4, "batched multiclass diff {diff}");
+}
+
+#[test]
+fn service_handles_mixed_workload() {
+    let svc = SolveService::start(1, RouterPolicy::default());
+    let mut expected = 0;
+    for (id, (n, d, nu)) in [(512usize, 96usize, 1e-2f64), (256, 48, 1e-1), (1024, 64, 1e-3)]
+        .into_iter()
+        .enumerate()
+    {
+        let ds = SyntheticSpec::paper_profile(n, d).build(id as u64);
+        svc.submit(JobSpec {
+            id: id as u64,
+            problem: Arc::new(ds.problem(nu)),
+            route_override: None,
+            t_max: 80,
+            tol: 1e-8,
+            seed: id as u64,
+        });
+        expected += 1;
+    }
+    let mut ok = 0;
+    for _ in 0..expected {
+        let r = svc.next_result().unwrap();
+        let rep = r.report.expect("job must succeed");
+        // every job converged in the decrement measure (direct has none)
+        if rep.method != "direct" {
+            assert!(
+                rep.final_residual_decrement() < 1e-6,
+                "job {} ({}) decrement {}",
+                r.id,
+                rep.method,
+                rep.final_residual_decrement()
+            );
+        }
+        ok += 1;
+    }
+    assert_eq!(ok, expected);
+    let (s, c, f) = svc.metrics.job_counts();
+    assert_eq!((s, c, f), (expected as u64, expected as u64, 0));
+    svc.shutdown();
+}
+
+#[test]
+fn wesad_proxy_pipeline_with_random_features() {
+    use sketchsolve::data::random_features::{synthetic_sensor_windows, RandomFeatures};
+    let mut rng = sketchsolve::rng::Rng::seed_from(3);
+    let raw = synthetic_sensor_windows(512, &mut rng);
+    let rf = RandomFeatures::sample(raw.cols, 128, 0.01, &mut rng);
+    let a = rf.apply(&raw);
+    assert_eq!(a.rows, 512);
+    assert_eq!(a.cols, 128);
+    // binary labels from the latent state pattern
+    let y: Vec<f64> = (0..512).map(|i| if (i / 512.min(512) + i / 512) % 2 == 0 { 1.0 } else { 0.0 }).collect();
+    let prob = sketchsolve::problem::Problem::ridge_from_labels(a, &y, 1e-1);
+    let rep = sketchsolve::adaptive::AdaptivePcg::default_config().solve(&prob, 80);
+    assert!(
+        rep.final_residual_decrement() < 1e-6,
+        "decrement {}",
+        rep.final_residual_decrement()
+    );
+    // sketch stays within the padded-n cap (at this tiny scale the RFF
+    // spectrum is not yet in its fast-decay regime, so m may grow to it)
+    assert!(rep.final_m <= sketchsolve::linalg::next_pow2(prob.n()), "final m {}", rep.final_m);
+}

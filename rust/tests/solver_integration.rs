@@ -1,0 +1,218 @@
+//! End-to-end solver integration on realistic synthetic spectra: every
+//! method reaches the direct solution; adaptive variants keep the sketch
+//! small when d_e is small; the Woodbury path engages for m < d.
+
+use sketchsolve::adaptive::{AdaptiveConfig, AdaptiveIhs, AdaptivePcg};
+use sketchsolve::data::synthetic::SyntheticSpec;
+use sketchsolve::precond::SketchedPreconditioner;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{ConjugateGradient, DirectSolver, Ihs, Pcg, PolyakIhs, StopRule};
+
+#[test]
+fn all_methods_agree_on_one_problem() {
+    let spec = SyntheticSpec::paper_profile(512, 96);
+    let ds = spec.build(2024);
+    let nu = 1e-2;
+    let prob = ds.problem(nu);
+    let exact = DirectSolver::solve(&prob).unwrap();
+
+    // CG (possibly slow but convergent given enough iterations)
+    let cg = ConjugateGradient::solve(&prob, StopRule { max_iters: 800, tol: 1e-13 }, Some(&exact.x));
+    assert!(cg.final_error_rel() < 1e-8, "cg {}", cg.final_error_rel());
+
+    // fixed PCG with m = 2d
+    let mut rng = sketchsolve::rng::Rng::seed_from(5);
+    let sk = SketchKind::Srht.sample(2 * prob.d(), prob.n(), &mut rng);
+    let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+    let pcg = Pcg::solve_fixed(&prob, &pre, StopRule { max_iters: 40, tol: 0.0 }, Some(&exact.x));
+    assert!(pcg.final_error_rel() < 1e-10, "pcg {}", pcg.final_error_rel());
+
+    // fixed IHS and Polyak with the same preconditioner
+    let ihs = Ihs::solve_fixed(&prob, &pre, 0.125, StopRule { max_iters: 60, tol: 0.0 }, Some(&exact.x));
+    assert!(ihs.final_error_rel() < 1e-8, "ihs {}", ihs.final_error_rel());
+    let pk = PolyakIhs::solve_fixed(&prob, &pre, 0.125, StopRule { max_iters: 60, tol: 0.0 }, Some(&exact.x));
+    assert!(pk.final_error_rel() < 1e-8, "polyak {}", pk.final_error_rel());
+
+    // adaptive PCG and IHS from m = 1
+    for kind in [SketchKind::Sjlt { s: 1 }, SketchKind::Srht, SketchKind::Gaussian] {
+        let rep = AdaptivePcg::with_config(AdaptiveConfig { sketch: kind, ..Default::default() })
+            .solve_traced(&prob, 50, Some(&exact.x));
+        assert!(rep.final_error_rel() < 1e-8, "{kind:?} {}", rep.final_error_rel());
+    }
+    let rep = AdaptiveIhs::default_config().solve_traced(&prob, 80, Some(&exact.x));
+    assert!(rep.final_error_rel() < 1e-8, "adaptive ihs {}", rep.final_error_rel());
+}
+
+#[test]
+fn adaptive_sketch_tracks_effective_dimension() {
+    // Larger nu => smaller d_e => smaller final sketch size. This is the
+    // paper's central claim (fig right columns).
+    let spec = SyntheticSpec::paper_profile(1024, 128);
+    let ds = spec.build(77);
+    let mut final_ms = Vec::new();
+    for nu in [1e-1, 1e-3] {
+        let prob = ds.problem(nu);
+        let rep = AdaptivePcg::default_config().solve_traced(&prob, 40, None);
+        final_ms.push(rep.final_m);
+    }
+    assert!(
+        final_ms[0] <= final_ms[1],
+        "larger nu should not need a larger sketch: {final_ms:?}"
+    );
+}
+
+#[test]
+fn woodbury_path_used_and_correct_for_small_m() {
+    let spec = SyntheticSpec::paper_profile(512, 128);
+    let ds = spec.build(99);
+    let prob = ds.problem(1e-1);
+    let exact = DirectSolver::solve(&prob).unwrap();
+    let mut rng = sketchsolve::rng::Rng::seed_from(1);
+    // m = 32 < d = 128: Woodbury factorization engages
+    let sk = SketchKind::Gaussian.sample(32, prob.n(), &mut rng);
+    let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+    assert!(pre.is_woodbury());
+    // PCG with a weak-but-valid preconditioner still converges (more iters)
+    let rep = Pcg::solve_fixed(&prob, &pre, StopRule { max_iters: 200, tol: 0.0 }, Some(&exact.x));
+    assert!(rep.final_error_rel() < 1e-8, "woodbury pcg {}", rep.final_error_rel());
+}
+
+#[test]
+fn effective_dimension_analytic_matches_paper_intuition() {
+    // paper fig 1: nu in {1e-1..1e-4} maps to d_e ~ {200,400,800,1600}
+    // at d=7000; our stretched profile preserves the ratios d_e/d.
+    let spec = SyntheticSpec::paper_profile(4096, 700);
+    let de: Vec<f64> = [1e-1, 1e-2, 1e-3, 1e-4]
+        .iter()
+        .map(|&nu| spec.effective_dimension(nu))
+        .collect();
+    // monotone doubling-ish pattern
+    assert!(de[0] < de[1] && de[1] < de[2] && de[2] < de[3]);
+    let r1 = de[1] / de[0];
+    let r2 = de[2] / de[1];
+    assert!(r1 > 1.5 && r1 < 3.0, "ratio {r1}");
+    assert!(r2 > 1.5 && r2 < 3.0, "ratio {r2}");
+    // and d_e/d ratio close to the paper's 200/7000..1600/7000 band
+    let d = 700.0;
+    assert!(de[0] / d > 0.01 && de[0] / d < 0.1, "{}", de[0] / d);
+    assert!(de[3] / d > 0.1 && de[3] / d < 0.5, "{}", de[3] / d);
+}
+
+#[test]
+fn dual_formulation_recovers_primal_solution() {
+    // underdetermined problem (n < d): dualize per eq. (1.2), solve the
+    // n-dimensional dual, recover x*, compare with the direct primal solve.
+    let mut rng = sketchsolve::rng::Rng::seed_from(71);
+    let (n, d) = (24usize, 60usize);
+    let a = sketchsolve::linalg::Matrix::from_vec(
+        n,
+        d,
+        (0..n * d).map(|_| rng.gaussian()).collect(),
+    );
+    let b = rng.gaussian_vec(d);
+    let lambda: Vec<f64> = (0..d).map(|_| 1.0 + rng.uniform()).collect();
+    let prob = sketchsolve::problem::Problem::general(a, b, lambda, 0.4);
+
+    // primal reference (d x d factor — fine at this size)
+    let primal = DirectSolver::solve(&prob).unwrap();
+
+    // dual route: n-dim solve + recovery
+    let dualized = prob.dual();
+    assert_eq!(dualized.dual.d(), n, "dual lives in R^n");
+    let wstar = DirectSolver::solve(&dualized.dual).unwrap();
+    let x_rec = dualized.recover_primal(&wstar.x);
+    for i in 0..d {
+        assert!(
+            (x_rec[i] - primal.x[i]).abs() < 1e-8 * (1.0 + primal.x[i].abs()),
+            "mismatch at {i}: {} vs {}",
+            x_rec[i],
+            primal.x[i]
+        );
+    }
+
+    // and the dual is itself solvable by the adaptive machinery
+    let rep = AdaptivePcg::default_config().solve(&dualized.dual, 60);
+    let x_rec2 = dualized.recover_primal(&rep.x);
+    let mut err = 0.0f64;
+    for i in 0..d {
+        err = err.max((x_rec2[i] - primal.x[i]).abs());
+    }
+    assert!(err < 1e-5, "adaptive-dual recovery err {err}");
+}
+
+#[test]
+fn remark_4_2_conservative_termination_certifies_accuracy() {
+    let spec = SyntheticSpec::paper_profile(1024, 128);
+    let ds = spec.build(81);
+    let prob = ds.problem(1e-1);
+    let exact = DirectSolver::solve(&prob).unwrap();
+    let delta0 = prob.error_to(&vec![0.0; prob.d()], &exact.x);
+
+    let eps_abs = 1e-8 * delta0; // target absolute delta accuracy
+    // paper's fallback: estimate m_delta with d_e := d
+    let m_hat = sketchsolve::adaptive::theory::m_delta(
+        SketchKind::Sjlt { s: 1 },
+        prob.d() as f64,
+        prob.n(),
+        0.05,
+    );
+    let cfg = AdaptiveConfig::default().with_conservative_termination(eps_abs, m_hat);
+    let rep = AdaptivePcg::with_config(cfg).solve_traced(&prob, 400, Some(&exact.x));
+    // criterion fired before the iteration cap...
+    assert!(rep.iterations < 400, "criterion never fired");
+    // ...and the true error meets the certificate: delta_T <= eps_abs
+    let delta_t = rep.final_error_rel() * delta0;
+    assert!(delta_t <= eps_abs, "delta_T {delta_t} > eps {eps_abs}");
+}
+
+#[test]
+fn theorem_3_3_pcg_optimality_among_preconditioned_methods() {
+    // Theorem 3.3 + Lemma 3.1: PCG attains the lower bound l*_t, so at
+    // every iteration its error is <= IHS and Polyak-IHS errors under the
+    // SAME preconditioner and start point.
+    let spec = SyntheticSpec::paper_profile(512, 64);
+    let ds = spec.build(555);
+    let prob = ds.problem(1e-2);
+    let exact = DirectSolver::solve(&prob).unwrap();
+    let mut rng = sketchsolve::rng::Rng::seed_from(556);
+    let sk = SketchKind::Gaussian.sample(128, prob.n(), &mut rng);
+    let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+    let stop = StopRule { max_iters: 12, tol: 0.0 };
+    let pcg = Pcg::solve_fixed(&prob, &pre, stop, Some(&exact.x));
+    let ihs = Ihs::solve_fixed(&prob, &pre, 0.25, stop, Some(&exact.x));
+    let pk = PolyakIhs::solve_fixed(&prob, &pre, 0.25, stop, Some(&exact.x));
+    for t in 1..=12 {
+        let e_pcg = pcg.trace[t].delta_rel;
+        let e_ihs = ihs.trace[t].delta_rel;
+        let e_pk = pk.trace[t].delta_rel;
+        // allow tiny roundoff slack at machine-precision levels
+        let slack = 1.0 + 1e-6;
+        assert!(
+            e_pcg <= e_ihs * slack + 1e-28,
+            "t={t}: pcg {e_pcg} > ihs {e_ihs}"
+        );
+        assert!(
+            e_pcg <= e_pk * slack + 1e-28,
+            "t={t}: pcg {e_pcg} > polyak {e_pk}"
+        );
+    }
+}
+
+#[test]
+fn block_pcg_through_adaptive_discovered_preconditioner() {
+    use sketchsolve::linalg::Matrix;
+    use sketchsolve::solvers::BlockPcg;
+    // multiclass pipeline: adaptive pilot discovers m, block PCG solves
+    // all classes in BLAS-3 sweeps with the shared preconditioner.
+    let spec = SyntheticSpec::paper_profile(1024, 96);
+    let ds = spec.build(557);
+    let prob = ds.problem(1e-1);
+    let pilot = AdaptivePcg::default_config().solve(&prob, 40);
+    let mut rng = sketchsolve::rng::Rng::seed_from(558);
+    let sk = SketchKind::Sjlt { s: 1 }.sample(pilot.final_m.max(2), prob.n(), &mut rng);
+    let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+    let c = 6;
+    let b = Matrix::from_vec(prob.d(), c, (0..prob.d() * c).map(|_| rng.gaussian()).collect());
+    let rep = BlockPcg::solve(&prob, &b, &pre, StopRule { max_iters: 80, tol: 1e-12 });
+    assert!(rep.final_decrements.iter().all(|&v| v <= 1e-10), "{:?}", rep.final_decrements);
+}

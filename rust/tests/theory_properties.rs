@@ -1,0 +1,220 @@
+//! Property tests on the paper's theoretical objects, using the in-repo
+//! property-testing framework (proptest is unavailable offline).
+
+use sketchsolve::adaptive::theory;
+use sketchsolve::linalg::{eig, matvec, syrk_t, Matrix};
+use sketchsolve::precond::SketchedPreconditioner;
+use sketchsolve::problem::Problem;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::polyak::bound;
+use sketchsolve::testing::{check, PropConfig};
+
+/// Lemma 2.1 / 2.2: the approximate Newton decrement brackets the true one
+/// through the eigenvalues of C_S:
+///   (1+sqrt(rho))^{-1} delta <= delta_tilde <= (1-sqrt(rho))^{-1} delta
+/// with rho = ||C_S - I||_2 (when < 1), and delta <= (1+rho) delta_tilde
+/// in general.
+#[test]
+fn newton_decrement_brackets() {
+    check("lemma 2.1/2.2", PropConfig { cases: 10, ..Default::default() }, |rng, _| {
+        let n = 40 + rng.below(60);
+        let d = 4 + rng.below(10);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian() / (n as f64).sqrt()).collect());
+        let b = rng.gaussian_vec(d);
+        let nu = 0.3 + rng.uniform();
+        let prob = Problem::ridge(a, b, nu);
+        let exact = sketchsolve::solvers::DirectSolver::solve(&prob).map_err(|e| e.to_string())?;
+
+        let m = 1 + rng.below(2 * d);
+        let kind = [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }][rng.below(3)];
+        let sk = kind.sample(m, n, rng);
+        let pre = SketchedPreconditioner::from_sketch(&prob, &sk).map_err(|e| e.to_string())?;
+
+        // ||C_S - I||: dense, via jacobi on H^{-1/2} H_S H^{-1/2}.
+        // Equivalent test: eigenvalues of H_S^{-1} H (similar to C_S^{-1}).
+        // Use extreme eigenvalues of C_S via generalized form:
+        // lambda(C_S) = 1 / lambda(H_S^{-1}H)... simpler to bound with the
+        // actual decrement ratio, which is what the lemma constrains.
+        let x = rng.gaussian_vec(d);
+        let delta = prob.error_to(&x, &exact.x);
+        let mut g = vec![0.0; d];
+        let mut work = vec![0.0; n];
+        prob.gradient(&x, &mut g, &mut work);
+        let dt = pre.newton_decrement(&g);
+
+        // compute rho_hat = ||C_S - I||_2 through dense eigs of
+        // L^{-1} H_S L^{-T} where H = L L^T (similar to C_S)
+        let mut h = syrk_t(&prob.a);
+        for i in 0..d {
+            h.data[i * d + i] += nu * nu;
+        }
+        let lch = sketchsolve::linalg::Cholesky::factor(&h).map_err(|e| e.to_string())?;
+        // C = L^{-1} H_S L^{-T}: solve columns
+        let mut hs = syrk_t(&sk.apply(&prob.a));
+        for i in 0..d {
+            hs.data[i * d + i] += nu * nu;
+        }
+        // B = L^{-1} H_S  (forward solve each column), C = B L^{-T} =>
+        // C^T = L^{-1} B^T ; C symmetric so do it twice
+        let mut bmat = Matrix::zeros(d, d);
+        for j in 0..d {
+            let mut col = hs.col(j);
+            sketchsolve::linalg::cholesky::forward_sub(&lch.l, &mut col);
+            for i in 0..d {
+                bmat.set(i, j, col[i]);
+            }
+        }
+        let bt = bmat.transpose();
+        let mut cmat = Matrix::zeros(d, d);
+        for j in 0..d {
+            let mut col = bt.col(j);
+            sketchsolve::linalg::cholesky::forward_sub(&lch.l, &mut col);
+            for i in 0..d {
+                cmat.set(i, j, col[i]);
+            }
+        }
+        let eigs = eig::jacobi_eigenvalues(&cmat, 1e-11, 60);
+        let dev = eigs
+            .iter()
+            .map(|e| (e - 1.0).abs())
+            .fold(0.0f64, f64::max);
+
+        if dev < 1.0 {
+            let s = dev.sqrt().min(0.999);
+            let lo = delta / (1.0 + s) * (1.0 - 1e-8);
+            let hi = delta / (1.0 - s) * (1.0 + 1e-8);
+            if !(dt >= lo && dt <= hi) {
+                return Err(format!("lemma 2.1 violated: dt={dt}, delta={delta}, dev={dev}"));
+            }
+        }
+        // Lemma 2.2 (rho >= 1 case): delta <= (1 + dev) * dt always when
+        // lambda_min(C_S) >= 1/(1+dev)
+        if delta > (1.0 + dev) * dt * (1.0 + 1e-8) {
+            return Err(format!("lemma 2.2 violated: delta={delta}, dt={dt}, dev={dev}"));
+        }
+        Ok(())
+    });
+}
+
+/// Theorem 4.1 ingredients: K_max formula consistency with actual
+/// controller behaviour is covered in adaptive tests; here check formula
+/// monotonicity properties.
+#[test]
+fn k_max_monotone_properties() {
+    check("k_max monotone", PropConfig { cases: 40, ..Default::default() }, |rng, _| {
+        let md = 1.0 + rng.uniform() * 1e5;
+        let rho = 0.05 + 0.4 * rng.uniform();
+        let m0 = 1 + rng.below(64);
+        let k = theory::k_max(md, rho, m0);
+        // doubling from m0 K times must reach m_delta/rho
+        let reached = m0 as f64 * 2f64.powi(k as i32);
+        if reached < md / rho {
+            return Err(format!("2^K insufficient: {reached} < {}", md / rho));
+        }
+        // K is minimal (K-1 doublings not enough) unless K = 0
+        if k > 0 {
+            let prev = m0 as f64 * 2f64.powi(k as i32 - 1);
+            if prev >= md / rho {
+                return Err(format!("K not minimal: {prev} >= {}", md / rho));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Polyak bound sanity: the Table 3 cell is >= the asymptotic rate and
+/// converges to it as t -> infinity.
+#[test]
+fn polyak_bound_asymptotics() {
+    check("table3 asymptotics", PropConfig { cases: 20, ..Default::default() }, |rng, _| {
+        let rho = 0.01 + 0.2 * rng.uniform();
+        let beta = bound::beta_rho(rho);
+        let c1000 = bound::table3_cell(1000.0, rho);
+        let c100000 = bound::table3_cell(100000.0, rho);
+        if c1000 < beta {
+            return Err(format!("cell(1000) {c1000} below asymptote {beta}"));
+        }
+        if (c100000 / beta - 1.0).abs() > 0.05 {
+            return Err(format!("cell(1e5) {c100000} not near asymptote {beta}"));
+        }
+        Ok(())
+    });
+}
+
+/// m_delta formulas: Gaussian is always the sharpest; the SJLT's
+/// `d_e^2/delta` dominates the SRHT once d_e is large (for small d_e the
+/// SRHT's log factors can win — the trade-off the paper's §2.1 describes).
+/// All three are monotone in d_e.
+#[test]
+fn m_delta_orderings_hold_generally() {
+    check("m_delta orderings", PropConfig { cases: 40, ..Default::default() }, |rng, _| {
+        let d_e = 10.0 + rng.uniform() * 2000.0;
+        let n = 1024 + rng.below(1 << 20);
+        let delta = 0.001 + 0.1 * rng.uniform();
+        let g = theory::m_delta(SketchKind::Gaussian, d_e, n, delta);
+        let h = theory::m_delta(SketchKind::Srht, d_e, n, delta);
+        let j = theory::m_delta(SketchKind::Sjlt { s: 1 }, d_e, n, delta);
+        if g > h {
+            return Err(format!("gaussian not sharpest: g={g} h={h} (d_e={d_e})"));
+        }
+        if d_e >= 1000.0 && h > j {
+            return Err(format!("srht above sjlt at large d_e: h={h} j={j} (d_e={d_e})"));
+        }
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }] {
+            let lo = theory::m_delta(kind, d_e, n, delta);
+            let hi = theory::m_delta(kind, d_e * 2.0, n, delta);
+            if hi < lo {
+                return Err(format!("{kind:?} not monotone in d_e"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Condition-number interplay: kappa(C_S) <= (1 + m_ratio)(sigma1^2+nu^2)/nu^2
+/// style bounds are monotone in nu — smaller regularization = harder
+/// problem. Validated through the direct effective dimension.
+#[test]
+fn effective_dimension_monotone_in_nu() {
+    check("d_e monotone", PropConfig { cases: 30, ..Default::default() }, |rng, _| {
+        let d = 10 + rng.below(100);
+        let sig: Vec<f64> = (0..d).map(|j| 0.99f64.powi(j as i32) * (1.0 + rng.uniform())).collect();
+        let n1 = 1e-3 + rng.uniform();
+        let n2 = n1 * (1.5 + rng.uniform());
+        let d1 = Problem::effective_dimension_from_singular_values(&sig, n1);
+        let d2 = Problem::effective_dimension_from_singular_values(&sig, n2);
+        if d2 > d1 * (1.0 + 1e-9) {
+            return Err(format!("d_e not monotone: {d2} > {d1}"));
+        }
+        if d1 > d as f64 + 1e-9 {
+            return Err(format!("d_e exceeds d: {d1}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preconditioner_solve_is_linear_operator() {
+    check("H_S^{-1} linearity", PropConfig { cases: 20, ..Default::default() }, |rng, _| {
+        let d = 4 + rng.below(12);
+        let m = 2 + rng.below(20);
+        let sa = Matrix::from_vec(m, d, (0..m * d).map(|_| rng.gaussian()).collect());
+        let lam: Vec<f64> = (0..d).map(|_| 1.0 + rng.uniform()).collect();
+        let pre = SketchedPreconditioner::build(sa, &lam, 0.5).map_err(|e| e.to_string())?;
+        let x = rng.gaussian_vec(d);
+        let y = rng.gaussian_vec(d);
+        let alpha = rng.gaussian();
+        let combo: Vec<f64> = x.iter().zip(&y).map(|(a, b)| alpha * a + b).collect();
+        let s1 = pre.solve(&combo);
+        let sx = pre.solve(&x);
+        let sy = pre.solve(&y);
+        for i in 0..d {
+            let want = alpha * sx[i] + sy[i];
+            if (s1[i] - want).abs() > 1e-8 * (1.0 + want.abs()) {
+                return Err(format!("nonlinear at {i}: {} vs {want}", s1[i]));
+            }
+        }
+        let _ = matvec(&Matrix::eye(d), &x);
+        Ok(())
+    });
+}
