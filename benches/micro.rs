@@ -1,15 +1,18 @@
 //! Micro-benchmarks of the substrate hot paths: GEMM/SYRK, Cholesky, FWHT,
-//! sketch application, preconditioner solves, and PJRT artifact dispatch.
+//! sketch application, preconditioner solves, a thread-count scaling sweep
+//! over the parallel kernels (emitted to `BENCH_micro.json` so future PRs
+//! can track parallel-scaling regressions), and PJRT artifact dispatch.
 //! This is the §Perf instrument — run before/after each optimization.
 //!
-//! `cargo bench --bench micro -- [--quick]`
+//! `cargo bench --bench micro -- [--quick] [--threads N] [--out FILE]`
 
 use sketchsolve::bench_harness::runner::bench_median;
 use sketchsolve::linalg::{matmul, syrk_t, Cholesky, Matrix};
+use sketchsolve::par;
 use sketchsolve::precond::SketchedPreconditioner;
 use sketchsolve::rng::Rng;
 use sketchsolve::sketch::SketchKind;
-use sketchsolve::util::Flags;
+use sketchsolve::util::{Flags, JsonValue};
 
 fn gflops(flops: f64, secs: f64) -> f64 {
     flops / secs / 1e9
@@ -19,6 +22,9 @@ fn main() {
     let flags = Flags::parse();
     let quick = flags.has("quick");
     let reps = if quick { 3 } else { 7 };
+    if let Some(t) = flags.threads() {
+        par::set_max_threads(t);
+    }
     let mut rng = Rng::seed_from(0xFEED);
 
     println!("== L3 substrate micro-benchmarks ==\n");
@@ -81,6 +87,9 @@ fn main() {
         println!("{}", st.line());
     }
 
+    // thread-count scaling sweep over the parallel kernels
+    thread_sweep(&mut rng, reps, &flags);
+
     // PJRT dispatch (if artifacts present)
     if let Ok(engine) = sketchsolve::runtime::Engine::load("artifacts") {
         if engine.has("gradient", &[4096, 512]) {
@@ -123,5 +132,77 @@ fn main() {
         }
     } else {
         println!("\n(no artifacts: skipping PJRT dispatch benches)");
+    }
+}
+
+/// Scaling sweep: the same kernel at 1/2/4/8 *requested* threads
+/// (`with_threads` overrides rather than clamps, so counts above the
+/// hardware budget measure oversubscription — interpret `speedup_vs_1t`
+/// against the recorded `hardware_budget`). Written to `BENCH_micro.json`
+/// as `{op, threads, median_s, speedup_vs_1t}` records so regressions in
+/// parallel scaling show up in diffs between PRs.
+fn thread_sweep(rng: &mut Rng, reps: usize, flags: &Flags) {
+    println!("\n== thread-scaling sweep (hardware budget: {}) ==\n", par::max_threads());
+    let (n, d) = (4096usize, 256usize);
+    let m = 512usize;
+    let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    let b = Matrix::from_vec(d, d, rng.gaussian_vec(d * d));
+    let sketches: Vec<(String, sketchsolve::sketch::Sketch)> =
+        [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }]
+            .into_iter()
+            .map(|k| (format!("sketch_{}", k.name()), k.sample(m, n, rng)))
+            .collect();
+
+    // (op label, kernel closure); every closure captures shared references
+    // so one data set serves the whole sweep
+    let aref = &a;
+    let bref = &b;
+    let mut ops: Vec<(String, Box<dyn Fn() -> Matrix + '_>)> = vec![
+        (format!("gemm {n}x{d}x{d}"), Box::new(move || matmul(aref, bref))),
+        (format!("syrk {n}x{d}"), Box::new(move || syrk_t(aref))),
+        (
+            format!("fwht {n}x{d}"),
+            Box::new(move || {
+                let mut x = aref.clone();
+                sketchsolve::linalg::fwht_rows(&mut x);
+                x
+            }),
+        ),
+    ];
+    for (name, sk) in &sketches {
+        ops.push((format!("{name} m={m} ({n}x{d})"), Box::new(move || sk.apply(aref))));
+    }
+
+    let threads: Vec<usize> = vec![1, 2, 4, 8];
+    let mut records: Vec<JsonValue> = Vec::new();
+    for (label, kernel) in &ops {
+        let mut base_median = 0.0f64;
+        for &t in &threads {
+            let st = par::with_threads(t, || bench_median(&format!("{label} t={t}"), 1, reps, || kernel()));
+            if t == 1 {
+                base_median = st.median_s;
+            }
+            let speedup = if st.median_s > 0.0 { base_median / st.median_s } else { f64::NAN };
+            println!("{}   {:.2}x vs 1t", st.line(), speedup);
+            records.push(JsonValue::obj(vec![
+                ("op", JsonValue::s(label)),
+                ("threads", JsonValue::num(t as f64)),
+                ("median_s", JsonValue::num(st.median_s)),
+                ("speedup_vs_1t", JsonValue::num(speedup)),
+            ]));
+        }
+    }
+    let out_path = flags.get_or("out", "BENCH_micro.json");
+    let doc = JsonValue::obj(vec![
+        ("bench", JsonValue::s("micro_thread_sweep")),
+        ("n", JsonValue::num(n as f64)),
+        ("d", JsonValue::num(d as f64)),
+        ("m", JsonValue::num(m as f64)),
+        ("hardware_budget", JsonValue::num(par::max_threads() as f64)),
+        ("records", JsonValue::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("\nscaling records written to {out_path}"),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
     }
 }

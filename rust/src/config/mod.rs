@@ -170,6 +170,13 @@ impl Config {
     pub fn sections(&self) -> impl Iterator<Item = &String> {
         self.sections.keys()
     }
+
+    /// The `[runtime] threads` knob: kernel thread budget for the parallel
+    /// execution layer (`None`/0 = auto-detect). Launchers apply it via
+    /// `par::set_max_threads`; the coordinator divides it among workers.
+    pub fn threads(&self) -> Option<usize> {
+        self.get("runtime", "threads").and_then(|v| v.as_usize()).filter(|&n| n > 0)
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +206,14 @@ name = "fig1"  # inline comment
         assert_eq!(cfg.get_str("experiment", "name", ""), "fig1");
         let nus = cfg.get("experiment", "nus").unwrap().as_f64_vec().unwrap();
         assert_eq!(nus, vec![0.1, 0.01, 0.001]);
+    }
+
+    #[test]
+    fn threads_knob() {
+        let cfg = Config::parse("[runtime]\nthreads = 8\n").unwrap();
+        assert_eq!(cfg.threads(), Some(8));
+        assert_eq!(Config::parse("[runtime]\nthreads = 0\n").unwrap().threads(), None);
+        assert_eq!(Config::parse("").unwrap().threads(), None);
     }
 
     #[test]

@@ -55,7 +55,15 @@ pub struct SolveService {
 
 impl SolveService {
     /// Start a service with `workers` threads and a routing policy.
+    ///
+    /// Thread-budget composition: the global kernel budget (`par::max_threads`)
+    /// is divided evenly among the workers, so W concurrent solves each run
+    /// their kernels on `budget/W` threads instead of all fanning out to the
+    /// full budget and oversubscribing the box. A single worker keeps the
+    /// whole budget (full kernel parallelism for latency-sensitive solves).
     pub fn start(workers: usize, policy: RouterPolicy) -> SolveService {
+        let workers = workers.max(1);
+        let kernel_threads = (crate::par::max_threads() / workers).max(1);
         let (tx, rx) = mpsc::channel::<JobSpec>();
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let rx = Arc::new(Mutex::new(rx));
@@ -63,34 +71,36 @@ impl SolveService {
         let status: Arc<Mutex<HashMap<u64, JobStatus>>> = Arc::new(Mutex::new(HashMap::new()));
 
         let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
+        for _ in 0..workers {
             let rx = rx.clone();
             let results_tx = results_tx.clone();
             let metrics = metrics.clone();
             let status = status.clone();
             let policy = policy.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let job = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                let job = match job {
-                    Ok(j) => j,
-                    Err(_) => break, // channel closed: shut down
-                };
-                status.lock().unwrap().insert(job.id, JobStatus::Running);
-                let outcome = run_job(&job, &policy);
-                match &outcome {
-                    Ok(rep) => {
-                        metrics.job_completed(rep.iterations, rep.sketch_doublings, rep.secs);
-                        status.lock().unwrap().insert(job.id, JobStatus::Done);
+            handles.push(std::thread::spawn(move || {
+                crate::par::with_threads(kernel_threads, || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let job = match job {
+                        Ok(j) => j,
+                        Err(_) => break, // channel closed: shut down
+                    };
+                    status.lock().unwrap().insert(job.id, JobStatus::Running);
+                    let outcome = run_job(&job, &policy);
+                    match &outcome {
+                        Ok(rep) => {
+                            metrics.job_completed(rep.iterations, rep.sketch_doublings, rep.secs);
+                            status.lock().unwrap().insert(job.id, JobStatus::Done);
+                        }
+                        Err(e) => {
+                            metrics.job_failed();
+                            status.lock().unwrap().insert(job.id, JobStatus::Failed(e.clone()));
+                        }
                     }
-                    Err(e) => {
-                        metrics.job_failed();
-                        status.lock().unwrap().insert(job.id, JobStatus::Failed(e.clone()));
-                    }
-                }
-                let _ = results_tx.send(JobResult { id: job.id, report: outcome });
+                    let _ = results_tx.send(JobResult { id: job.id, report: outcome });
+                })
             }));
         }
 

@@ -12,6 +12,11 @@
 //! Architecture (see DESIGN.md):
 //! - **L3 (this crate)**: solver coordinator — adaptive controller,
 //!   request batching for multi-RHS (multiclass) problems, routing, metrics.
+//! - **L3 execution (`par`)**: a zero-dependency scoped-thread parallel
+//!   layer with a global thread budget; every native hot path (GEMM/SYRK,
+//!   FWHT, sketching, preconditioner formation, block-PCG sweeps) is
+//!   partitioned deterministically on it, so a given seed yields identical
+//!   iterates at any thread count.
 //! - **L2/L1 (python/, build time only)**: JAX compute graphs + Pallas
 //!   kernels AOT-lowered to HLO text, executed from Rust via PJRT
 //!   (`runtime` module). Python is never on the request path.
@@ -22,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod par;
 pub mod precond;
 pub mod problem;
 pub mod rng;

@@ -8,6 +8,7 @@
 //! L1 Pallas kernel uses with VMEM row panels).
 
 use super::matrix::Matrix;
+use crate::par;
 
 /// Next power of two >= n.
 pub fn next_pow2(n: usize) -> usize {
@@ -46,10 +47,50 @@ pub fn fwht_vec(x: &mut [f64]) {
 /// the HBM/cache traffic of the log2(n) sweep (the transform is bandwidth
 /// bound; ~1.6x on 16384-row panels). A trailing radix-2 stage handles odd
 /// log2(n).
+///
+/// Parallelism: the transform is independent per column, so the column axis
+/// is chunked over the thread budget; each worker runs the full butterfly
+/// schedule on its own column stripe. The stripes interleave in memory
+/// (row-major layout), so the partition goes through [`par::SendPtr`] with
+/// disjoint per-stripe writes — results are bit-identical at any thread
+/// count because each column's butterfly sequence never changes.
 pub fn fwht_rows(a: &mut Matrix) {
     let n = a.rows;
     let d = a.cols;
     assert!(n.is_power_of_two(), "fwht_rows: rows must be a power of two");
+    if n <= 1 || d == 0 {
+        return;
+    }
+    let passes = n.trailing_zeros() as usize;
+    // bandwidth-bound: gate on total element traffic, not flops
+    let threads = if n * d * passes < (1 << 19) { 1 } else { par::effective_threads().min(d) };
+    let ptr = par::SendPtr::new(a.data.as_mut_ptr());
+    if threads <= 1 {
+        // SAFETY: exclusive &mut borrow of a.data; full column range.
+        unsafe { fwht_col_stripe(ptr, n, d, 0, d) };
+        return;
+    }
+    let stripes = par::chunk_ranges(d, threads);
+    std::thread::scope(|s| {
+        for r in stripes.iter().skip(1).cloned() {
+            // SAFETY: stripes are disjoint column ranges of a.data, which is
+            // exclusively borrowed for the duration of the scope.
+            s.spawn(move || par::with_threads(1, || unsafe { fwht_col_stripe(ptr, n, d, r.start, r.len()) }));
+        }
+        let r0 = stripes[0].clone();
+        // SAFETY: as above; the caller's stripe is disjoint from the rest.
+        par::with_threads(1, || unsafe { fwht_col_stripe(ptr, n, d, r0.start, r0.len()) });
+    });
+}
+
+/// Full butterfly schedule over columns `[j0, j0 + w)` of an `n x d`
+/// row-major buffer.
+///
+/// # Safety
+/// `ptr` must point at the start of the buffer, every accessed index must be
+/// in bounds, and no concurrently running caller may overlap this column
+/// range.
+unsafe fn fwht_col_stripe(ptr: par::SendPtr<f64>, n: usize, d: usize, j0: usize, w: usize) {
     let mut h = 1;
     // radix-4 passes while two stages remain
     while h * 2 < n {
@@ -57,15 +98,12 @@ pub fn fwht_rows(a: &mut Matrix) {
         let mut base = 0;
         while base < n {
             for i in base..base + h {
-                // rows i, i+h, i+2h, i+3h
-                let (p01, p23) = a.data.split_at_mut((i + 2 * h) * d);
-                let (p0, p1) = p01.split_at_mut((i + h) * d);
-                let r0 = &mut p0[i * d..i * d + d];
-                let r1 = &mut p1[..d];
-                let (q2, q3) = p23.split_at_mut(h * d);
-                let r2 = &mut q2[..d];
-                let r3 = &mut q3[..d];
-                for t in 0..d {
+                // rows i, i+h, i+2h, i+3h — four disjoint segments
+                let r0 = ptr.slice_mut(i * d + j0, w);
+                let r1 = ptr.slice_mut((i + h) * d + j0, w);
+                let r2 = ptr.slice_mut((i + 2 * h) * d + j0, w);
+                let r3 = ptr.slice_mut((i + 3 * h) * d + j0, w);
+                for t in 0..w {
                     let a0 = r0[t];
                     let a1 = r1[t];
                     let a2 = r2[t];
@@ -90,10 +128,9 @@ pub fn fwht_rows(a: &mut Matrix) {
         let mut base = 0;
         while base < n {
             for i in base..base + h {
-                let (lo, hi) = a.data.split_at_mut((i + h) * d);
-                let top = &mut lo[i * d..i * d + d];
-                let bot = &mut hi[..d];
-                for t in 0..d {
+                let top = ptr.slice_mut(i * d + j0, w);
+                let bot = ptr.slice_mut((i + h) * d + j0, w);
+                for t in 0..w {
                     let x = top[t];
                     let y = bot[t];
                     top[t] = x + y;
@@ -185,6 +222,27 @@ mod tests {
         hadamard_rows_normalized(&mut b);
         hadamard_rows_normalized(&mut b);
         assert!(b.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn parallel_stripes_match_sequential_bitwise() {
+        // large enough to clear the parallel gate (n*d*log2(n) >= 2^19)
+        let mut rng = Rng::seed_from(29);
+        let (n, d) = (2048, 48);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let base = crate::par::with_threads(1, || {
+            let mut x = a.clone();
+            fwht_rows(&mut x);
+            x
+        });
+        for t in [2usize, 4, 5] {
+            let got = crate::par::with_threads(t, || {
+                let mut x = a.clone();
+                fwht_rows(&mut x);
+                x
+            });
+            assert_eq!(base.data, got.data, "fwht differs at {t} threads");
+        }
     }
 
     #[test]

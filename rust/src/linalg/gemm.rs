@@ -4,8 +4,17 @@
 //! formation and per-iteration matvecs. The layout mirrors the L1 Pallas
 //! kernels: cache-tiled panels with a register-blocked micro-kernel, so the
 //! native path and the AOT path share the same schedule shape.
+//!
+//! Parallelism: every kernel is row-partitioned over the [`crate::par`]
+//! layer. A chunk of output rows is an independent sub-problem executed with
+//! the exact sequential loop order, so each output element is accumulated in
+//! the same order at every thread count — results are bit-identical whether
+//! the budget is 1 thread or 64. `matvec_t_into` (a reduction across rows)
+//! instead uses fixed-grain chunks combined in ascending order, which is
+//! equally thread-count-independent.
 
 use super::matrix::Matrix;
+use crate::par;
 
 /// Cache block sizes. Tuned for a single x86 core with 32 KiB L1 / 1 MiB L2:
 /// a KC x NC panel of B (256*128*8 = 256 KiB) stays L2-resident while MC
@@ -13,6 +22,8 @@ use super::matrix::Matrix;
 const MC: usize = 64;
 const KC: usize = 256;
 const NC: usize = 128;
+
+use crate::par::PAR_MIN_FLOPS;
 
 /// `C = A * B` (rows_a x k) * (k x cols_b).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -28,24 +39,21 @@ pub fn matmul_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    for jc in (0..n).step_by(NC) {
-        let nb = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kb = KC.min(k - pc);
-            for ic in (0..m).step_by(MC) {
-                let mb = MC.min(m - ic);
-                // micro: 2 rows of A at a time against the B panel
-                let mut i = ic;
-                while i + 1 < ic + mb {
-                    inner_2row(a, b, c, i, pc, kb, jc, nb);
-                    i += 2;
-                }
-                if i < ic + mb {
-                    inner_1row(a, b, c, i, pc, kb, jc, nb);
-                }
-            }
-        }
+    if m == 0 || n == 0 {
+        return;
     }
+    let parts = if 2.0 * (m as f64) * (k as f64) * (n as f64) < PAR_MIN_FLOPS {
+        1
+    } else {
+        par::parts_for(m, MC)
+    };
+    if parts == 1 {
+        // allocation-free single-chunk path (per-iteration hot loop)
+        gemm_block(a, b, 0, &mut c.data);
+        return;
+    }
+    let bounds = par::uniform_boundaries(m, parts);
+    par::parallel_chunks_mut(&mut c.data, n, &bounds, |row0, chunk| gemm_block(a, b, row0, chunk));
 }
 
 /// `C = A * B` into preallocated C (overwrites).
@@ -54,21 +62,65 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     matmul_acc(a, b, c);
 }
 
-#[inline(always)]
-fn inner_2row(a: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
+/// One row-chunk of `C += A * B`: `chunk` holds C rows
+/// `row0..row0 + chunk.len()/n` contiguously. Identical (jc, pc) loop order
+/// to the sequential kernel, restricted to the chunk's rows.
+fn gemm_block(a: &Matrix, b: &Matrix, row0: usize, chunk: &mut [f64]) {
     let n = b.cols;
-    let (arow0, arow1) = (a.row(i), a.row(i + 1));
-    // split borrow of two C rows
-    let (lo, hi) = c.data.split_at_mut((i + 1) * n);
-    let crow0 = &mut lo[i * n..];
-    let crow1 = &mut hi[..n];
+    let k = a.cols;
+    let rows = chunk.len() / n;
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..rows).step_by(MC) {
+                let mb = MC.min(rows - ic);
+                // micro: 2 rows of A at a time against the B panel
+                let mut i = ic;
+                while i + 1 < ic + mb {
+                    let (lo, hi) = chunk.split_at_mut((i + 1) * n);
+                    inner_2row(
+                        a.row(row0 + i),
+                        a.row(row0 + i + 1),
+                        &b.data,
+                        &mut lo[i * n..],
+                        &mut hi[..n],
+                        n,
+                        pc,
+                        kb,
+                        jc,
+                        nb,
+                    );
+                    i += 2;
+                }
+                if i < ic + mb {
+                    inner_1row(a.row(row0 + i), &b.data, &mut chunk[i * n..(i + 1) * n], n, pc, kb, jc, nb);
+                }
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn inner_2row(
+    arow0: &[f64],
+    arow1: &[f64],
+    bdata: &[f64],
+    crow0: &mut [f64],
+    crow1: &mut [f64],
+    n: usize,
+    pc: usize,
+    kb: usize,
+    jc: usize,
+    nb: usize,
+) {
     for p in pc..pc + kb {
         let a0 = arow0[p];
         let a1 = arow1[p];
         if a0 == 0.0 && a1 == 0.0 {
             continue;
         }
-        let brow = &b.data[p * n + jc..p * n + jc + nb];
+        let brow = &bdata[p * n + jc..p * n + jc + nb];
         let c0 = &mut crow0[jc..jc + nb];
         let c1 = &mut crow1[jc..jc + nb];
         for (t, &bv) in brow.iter().enumerate() {
@@ -79,16 +131,13 @@ fn inner_2row(a: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: u
 }
 
 #[inline(always)]
-fn inner_1row(a: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
-    let n = b.cols;
-    let arow = a.row(i);
-    let crow = &mut c.data[i * n..(i + 1) * n];
+fn inner_1row(arow: &[f64], bdata: &[f64], crow: &mut [f64], n: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
     for p in pc..pc + kb {
         let av = arow[p];
         if av == 0.0 {
             continue;
         }
-        let brow = &b.data[p * n + jc..p * n + jc + nb];
+        let brow = &bdata[p * n + jc..p * n + jc + nb];
         let cseg = &mut crow[jc..jc + nb];
         for (t, &bv) in brow.iter().enumerate() {
             cseg[t] += av * bv;
@@ -104,34 +153,29 @@ fn inner_1row(a: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: u
 /// transpose of A — the transpose makes the reduction axis contiguous for
 /// both operands, and only upper-triangle tiles are computed (~half the
 /// flops of the naive rank-1 sweep, which also thrashed L2 by streaming
-/// the whole d x d accumulator per row). 4.5 -> ~7 GFLOP/s at 2048x512.
+/// the whole d x d accumulator per row). 4.5 -> ~7 GFLOP/s at 2048x512
+/// single-threaded; rows of C are chunked over the thread budget with
+/// flop-balanced (triangular-weight) boundaries.
 pub fn syrk_t(a: &Matrix) -> Matrix {
     let (k, d) = (a.rows, a.cols);
     let at = a.transpose(); // d x k: row i = column i of A, contiguous in k
     let mut c = Matrix::zeros(d, d);
-    for jc in (0..d).step_by(NC) {
-        let nb = NC.min(d - jc);
-        for pc in (0..k).step_by(KC) {
-            let kb = KC.min(k - pc);
-            // only row blocks with ic <= jc + nb contribute to the upper
-            // triangle of this column block
-            let ic_max = jc + nb;
-            for ic in (0..ic_max.min(d)).step_by(MC) {
-                let mb = MC.min(d - ic).min(ic_max - ic);
-                let mut i = ic;
-                while i + 3 < ic + mb {
-                    inner_4row_tri(&at, a, &mut c, i, pc, kb, jc, nb);
-                    i += 4;
-                }
-                while i + 1 < ic + mb {
-                    inner_2row_tri(&at, a, &mut c, i, pc, kb, jc, nb);
-                    i += 2;
-                }
-                if i < ic + mb {
-                    inner_1row_tri(&at, a, &mut c, i, pc, kb, jc, nb);
-                }
-            }
-        }
+    if d == 0 {
+        return c;
+    }
+    let parts = if (k as f64) * (d as f64) * (d as f64) / 2.0 < PAR_MIN_FLOPS {
+        1
+    } else {
+        par::parts_for(d, 16)
+    };
+    if parts == 1 {
+        syrk_block(&at, a, 0, &mut c.data);
+    } else {
+        // row i of the upper triangle costs ~(d - i) dot products
+        let bounds = par::weighted_boundaries(d, parts, |i| (d - i) as f64);
+        par::parallel_chunks_mut(&mut c.data, d, &bounds, |row0, chunk| {
+            syrk_block(&at, a, row0, chunk)
+        });
     }
     // mirror to lower triangle
     for i in 0..d {
@@ -142,22 +186,65 @@ pub fn syrk_t(a: &Matrix) -> Matrix {
     c
 }
 
+/// One row-chunk of the upper-triangle SYRK: `chunk` holds C rows
+/// `row0..row0 + chunk.len()/d`.
+fn syrk_block(at: &Matrix, b: &Matrix, row0: usize, chunk: &mut [f64]) {
+    let n = b.cols; // = d
+    let k = b.rows;
+    let rows = chunk.len() / n;
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            // only rows with global index < jc + nb touch this column block
+            let local_max = (jc + nb).min(row0 + rows).saturating_sub(row0);
+            for ic in (0..local_max).step_by(MC) {
+                let mb = MC.min(local_max - ic);
+                let mut i = ic;
+                while i + 3 < ic + mb {
+                    inner_4row_tri(at, b, chunk, row0, i, pc, kb, jc, nb);
+                    i += 4;
+                }
+                while i + 1 < ic + mb {
+                    inner_2row_tri(at, b, chunk, row0, i, pc, kb, jc, nb);
+                    i += 2;
+                }
+                if i < ic + mb {
+                    inner_1row_tri(at, b, chunk, row0, i, pc, kb, jc, nb);
+                }
+            }
+        }
+    }
+}
+
 /// 4-row GEMM micro step restricted to the upper triangle: four FMA
 /// streams per B-row load (the register-blocking sweet spot measured on
-/// this core — see EXPERIMENTS.md §Perf L3).
+/// this core — see EXPERIMENTS.md §Perf L3). `i` is chunk-local; `row0 + i`
+/// is the global C/A^T row.
 #[inline(always)]
-fn inner_4row_tri(at: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
+fn inner_4row_tri(
+    at: &Matrix,
+    b: &Matrix,
+    chunk: &mut [f64],
+    row0: usize,
+    i: usize,
+    pc: usize,
+    kb: usize,
+    jc: usize,
+    nb: usize,
+) {
     let n = b.cols;
-    let j_lo = jc.max(i);
+    let gi = row0 + i;
+    let j_lo = jc.max(gi);
     if j_lo >= jc + nb {
         return;
     }
     let width = jc + nb - j_lo;
-    let (ar0, ar1, ar2, ar3) = (at.row(i), at.row(i + 1), at.row(i + 2), at.row(i + 3));
-    // split borrows for four C rows
-    let (lo01, hi01) = c.data.split_at_mut((i + 2) * n);
+    let (ar0, ar1, ar2, ar3) = (at.row(gi), at.row(gi + 1), at.row(gi + 2), at.row(gi + 3));
+    // split borrows for four chunk-local C rows
+    let (lo01, hi23) = chunk.split_at_mut((i + 2) * n);
     let (lo0, lo1) = lo01.split_at_mut((i + 1) * n);
-    let (hi2, hi3) = hi01.split_at_mut(n);
+    let (hi2, hi3) = hi23.split_at_mut(n);
     let c0 = &mut lo0[i * n + j_lo..i * n + j_lo + width];
     let c1 = &mut lo1[j_lo..j_lo + width];
     let c2 = &mut hi2[j_lo..j_lo + width];
@@ -177,21 +264,33 @@ fn inner_4row_tri(at: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, 
     }
 }
 
-/// 2-row GEMM micro step restricted to columns j >= i (upper triangle).
+/// 2-row GEMM micro step restricted to columns j >= global row (upper
+/// triangle).
 #[inline(always)]
-fn inner_2row_tri(at: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
+fn inner_2row_tri(
+    at: &Matrix,
+    b: &Matrix,
+    chunk: &mut [f64],
+    row0: usize,
+    i: usize,
+    pc: usize,
+    kb: usize,
+    jc: usize,
+    nb: usize,
+) {
     let n = b.cols;
-    // clip the column window to j >= i for row i; row i+1 strictly needs
-    // j >= i+1, but its j = i entry is the symmetric value and the mirror
+    let gi = row0 + i;
+    // clip the column window to j >= gi for row gi; row gi+1 strictly needs
+    // j >= gi+1, but its j = gi entry is the symmetric value and the mirror
     // pass overwrites it with an identical number — keeping the kernel
     // branch-free is worth the few redundant FMAs
-    let j_lo = jc.max(i);
+    let j_lo = jc.max(gi);
     if j_lo >= jc + nb {
         return;
     }
     let width = jc + nb - j_lo;
-    let (arow0, arow1) = (at.row(i), at.row(i + 1));
-    let (lo, hi) = c.data.split_at_mut((i + 1) * n);
+    let (arow0, arow1) = (at.row(gi), at.row(gi + 1));
+    let (lo, hi) = chunk.split_at_mut((i + 1) * n);
     let crow0 = &mut lo[i * n + j_lo..i * n + j_lo + width];
     let crow1 = &mut hi[j_lo..j_lo + width];
     for p in pc..pc + kb {
@@ -209,15 +308,26 @@ fn inner_2row_tri(at: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, 
 }
 
 #[inline(always)]
-fn inner_1row_tri(at: &Matrix, b: &Matrix, c: &mut Matrix, i: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
+fn inner_1row_tri(
+    at: &Matrix,
+    b: &Matrix,
+    chunk: &mut [f64],
+    row0: usize,
+    i: usize,
+    pc: usize,
+    kb: usize,
+    jc: usize,
+    nb: usize,
+) {
     let n = b.cols;
-    let j_lo = jc.max(i);
+    let gi = row0 + i;
+    let j_lo = jc.max(gi);
     if j_lo >= jc + nb {
         return;
     }
     let width = jc + nb - j_lo;
-    let arow = at.row(i);
-    let crow = &mut c.data[i * n + j_lo..i * n + j_lo + width];
+    let arow = at.row(gi);
+    let crow = &mut chunk[i * n + j_lo..i * n + j_lo + width];
     for p in pc..pc + kb {
         let av = arow[p];
         if av == 0.0 {
@@ -238,13 +348,33 @@ pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// `y = A * x` into a preallocated buffer (allocation-free hot loop).
+/// `y = A * x` into a preallocated buffer (allocation-free hot loop when
+/// running single-threaded; row-chunked over the thread budget when the
+/// product is large enough to amortize spawning).
 pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.cols, x.len());
     assert_eq!(a.rows, y.len());
-    for i in 0..a.rows {
-        y[i] = super::matrix::dot(a.row(i), x);
+    if a.rows == 0 {
+        return;
     }
+    let parts = if 2.0 * (a.rows as f64) * (a.cols as f64) < PAR_MIN_FLOPS {
+        1
+    } else {
+        par::parts_for(a.rows, 64)
+    };
+    if parts == 1 {
+        // allocation-free single-chunk path (per-iteration hot loop)
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = super::matrix::dot(a.row(i), x);
+        }
+        return;
+    }
+    let bounds = par::uniform_boundaries(a.rows, parts);
+    par::parallel_chunks_mut(y, 1, &bounds, |row0, chunk| {
+        for (t, yi) in chunk.iter_mut().enumerate() {
+            *yi = super::matrix::dot(a.row(row0 + t), x);
+        }
+    });
 }
 
 /// `y = A^T * x` without forming the transpose.
@@ -255,20 +385,64 @@ pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
 }
 
 /// `y = A^T * x` into preallocated buffer.
+///
+/// This is a reduction across rows: large products run as an ordered
+/// parallel reduce over fixed 256-row chunks (boundaries depend only on the
+/// shape; partial sums combine in ascending chunk order), small ones keep
+/// the allocation-free sequential sweep — either way the result is
+/// identical at every thread count.
 pub fn matvec_t_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows, x.len());
     assert_eq!(a.cols, y.len());
-    y.iter_mut().for_each(|v| *v = 0.0);
-    for i in 0..a.rows {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
-        let arow = a.row(i);
-        for j in 0..a.cols {
-            y[j] += xi * arow[j];
-        }
+    if a.rows == 0 || a.cols == 0 {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        return;
     }
+    // Below the gate: the original allocation-free in-place accumulation —
+    // this is the Woodbury solve's per-iteration hot loop, where per-chunk
+    // partial buffers would be pure overhead. The gate depends only on the
+    // shape, so the chosen association is still thread-count independent.
+    if 2.0 * (a.rows as f64) * (a.cols as f64) < PAR_MIN_FLOPS {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..a.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let arow = a.row(i);
+            for (yj, &av) in y.iter_mut().zip(arow) {
+                *yj += xi * av;
+            }
+        }
+        return;
+    }
+    const GRAIN: usize = 256;
+    let acc = par::parallel_reduce(
+        a.rows,
+        GRAIN,
+        |r| {
+            let mut part = vec![0.0; a.cols];
+            for i in r {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let arow = a.row(i);
+                for (pj, &av) in part.iter_mut().zip(arow) {
+                    *pj += xi * av;
+                }
+            }
+            part
+        },
+        |mut p, q| {
+            for (u, v) in p.iter_mut().zip(&q) {
+                *u += v;
+            }
+            p
+        },
+    )
+    .expect("matvec_t_into: nonempty reduction");
+    y.copy_from_slice(&acc);
 }
 
 /// Naive reference matmul used by tests to validate the blocked kernels.
@@ -342,6 +516,29 @@ mod tests {
         let w2 = matvec(&a.transpose(), &z);
         for j in 0..11 {
             assert!((w1[j] - w2[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kernels_are_bitwise_identical_across_thread_counts() {
+        // sizes chosen above the PAR_MIN_FLOPS gate so the budget actually
+        // changes the partition
+        let mut rng = Rng::seed_from(17);
+        let a = rand_matrix(&mut rng, 600, 200);
+        let b = rand_matrix(&mut rng, 200, 150);
+        let x: Vec<f64> = (0..200).map(|_| rng.gaussian()).collect();
+        let z: Vec<f64> = (0..600).map(|_| rng.gaussian()).collect();
+        let base = crate::par::with_threads(1, || {
+            (matmul(&a, &b), syrk_t(&a), matvec(&a, &x), matvec_t(&a, &z))
+        });
+        for t in [2usize, 4, 7] {
+            let got = crate::par::with_threads(t, || {
+                (matmul(&a, &b), syrk_t(&a), matvec(&a, &x), matvec_t(&a, &z))
+            });
+            assert_eq!(base.0.data, got.0.data, "matmul differs at {t} threads");
+            assert_eq!(base.1.data, got.1.data, "syrk differs at {t} threads");
+            assert_eq!(base.2, got.2, "matvec differs at {t} threads");
+            assert_eq!(base.3, got.3, "matvec_t differs at {t} threads");
         }
     }
 }

@@ -1,0 +1,513 @@
+//! Zero-dependency parallel execution layer (scoped threads, no rayon).
+//!
+//! Every hot kernel in the crate — GEMM/SYRK, the FWHT, sketch sampling and
+//! application, preconditioner formation, block-PCG sweeps — runs on this
+//! module instead of improvising its own threads. Two properties are load-
+//! bearing for the rest of the system:
+//!
+//! 1. **Thread-budget composition.** A single global budget (default: the
+//!    machine's available parallelism, overridable via `--threads`,
+//!    `[runtime] threads`, or `SKETCHSOLVE_THREADS`) bounds the total kernel
+//!    thread count. Scopes can narrow it ([`with_threads`]): the coordinator
+//!    gives each of its W workers a `budget/W` share, and every thread this
+//!    module spawns runs its slice with a budget of 1, so nested kernels
+//!    (e.g. a matvec inside a per-column preconditioner solve that is itself
+//!    parallelized over columns) never oversubscribe the box.
+//!
+//! 2. **Determinism.** Partitioning is by contiguous chunks of the *output*
+//!    (each element written by exactly one thread, reduced in the same
+//!    sequential order as the single-threaded code), and any chunking that
+//!    feeds an RNG stream uses boundaries that depend only on the problem
+//!    shape — never on the thread budget. A given seed therefore produces
+//!    bit-identical results at any thread count, which is what keeps the
+//!    adaptive controller's improvement test and the paper-reproduction
+//!    benches stable across machines.
+//!
+//! Panics in worker closures propagate to the caller: `std::thread::scope`
+//! re-raises a child panic when the scope joins.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Shared spawn-amortization gate: below this flop count a kernel stays on
+/// the calling thread (scoped-thread spawn latency ~10 µs each would exceed
+/// the work). One constant for every gated kernel — gemm/syrk, SJLT apply,
+/// Woodbury W_S — so retuning keeps them in sync. Gates depend only on the
+/// problem shape, never the budget, so they cannot affect determinism.
+pub const PAR_MIN_FLOPS: f64 = 4.0e6;
+
+/// Global kernel thread budget; 0 = not yet resolved.
+static GLOBAL_BUDGET: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread budget override; 0 = inherit the global budget.
+    static LOCAL_BUDGET: Cell<usize> = Cell::new(0);
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the global kernel thread budget (clamped to >= 1). Call once at
+/// startup (e.g. from `--threads`); later calls simply re-point the budget.
+pub fn set_max_threads(n: usize) {
+    GLOBAL_BUDGET.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The global kernel thread budget. Resolved on first use from
+/// `SKETCHSOLVE_THREADS`, falling back to the hardware parallelism.
+pub fn max_threads() -> usize {
+    match GLOBAL_BUDGET.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::env::var("SKETCHSOLVE_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or_else(hardware_threads);
+            GLOBAL_BUDGET.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// The budget visible to the current thread: a [`with_threads`] override if
+/// one is active, else the global budget.
+pub fn effective_threads() -> usize {
+    let local = LOCAL_BUDGET.with(|b| b.get());
+    if local > 0 {
+        local
+    } else {
+        max_threads()
+    }
+}
+
+/// Run `f` with this thread's budget narrowed to `n` (restored afterwards,
+/// panic-safe). This is how coordinator workers take their share of the
+/// global budget, and how kernel worker threads are pinned to 1.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_BUDGET.with(|b| b.set(self.0));
+        }
+    }
+    let prev = LOCAL_BUDGET.with(|b| b.replace(n.max(1)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Deterministic contiguous partition of `0..n` into at most `parts`
+/// non-empty ranges (fewer when `n < parts`).
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Number of worker parts to use for `n` units of work when each part should
+/// hold at least `min_grain` units: `min(effective_threads(), n/min_grain)`,
+/// at least 1. Deterministic given the same budget, and harmless to results
+/// either way (partition count never affects values, only speed).
+pub fn parts_for(n: usize, min_grain: usize) -> usize {
+    let cap = (n / min_grain.max(1)).max(1);
+    effective_threads().min(cap).max(1)
+}
+
+/// Turn `chunk_ranges(n, parts)` into ascending row boundaries
+/// `[0, b1, ..., n]` for the `*_chunks_mut` helpers. Returns `[0]` when
+/// `n == 0` (no chunks).
+pub fn uniform_boundaries(n: usize, parts: usize) -> Vec<usize> {
+    let mut b = vec![0usize];
+    for r in chunk_ranges(n, parts) {
+        b.push(r.end);
+    }
+    b
+}
+
+/// Ascending row boundaries `[0, ..., n]` splitting rows into at most
+/// `parts` contiguous chunks of approximately equal total `weight(row)`.
+/// Used by triangular kernels (SYRK, Woodbury Gram) whose per-row cost
+/// shrinks with the row index.
+pub fn weighted_boundaries(n: usize, parts: usize, weight: impl Fn(usize) -> f64) -> Vec<usize> {
+    let parts = parts.max(1).min(n.max(1));
+    let mut b = vec![0usize];
+    if n == 0 {
+        return b;
+    }
+    let total: f64 = (0..n).map(&weight).sum();
+    if parts > 1 && total > 0.0 {
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += weight(i);
+            let k = b.len(); // index of the next interior cut (1-based)
+            if k < parts && acc >= total * (k as f64) / (parts as f64) {
+                b.push(i + 1);
+            }
+        }
+    }
+    b.push(n);
+    b.dedup();
+    b
+}
+
+/// Run `f(first_row, chunk)` over the row-chunks of a row-major buffer, one
+/// scoped thread per chunk (the first chunk runs on the caller's thread).
+///
+/// `boundaries` are ascending row indices starting at 0 and ending at
+/// `data.len() / width`; chunk `i` covers rows `boundaries[i]..boundaries[i+1]`
+/// and receives the matching contiguous `&mut` sub-slice, so the borrow
+/// checker enforces disjointness. Worker threads run with a thread budget of
+/// 1 (see module docs).
+pub fn parallel_chunks_mut<U, F>(data: &mut [U], width: usize, boundaries: &[usize], f: F)
+where
+    U: Send,
+    F: Fn(usize, &mut [U]) + Sync,
+{
+    let parts = boundaries.len().saturating_sub(1);
+    if parts == 0 {
+        return;
+    }
+    if parts == 1 {
+        f(boundaries[0], data);
+        return;
+    }
+    std::thread::scope(|s| {
+        let fref = &f;
+        let mut rest: &mut [U] = data;
+        let mut consumed = 0usize;
+        let mut first: Option<&mut [U]> = None;
+        for w in 0..parts {
+            let start_row = boundaries[w];
+            let end_elems = boundaries[w + 1] * width;
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(end_elems - consumed);
+            rest = tail;
+            consumed = end_elems;
+            if w == 0 {
+                // defer: run the first chunk on this thread after spawning
+                // the rest, so the caller overlaps with its workers
+                first = Some(head);
+                continue;
+            }
+            s.spawn(move || with_threads(1, || fref(start_row, head)));
+        }
+        // first chunk on the calling thread (budget narrowed like workers')
+        if let Some(head) = first {
+            with_threads(1, || fref(boundaries[0], head));
+        }
+    });
+}
+
+/// Like [`parallel_chunks_mut`], but over *fixed-size* row blocks whose
+/// boundaries depend only on `(rows, block_rows)` — never on the thread
+/// budget. `f(first_row, block)` is invoked once per block; blocks are
+/// distributed over at most `effective_threads()` scoped threads in
+/// contiguous runs. This is the primitive for parallel *sampling*: a block's
+/// RNG stream is keyed by its first row, so the sampled object is identical
+/// at every thread count.
+pub fn parallel_row_blocks_mut<U, F>(data: &mut [U], width: usize, block_rows: usize, f: F)
+where
+    U: Send,
+    F: Fn(usize, &mut [U]) + Sync,
+{
+    if data.is_empty() || width == 0 {
+        return;
+    }
+    let rows = data.len() / width;
+    let block_rows = block_rows.max(1);
+    let blocks = (rows + block_rows - 1) / block_rows;
+    let threads = effective_threads().min(blocks);
+    if threads <= 1 {
+        let mut row0 = 0usize;
+        for blk in data.chunks_mut(block_rows * width) {
+            f(row0, blk);
+            row0 += block_rows;
+        }
+        return;
+    }
+    let runs = chunk_ranges(blocks, threads);
+    std::thread::scope(|s| {
+        let fref = &f;
+        let mut rest: &mut [U] = data;
+        let mut consumed_rows = 0usize;
+        for (t, run) in runs.iter().cloned().enumerate() {
+            let row_start = run.start * block_rows;
+            let row_end = (run.end * block_rows).min(rows);
+            let (head, tail) =
+                std::mem::take(&mut rest).split_at_mut((row_end - consumed_rows) * width);
+            rest = tail;
+            consumed_rows = row_end;
+            let work = move |budget_f: &F| {
+                let mut row0 = row_start;
+                for blk in head.chunks_mut(block_rows * width) {
+                    budget_f(row0, blk);
+                    row0 += block_rows;
+                }
+            };
+            if t + 1 == runs.len() {
+                // last run on the calling thread
+                with_threads(1, || work(fref));
+            } else {
+                s.spawn(move || with_threads(1, || work(fref)));
+            }
+        }
+    });
+}
+
+/// Ordered parallel reduction: map fixed `grain`-sized chunks of `0..n`
+/// (boundaries depend only on `(n, grain)`), then fold the per-chunk values
+/// **in ascending chunk order** on the caller's thread. Identical result at
+/// any thread count, including 1. Returns `None` for `n == 0`.
+pub fn parallel_reduce<T, M, F>(n: usize, grain: usize, map: M, mut fold: F) -> Option<T>
+where
+    T: Send,
+    M: Fn(Range<usize>) -> T + Sync,
+    F: FnMut(T, T) -> T,
+{
+    if n == 0 {
+        return None;
+    }
+    let grain = grain.max(1);
+    let num_chunks = (n + grain - 1) / grain;
+    let threads = effective_threads().min(num_chunks);
+    let mut results: Vec<Option<T>> = (0..num_chunks).map(|_| None).collect();
+    if threads <= 1 {
+        for (c, slot) in results.iter_mut().enumerate() {
+            *slot = Some(map((c * grain)..((c + 1) * grain).min(n)));
+        }
+    } else {
+        let runs = chunk_ranges(num_chunks, threads);
+        std::thread::scope(|s| {
+            let mapref = &map;
+            let mut rest: &mut [Option<T>] = &mut results;
+            for (t, run) in runs.iter().cloned().enumerate() {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(run.len());
+                rest = tail;
+                let work = move |m: &M| {
+                    for (slot, c) in head.iter_mut().zip(run) {
+                        *slot = Some(m((c * grain)..((c + 1) * grain).min(n)));
+                    }
+                };
+                if t + 1 == runs.len() {
+                    with_threads(1, || work(mapref));
+                } else {
+                    s.spawn(move || with_threads(1, || work(mapref)));
+                }
+            }
+        });
+    }
+    let mut acc: Option<T> = None;
+    for r in results {
+        let v = r.expect("parallel_reduce: chunk not computed");
+        acc = Some(match acc {
+            None => v,
+            Some(a) => fold(a, v),
+        });
+    }
+    acc
+}
+
+/// A raw mutable pointer that is `Send + Sync`, for kernels whose per-thread
+/// write sets are disjoint but not contiguous (e.g. a column-partitioned
+/// transform over a row-major buffer, where each thread touches an
+/// interleaved stripe).
+///
+/// # Safety contract
+/// The caller must guarantee that (a) every `slice_mut` range is in bounds
+/// of the original allocation, and (b) ranges handed to concurrently running
+/// threads never overlap.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    /// Reborrow `len` elements starting at `offset` as a mutable slice.
+    ///
+    /// # Safety
+    /// See the type-level contract: in-bounds, and disjoint from every
+    /// slice alive on another thread.
+    #[inline(always)]
+    pub unsafe fn slice_mut<'a>(&self, offset: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunk_ranges_cover_and_are_contiguous() {
+        for &(n, parts) in &[(0usize, 4usize), (1, 4), (4, 4), (5, 4), (103, 7), (7, 103)] {
+            let rs = chunk_ranges(n, parts);
+            if n == 0 {
+                assert!(rs.is_empty());
+                continue;
+            }
+            assert!(rs.len() <= parts.max(1));
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            assert!(rs.iter().all(|r| !r.is_empty()));
+        }
+    }
+
+    #[test]
+    fn boundaries_uniform_and_weighted() {
+        assert_eq!(uniform_boundaries(0, 3), vec![0]);
+        let b = uniform_boundaries(10, 3);
+        assert_eq!(*b.first().unwrap(), 0);
+        assert_eq!(*b.last().unwrap(), 10);
+        // triangular weights: the first chunk should be the narrowest
+        let w = weighted_boundaries(100, 4, |i| (100 - i) as f64);
+        assert_eq!(*w.first().unwrap(), 0);
+        assert_eq!(*w.last().unwrap(), 100);
+        assert!(w.windows(2).all(|p| p[0] < p[1]), "{w:?}");
+        let first = w[1] - w[0];
+        let last = w[w.len() - 1] - w[w.len() - 2];
+        assert!(first < last, "weighted split should front-load fewer rows: {w:?}");
+        // degenerate inputs
+        assert_eq!(weighted_boundaries(0, 4, |_| 1.0), vec![0]);
+        assert_eq!(weighted_boundaries(5, 1, |_| 1.0), vec![0, 5]);
+    }
+
+    #[test]
+    fn chunks_mut_visits_every_row_once() {
+        let rows = 37;
+        let width = 3;
+        let mut data = vec![0.0f64; rows * width];
+        let bounds = uniform_boundaries(rows, 5);
+        parallel_chunks_mut(&mut data, width, &bounds, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(width).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + r) as f64 + 1.0;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..width {
+                assert_eq!(data[r * width + c], r as f64 + 1.0, "row {r}");
+            }
+        }
+        // empty data / single chunk / chunk larger than n are all fine
+        let mut empty: Vec<f64> = Vec::new();
+        parallel_chunks_mut(&mut empty, 4, &uniform_boundaries(0, 8), |_, _| panic!("no chunks"));
+        let mut one = vec![0.0f64; 2];
+        parallel_chunks_mut(&mut one, 1, &uniform_boundaries(2, 64), |row0, chunk| {
+            for (r, v) in chunk.iter_mut().enumerate() {
+                *v = (row0 + r) as f64;
+            }
+        });
+        assert_eq!(one, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn row_blocks_boundaries_are_budget_independent() {
+        // fill each block from a block-keyed "stream"; any thread budget
+        // must produce the same buffer
+        let rows = 301;
+        let fill = |budget: usize| {
+            with_threads(budget, || {
+                let mut data = vec![0u64; rows];
+                parallel_row_blocks_mut(&mut data, 1, 64, |row0, blk| {
+                    let mut x = row0 as u64 + 1;
+                    for v in blk.iter_mut() {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        *v = x;
+                    }
+                });
+                data
+            })
+        };
+        let base = fill(1);
+        for t in [2, 3, 8] {
+            assert_eq!(fill(t), base, "budget {t} changed block contents");
+        }
+    }
+
+    #[test]
+    fn reduce_is_ordered_and_budget_independent() {
+        let n = 10_000;
+        let xs: Vec<f64> = (0..n).map(|i| ((i * 37) % 101) as f64 * 1e-3 + 0.1).collect();
+        let sum_with = |budget: usize| {
+            with_threads(budget, || {
+                parallel_reduce(n, 128, |r| r.map(|i| xs[i]).sum::<f64>(), |a, b| a + b).unwrap()
+            })
+        };
+        let s1 = sum_with(1);
+        for t in [2, 4, 16] {
+            let st = sum_with(t);
+            assert_eq!(s1.to_bits(), st.to_bits(), "budget {t} changed the reduction");
+        }
+        assert!(parallel_reduce(0, 8, |_| 0.0f64, |a, b| a + b).is_none());
+        // grain larger than n: single chunk
+        assert_eq!(parallel_reduce(3, 100, |r| r.len(), |a, b| a + b), Some(3));
+    }
+
+    #[test]
+    fn budget_scoping_and_restore() {
+        let outer = effective_threads();
+        let inner = with_threads(3, || {
+            let mid = effective_threads();
+            let deepest = with_threads(1, effective_threads);
+            (mid, deepest)
+        });
+        assert_eq!(inner, (3, 1));
+        assert_eq!(effective_threads(), outer);
+        // restored even when the closure panics
+        let _ = catch_unwind(AssertUnwindSafe(|| with_threads(2, || panic!("boom"))));
+        assert_eq!(effective_threads(), outer);
+    }
+
+    #[test]
+    fn worker_panics_propagate() {
+        let mut data = vec![0u8; 64];
+        let bounds = uniform_boundaries(64, 4);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                parallel_chunks_mut(&mut data, 1, &bounds, |row0, _| {
+                    if row0 > 0 {
+                        panic!("worker panic");
+                    }
+                });
+            })
+        }));
+        assert!(res.is_err(), "panic in a scoped worker must propagate");
+    }
+
+    #[test]
+    fn workers_run_with_unit_budget() {
+        // nested kernels inside a parallel region must see budget 1
+        let seen = AtomicU64::new(0);
+        let mut data = vec![0u8; 8];
+        let bounds = uniform_boundaries(8, 4);
+        with_threads(4, || {
+            parallel_chunks_mut(&mut data, 1, &bounds, |_, _| {
+                seen.fetch_max(effective_threads() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 1);
+    }
+}

@@ -44,6 +44,11 @@ enum Inner {
 impl SketchedPreconditioner {
     /// Build from an already-computed sketch `SA` (m x d) and the problem's
     /// regularization. Chooses the primal or Woodbury path by m vs d.
+    ///
+    /// Both formations run on the parallel layer: the primal Gram goes
+    /// through the row-partitioned `syrk_t`, and the Woodbury `W_S` is
+    /// chunked here — either way the factorized operator is bit-identical
+    /// at any thread count.
     pub fn build(sa: Matrix, lambda: &[f64], nu: f64) -> Result<Self, CholeskyError> {
         let m = sa.rows;
         let d = sa.cols;
@@ -70,13 +75,29 @@ impl SketchedPreconditioner {
                     row[j] *= lam_inv[j].sqrt();
                 }
             }
-            // W[i][j] = <scaled_i, scaled_j>
+            // W[i][j] = <scaled_i, scaled_j>: upper-triangle rows of W are
+            // partitioned over the thread budget with flop-balanced
+            // (triangular-weight) boundaries, then mirrored — each entry is
+            // one dot product, so the result is identical at any partition
             let mut w = Matrix::zeros(m, m);
+            let parts = if (m as f64) * (m as f64) * (d as f64) < crate::par::PAR_MIN_FLOPS {
+                1
+            } else {
+                crate::par::parts_for(m, 8)
+            };
+            let bounds = crate::par::weighted_boundaries(m, parts, |i| (m - i) as f64);
+            crate::par::parallel_chunks_mut(&mut w.data, m, &bounds, |i0, chunk| {
+                let rows_here = chunk.len() / m;
+                for li in 0..rows_here {
+                    let i = i0 + li;
+                    for j in i..m {
+                        chunk[li * m + j] = crate::linalg::dot(scaled.row(i), scaled.row(j));
+                    }
+                }
+            });
             for i in 0..m {
-                for j in i..m {
-                    let v = crate::linalg::dot(scaled.row(i), scaled.row(j));
-                    w.data[i * m + j] = v;
-                    w.data[j * m + i] = v;
+                for j in 0..i {
+                    w.data[i * m + j] = w.data[j * m + i];
                 }
             }
             for i in 0..m {

@@ -6,7 +6,13 @@
 //! apply: `O(mnd)` flops for a dense data matrix.
 
 use crate::linalg::{matmul, Matrix};
+use crate::par;
 use crate::rng::Rng;
+
+/// Rows per sampling block. Fixed (never derived from the thread budget) so
+/// the per-block RNG streams — and therefore the sampled S — are identical
+/// at every thread count.
+const SAMPLE_BLOCK_ROWS: usize = 64;
 
 /// A sampled dense Gaussian sketching matrix.
 pub struct GaussianSketch {
@@ -16,9 +22,21 @@ pub struct GaussianSketch {
 
 impl GaussianSketch {
     /// Sample an `m x n` Gaussian embedding.
+    ///
+    /// Sampling is block-parallel: the parent RNG deterministically emits
+    /// one seed per fixed 64-row block, and blocks fill concurrently from
+    /// their own child streams.
     pub fn sample(m: usize, n: usize, rng: &mut Rng) -> GaussianSketch {
         let scale = 1.0 / (m as f64).sqrt();
-        let data = (0..m * n).map(|_| rng.gaussian() * scale).collect();
+        let blocks = (m + SAMPLE_BLOCK_ROWS - 1) / SAMPLE_BLOCK_ROWS;
+        let seeds: Vec<u64> = (0..blocks).map(|_| rng.next_u64()).collect();
+        let mut data = vec![0.0f64; m * n];
+        par::parallel_row_blocks_mut(&mut data, n, SAMPLE_BLOCK_ROWS, |row0, block| {
+            let mut child = Rng::seed_from(seeds[row0 / SAMPLE_BLOCK_ROWS]);
+            for v in block.iter_mut() {
+                *v = child.gaussian() * scale;
+            }
+        });
         GaussianSketch { s: Matrix::from_vec(m, n, data) }
     }
 
@@ -50,6 +68,20 @@ mod tests {
         // entries ~ N(0, 1/64): empirical variance of all entries
         let var: f64 = s.s.data.iter().map(|v| v * v).sum::<f64>() / (64.0 * 128.0);
         assert!((var - 1.0 / 64.0).abs() < 0.003, "var={var}");
+    }
+
+    #[test]
+    fn sampling_is_thread_count_independent() {
+        let draw = |threads: usize| {
+            crate::par::with_threads(threads, || {
+                let mut rng = Rng::seed_from(99);
+                GaussianSketch::sample(200, 37, &mut rng).s.data
+            })
+        };
+        let base = draw(1);
+        for t in [2, 4, 8] {
+            assert_eq!(base, draw(t), "gaussian sample differs at {t} threads");
+        }
     }
 
     #[test]

@@ -112,13 +112,11 @@ impl Sketch {
         }
     }
 
-    /// Materialize dense `S` (tests / small-scale diagnostics only).
+    /// Materialize dense `S` (tests / small-scale diagnostics only):
+    /// `S = S * I_n`.
     pub fn to_dense(&self) -> Matrix {
-        let n = self.n();
-        let mut eye = Matrix::eye(n);
-        // S = S * I_n
-        let d = self.apply(&mut eye);
-        d
+        let eye = Matrix::eye(self.n());
+        self.apply(&eye)
     }
 }
 

@@ -6,7 +6,13 @@
 //! s = 1 by default; the general `s >= 1` (OSNAP) is supported.
 
 use crate::linalg::Matrix;
+use crate::par;
 use crate::rng::Rng;
+
+/// Columns per sampling block. Fixed (never derived from the thread budget)
+/// so the per-block RNG streams — and therefore the sampled S — are
+/// identical at every thread count.
+const SAMPLE_BLOCK_COLS: usize = 512;
 
 /// A sampled SJLT embedding in compressed per-column form.
 pub struct SjltSketch {
@@ -21,24 +27,33 @@ pub struct SjltSketch {
 
 impl SjltSketch {
     /// Sample an `m x n` SJLT with `s` nonzeros per column.
+    ///
+    /// Sampling is block-parallel over fixed 512-column blocks, each drawing
+    /// from its own child stream seeded by the parent RNG.
     pub fn sample(m: usize, n: usize, s: usize, rng: &mut Rng) -> SjltSketch {
         assert!(s >= 1, "SJLT: s must be >= 1");
         let s = s.min(m); // cannot place more nonzeros than rows
         let scale = 1.0 / (s as f64).sqrt();
-        let mut rows = Vec::with_capacity(n * s);
-        let mut vals = Vec::with_capacity(n * s);
-        for _ in 0..n {
-            if s == 1 {
-                // fast path: single row draw
-                rows.push(rng.below(m) as u32);
-                vals.push(rng.rademacher() * scale);
-            } else {
-                for r in rng.sample_without_replacement(s, m) {
-                    rows.push(r as u32);
-                    vals.push(rng.rademacher() * scale);
+        let blocks = (n + SAMPLE_BLOCK_COLS - 1) / SAMPLE_BLOCK_COLS.max(1);
+        let seeds: Vec<u64> = (0..blocks).map(|_| rng.next_u64()).collect();
+        // (row, sign) pairs sampled together so each column's draws stay in
+        // one stream; split into the two storage arrays afterwards
+        let mut entries: Vec<(u32, f64)> = vec![(0, 0.0); n * s];
+        par::parallel_row_blocks_mut(&mut entries, s, SAMPLE_BLOCK_COLS, |col0, block| {
+            let mut child = Rng::seed_from(seeds[col0 / SAMPLE_BLOCK_COLS]);
+            for seg in block.chunks_mut(s) {
+                if s == 1 {
+                    // fast path: single row draw
+                    seg[0] = (child.below(m) as u32, child.rademacher() * scale);
+                } else {
+                    for (slot, r) in seg.iter_mut().zip(child.sample_without_replacement(s, m)) {
+                        *slot = (r as u32, child.rademacher() * scale);
+                    }
                 }
             }
-        }
+        });
+        let rows = entries.iter().map(|e| e.0).collect();
+        let vals = entries.iter().map(|e| e.1).collect();
         SjltSketch { m, n, s, rows, vals }
     }
 
@@ -56,22 +71,41 @@ impl SjltSketch {
 
     /// `S * A`: scatter-accumulate rows of A into the m output rows.
     /// Cost `O(s · n · d)` for dense A (i.e. `O(s · nnz(A))`).
+    ///
+    /// Parallelism: the *output* rows are partitioned — each worker scans
+    /// the whole nonzero list but accumulates only entries landing in its
+    /// own row chunk, in the same ascending column order as the sequential
+    /// sweep. The duplicated scan is `O(s·n)` per worker against `O(s·n·d)`
+    /// of accumulate work, and the owner-computes rule keeps the result
+    /// bit-identical at any thread count (no scatter races, no atomics).
     pub fn apply(&self, a: &Matrix) -> Matrix {
         assert_eq!(a.rows, self.n, "apply: A must have n rows");
         let d = a.cols;
         let mut out = Matrix::zeros(self.m, d);
-        for j in 0..self.n {
-            let arow = a.row(j);
-            for k in 0..self.s {
-                let idx = j * self.s + k;
-                let r = self.rows[idx] as usize;
-                let v = self.vals[idx];
-                let orow = &mut out.data[r * d..r * d + d];
-                for t in 0..d {
-                    orow[t] += v * arow[t];
+        if self.m == 0 || d == 0 {
+            return out;
+        }
+        let work = (self.s as f64) * (self.n as f64) * (d as f64);
+        let parts = if 2.0 * work < par::PAR_MIN_FLOPS { 1 } else { par::parts_for(self.m, 8) };
+        let bounds = par::uniform_boundaries(self.m, parts);
+        par::parallel_chunks_mut(&mut out.data, d, &bounds, |r0, chunk| {
+            let rows_here = chunk.len() / d;
+            for j in 0..self.n {
+                let arow = a.row(j);
+                for k in 0..self.s {
+                    let idx = j * self.s + k;
+                    let r = self.rows[idx] as usize;
+                    if r < r0 || r >= r0 + rows_here {
+                        continue;
+                    }
+                    let v = self.vals[idx];
+                    let orow = &mut chunk[(r - r0) * d..(r - r0) * d + d];
+                    for t in 0..d {
+                        orow[t] += v * arow[t];
+                    }
                 }
             }
-        }
+        });
         out
     }
 }
@@ -102,6 +136,26 @@ mod tests {
         let mut rng = Rng::seed_from(63);
         let s = SjltSketch::sample(2, 5, 10, &mut rng);
         assert_eq!(s.nnz_per_col(), 2);
+    }
+
+    #[test]
+    fn sampling_and_apply_are_thread_count_independent() {
+        // dims sized above the apply gate (2·s·n·d >= 4e6) so the thread
+        // budget actually changes the partition
+        let (m, n, d) = (64usize, 4096usize, 256usize);
+        let run = |threads: usize| {
+            crate::par::with_threads(threads, || {
+                let mut rng = Rng::seed_from(67);
+                let sk = SjltSketch::sample(m, n, 2, &mut rng);
+                let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+                let sa = sk.apply(&a);
+                (sk.rows, sk.vals, sa.data)
+            })
+        };
+        let base = run(1);
+        for t in [2, 4, 8] {
+            assert_eq!(base, run(t), "sjlt sample/apply differs at {t} threads");
+        }
     }
 
     #[test]

@@ -61,6 +61,13 @@ impl Flags {
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.get(name) == Some("true")
     }
+
+    /// The shared `--threads` knob: kernel thread budget for the parallel
+    /// execution layer (`None`/0 = auto-detect from the hardware). Every
+    /// binary passes this to `par::set_max_threads` at startup.
+    pub fn threads(&self) -> Option<usize> {
+        self.get_parse::<usize>("threads").filter(|&n| n > 0)
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +93,13 @@ mod tests {
         let f = parse("bench");
         assert_eq!(f.get_parse_or::<f64>("rho", 0.125), 0.125);
         assert_eq!(f.get_or("sketch", "sjlt"), "sjlt");
+    }
+
+    #[test]
+    fn threads_knob() {
+        assert_eq!(parse("solve --threads 4").threads(), Some(4));
+        assert_eq!(parse("solve --threads 0").threads(), None);
+        assert_eq!(parse("solve").threads(), None);
     }
 
     #[test]

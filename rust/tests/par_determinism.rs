@@ -1,0 +1,95 @@
+//! Determinism of the parallel execution layer, end to end: a given seed
+//! must produce **bit-identical** solver output at any thread count, for
+//! every sketch route. This is the contract that keeps the adaptive
+//! controller's improvement test and the paper-reproduction benches stable
+//! across machines and budgets (see `par` module docs).
+
+use sketchsolve::adaptive::{AdaptiveConfig, AdaptivePcg};
+use sketchsolve::data::synthetic::SyntheticSpec;
+use sketchsolve::par;
+use sketchsolve::precond::SketchedPreconditioner;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{BlockPcg, Pcg, StopRule};
+
+const KINDS: [SketchKind; 3] = [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }];
+
+#[test]
+fn adaptive_pcg_iterates_are_identical_across_thread_counts() {
+    for kind in KINDS {
+        let solve = |threads: usize| {
+            par::with_threads(threads, || {
+                let ds = SyntheticSpec::paper_profile(1024, 64).build(7);
+                let prob = ds.problem(1e-2);
+                let cfg = AdaptiveConfig { sketch: kind, seed: 11, tol: 1e-10, ..Default::default() };
+                let rep = AdaptivePcg::with_config(cfg).solve(&prob, 40);
+                (rep.x, rep.iterations, rep.final_m, rep.sketch_doublings)
+            })
+        };
+        let base = solve(1);
+        for t in [2usize, 4] {
+            let got = solve(t);
+            assert_eq!(base.1, got.1, "{kind:?}: iteration count differs at {t} threads");
+            assert_eq!(base.2, got.2, "{kind:?}: final sketch size differs at {t} threads");
+            assert_eq!(base.3, got.3, "{kind:?}: doubling count differs at {t} threads");
+            // bitwise: the improvement test must have taken identical
+            // branches, so the iterates agree to the last ulp
+            assert_eq!(base.0, got.0, "{kind:?}: solution differs at {t} threads");
+        }
+    }
+}
+
+#[test]
+fn fixed_pcg_is_identical_across_thread_counts() {
+    for kind in KINDS {
+        let solve = |threads: usize| {
+            par::with_threads(threads, || {
+                let ds = SyntheticSpec::paper_profile(768, 96).build(13);
+                let prob = ds.problem(1e-1);
+                let mut rng = Rng::seed_from(17);
+                let sk = kind.sample(192, prob.n(), &mut rng);
+                let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+                Pcg::solve_fixed(&prob, &pre, StopRule { max_iters: 30, tol: 1e-12 }, None).x
+            })
+        };
+        let base = solve(1);
+        for t in [2usize, 4] {
+            assert_eq!(base, solve(t), "{kind:?}: fixed PCG differs at {t} threads");
+        }
+    }
+}
+
+#[test]
+fn block_pcg_is_identical_across_thread_counts() {
+    // multi-RHS route: the H·P sweep, the per-column preconditioner solves
+    // and the Woodbury path all run through the parallel layer
+    for &m in &[32usize, 160] {
+        // m < d exercises Woodbury, m > d the primal Cholesky
+        let solve = |threads: usize| {
+            par::with_threads(threads, || {
+                let mut rng = Rng::seed_from(23);
+                let (n, d, c) = (512usize, 64usize, 6usize);
+                let a = sketchsolve::linalg::Matrix::from_vec(
+                    n,
+                    d,
+                    (0..n * d).map(|_| rng.gaussian()).collect(),
+                );
+                let b = sketchsolve::linalg::Matrix::from_vec(
+                    d,
+                    c,
+                    (0..d * c).map(|_| rng.gaussian()).collect(),
+                );
+                let prob = Problem::ridge(a, b.col(0), 0.5);
+                let sk = SketchKind::Gaussian.sample(m, prob.n(), &mut rng);
+                let pre = SketchedPreconditioner::from_sketch(&prob, &sk).unwrap();
+                let rep = BlockPcg::solve(&prob, &b, &pre, StopRule { max_iters: 25, tol: 1e-12 });
+                (rep.x.data, rep.iterations)
+            })
+        };
+        let base = solve(1);
+        for t in [2usize, 4] {
+            assert_eq!(base, solve(t), "m={m}: block PCG differs at {t} threads");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Local mirror of the tier-1 verification (and the ci.yml build-test job).
+# Usage: scripts/verify.sh [--quick]
+#   --quick   skip the release build (debug test run only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK=0
+[[ "${1:-}" == "--quick" ]] && QUICK=1
+
+if [[ "$QUICK" == "0" ]]; then
+  echo "== cargo build --release =="
+  cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+# advisory: the bench targets must at least compile
+echo "== cargo bench --no-run =="
+cargo bench --no-run
+
+if command -v rustfmt >/dev/null 2>&1; then
+  echo "== cargo fmt --check (advisory) =="
+  cargo fmt --all -- --check || echo "note: formatting differs (advisory only)"
+fi
+
+echo "verify: OK"
