@@ -9,6 +9,7 @@
 //! Run: `cargo run --release --example ridge_server`
 
 use sketchsolve::adaptive::AdaptiveConfig;
+use sketchsolve::api::SolveRequest;
 use sketchsolve::coordinator::{JobSpec, MultiRhsSolver, RouterPolicy, SolveService};
 use sketchsolve::data::proxies::{proxy_spec, ProxyName};
 use sketchsolve::util::timer::timed;
@@ -55,14 +56,11 @@ fn main() {
         let shared = Arc::new(pds);
         for (ni, nu) in [1e-1, 1e-2, 1e-3].into_iter().enumerate() {
             let prob = shared.problem_for_class(0, nu);
-            svc.submit(JobSpec {
-                id: jobs,
-                problem: Arc::new(prob),
-                route_override: None,
-                t_max: 80,
-                tol: 1e-8,
-                seed: (di * 10 + ni) as u64,
-            });
+            let request = SolveRequest::new(Arc::new(prob))
+                .max_iters(80)
+                .rel_tol(1e-8)
+                .seed((di * 10 + ni) as u64);
+            svc.submit(JobSpec::new(jobs, request));
             jobs += 1;
         }
     }
@@ -70,7 +68,7 @@ fn main() {
     let mut latencies = Vec::new();
     for _ in 0..jobs {
         let r = svc.next_result().expect("result");
-        let rep = r.report.expect("success");
+        let rep = r.outcome.expect("success").report;
         latencies.push(rep.secs);
         println!(
             "  job {:>2}: {:<28} iters={:<4} m={:<5} {:.3}s",

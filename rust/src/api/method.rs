@@ -1,0 +1,152 @@
+//! [`MethodSpec`]: the typed name of a solver configuration.
+//!
+//! One enum subsumes every way the library can attack
+//! `min_x 1/2 <x, Hx> - b^T x`: the exact baseline, plain CG, the
+//! fixed-sketch preconditioned methods, the paper's adaptive controllers,
+//! and the multi-RHS (multiclass) pilot/follower pipeline. The router
+//! returns one, the CLI parses one, the service queues one — there is no
+//! second routing vocabulary (`coordinator::Route` is a deprecated alias).
+
+use crate::sketch::SketchKind;
+
+/// Default step-size parameter ρ for the fixed-sketch IHS / Polyak-IHS
+/// variants (the paper's §4.1 experiments use ρ = 1/8).
+pub const DEFAULT_FIXED_RHO: f64 = 0.125;
+
+/// A fully specified solve method. Sizes left as `None` are resolved
+/// against the problem at solve time (see the variant docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MethodSpec {
+    /// Dense Cholesky factorization of `H` — exact, O(nd² + d³).
+    Direct,
+    /// Unpreconditioned conjugate gradient. `max_iters`, when set, caps the
+    /// iteration count *below* the request's [`Stop`](crate::api::Stop)
+    /// budget (the router sets it from its condition-number estimate).
+    Cg { max_iters: Option<usize> },
+    /// PCG with one fixed sketched preconditioner. `m: None` means the
+    /// paper's oblivious baseline `m = 2d` (the old `pcg_2d_route`).
+    PcgFixed { m: Option<usize>, sketch: SketchKind },
+    /// Fixed-sketch IHS (preconditioned gradient descent, step `1 − ρ`).
+    /// `m: None` defaults to `2d`, like [`MethodSpec::PcgFixed`].
+    Ihs { m: Option<usize>, sketch: SketchKind, rho: f64 },
+    /// Adaptive-sketch PCG (Algorithm 4.2) — the paper's headline method.
+    AdaptivePcg { sketch: SketchKind },
+    /// Adaptive-sketch IHS (the NeurIPS-2020 controller).
+    AdaptiveIhs { sketch: SketchKind },
+    /// Adaptive-sketch Polyak-IHS (Appendix A; certificate is very
+    /// conservative — exposed for the ablation studies).
+    AdaptivePolyak { sketch: SketchKind, rho: f64 },
+    /// Multiclass pilot/follower pipeline: an adaptive PCG pilot on the
+    /// first RHS column discovers the sketch size, then block PCG solves
+    /// the remaining columns with the shared preconditioner. Requires the
+    /// request to carry a `d x c` RHS block (`SolveRequest::rhs_block`).
+    /// `rho`/`m_init`/`growth`/`m_cap` tune the pilot's controller
+    /// (mirroring `AdaptiveConfig`; seed and stop criteria come from the
+    /// request itself).
+    MultiRhs { sketch: SketchKind, rho: f64, m_init: usize, growth: usize, m_cap: Option<usize> },
+}
+
+impl MethodSpec {
+    /// The paper's oblivious `m = 2d` PCG baseline (replaces the old
+    /// free-standing `pcg_2d_route` helper): sketch size resolved to `2d`
+    /// at solve time.
+    pub fn pcg_2d(sketch: SketchKind) -> MethodSpec {
+        MethodSpec::PcgFixed { m: None, sketch }
+    }
+
+    /// Canonical method-family name (matches the registry descriptor and
+    /// round-trips through [`MethodSpec::parse_with`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodSpec::Direct => "direct",
+            MethodSpec::Cg { .. } => "cg",
+            MethodSpec::PcgFixed { .. } => "pcg",
+            MethodSpec::Ihs { .. } => "ihs",
+            MethodSpec::AdaptivePcg { .. } => "adaptive_pcg",
+            MethodSpec::AdaptiveIhs { .. } => "adaptive_ihs",
+            MethodSpec::AdaptivePolyak { .. } => "adaptive_polyak",
+            MethodSpec::MultiRhs { .. } => "multi_rhs",
+        }
+    }
+
+    /// Parse a CLI method name into a spec. `sketch`/`m`/`rho` fill the
+    /// variant parameters where the family takes them (and are ignored
+    /// where it does not); `"pcg2d"` forces the oblivious `m = 2d`
+    /// baseline regardless of `m`.
+    pub fn parse_with(
+        name: &str,
+        sketch: SketchKind,
+        m: Option<usize>,
+        rho: Option<f64>,
+    ) -> Option<MethodSpec> {
+        let spec = match name {
+            "direct" => MethodSpec::Direct,
+            "cg" => MethodSpec::Cg { max_iters: None },
+            "pcg" | "pcg_fixed" => MethodSpec::PcgFixed { m, sketch },
+            "pcg2d" | "pcg_2d" => MethodSpec::pcg_2d(sketch),
+            "ihs" => MethodSpec::Ihs { m, sketch, rho: rho.unwrap_or(DEFAULT_FIXED_RHO) },
+            "adaptive_pcg" => MethodSpec::AdaptivePcg { sketch },
+            "adaptive_ihs" => MethodSpec::AdaptiveIhs { sketch },
+            "adaptive_polyak" => {
+                MethodSpec::AdaptivePolyak { sketch, rho: rho.unwrap_or(DEFAULT_FIXED_RHO) }
+            }
+            "multi_rhs" | "multirhs" => {
+                let defaults = crate::adaptive::AdaptiveConfig::default();
+                MethodSpec::MultiRhs {
+                    sketch,
+                    rho: rho.unwrap_or(defaults.rho),
+                    m_init: defaults.m_init,
+                    growth: defaults.growth,
+                    m_cap: defaults.m_cap,
+                }
+            }
+            _ => return None,
+        };
+        Some(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        let sk = SketchKind::Sjlt { s: 1 };
+        let specs = [
+            MethodSpec::Direct,
+            MethodSpec::Cg { max_iters: None },
+            MethodSpec::PcgFixed { m: None, sketch: sk },
+            MethodSpec::Ihs { m: None, sketch: sk, rho: DEFAULT_FIXED_RHO },
+            MethodSpec::AdaptivePcg { sketch: sk },
+            MethodSpec::AdaptiveIhs { sketch: sk },
+            MethodSpec::AdaptivePolyak { sketch: sk, rho: DEFAULT_FIXED_RHO },
+            {
+                let defaults = crate::adaptive::AdaptiveConfig::default();
+                MethodSpec::MultiRhs {
+                    sketch: sk,
+                    rho: defaults.rho,
+                    m_init: defaults.m_init,
+                    growth: defaults.growth,
+                    m_cap: defaults.m_cap,
+                }
+            },
+        ];
+        for spec in specs {
+            let reparsed = MethodSpec::parse_with(spec.name(), sk, None, None)
+                .unwrap_or_else(|| panic!("{} must parse", spec.name()));
+            assert_eq!(reparsed, spec);
+        }
+        assert_eq!(MethodSpec::parse_with("nope", sk, None, None), None);
+    }
+
+    #[test]
+    fn pcg2d_is_the_oblivious_baseline() {
+        let sk = SketchKind::Srht;
+        assert_eq!(
+            MethodSpec::parse_with("pcg2d", sk, Some(999), None),
+            Some(MethodSpec::PcgFixed { m: None, sketch: sk })
+        );
+        assert_eq!(MethodSpec::pcg_2d(sk), MethodSpec::PcgFixed { m: None, sketch: sk });
+    }
+}

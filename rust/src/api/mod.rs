@@ -1,0 +1,33 @@
+//! The unified solve API: one typed entry point for every method.
+//!
+//! The paper's pitch is a *drop-in* solver family; this module is the
+//! drop-in surface. Build a [`SolveRequest`] (problem handle, a
+//! [`MethodSpec`], unified [`Stop`] criteria, optional warm-start `x0`,
+//! optional `x_star` tracing, a [`Budget`] with deadline/cancellation, a
+//! streaming [`ProgressObserver`]), call [`solve`], get a
+//! [`SolveOutcome`]. Every consumer — `cmd_solve`, the
+//! [`SolveService`](crate::coordinator::SolveService) workers, the
+//! multi-RHS batcher, the benches — flows through this one path.
+//!
+//! Request lifecycle (see DESIGN.md for the full diagram):
+//!
+//! ```text
+//! build (SolveRequest::new + builder) → route (MethodSpec; explicit or
+//! RouterPolicy) → solve (registry lookup → solver loop under the shared
+//! SolveCtx) → observe (IterRecords stream as they happen) → outcome
+//! (SolveStatus + report + optional multi-RHS block)
+//! ```
+//!
+//! Method families self-describe through the [`registry`]: name plus
+//! capabilities (warm-startable, traced, multi-RHS), so new backends are
+//! one [`Solver`] entry away from the CLI, router, and service.
+
+mod method;
+mod outcome;
+mod registry;
+mod request;
+
+pub use method::{MethodSpec, DEFAULT_FIXED_RHO};
+pub use outcome::{SolveError, SolveOutcome, SolveStatus};
+pub use registry::{lookup, registry, solve, MethodDescriptor, Solver};
+pub use request::{Budget, ProgressFn, ProgressObserver, SolveCtx, SolveRequest, Stop};

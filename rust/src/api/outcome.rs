@@ -1,0 +1,133 @@
+//! [`SolveOutcome`]: the typed response of `api::solve`, and its error
+//! type. An outcome always carries a (possibly partial) [`SolveReport`];
+//! the status says whether the stop criteria were reached or the budget
+//! cut the solve short.
+
+use crate::linalg::Matrix;
+use crate::solvers::SolveReport;
+
+/// How a solve ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Ran to its stop criteria (tolerance met or iteration cap).
+    Done,
+    /// Aborted by the [`Budget`](crate::api::Budget) deadline; the outcome
+    /// holds the best iterate reached so far.
+    DeadlineExpired,
+    /// Aborted by the cancellation token; partial outcome as above.
+    Cancelled,
+}
+
+impl SolveStatus {
+    /// True when the budget (not the stop criteria) ended the solve.
+    pub fn aborted(&self) -> bool {
+        !matches!(self, SolveStatus::Done)
+    }
+}
+
+impl std::fmt::Display for SolveStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SolveStatus::Done => "done",
+            SolveStatus::DeadlineExpired => "deadline_expired",
+            SolveStatus::Cancelled => "cancelled",
+        })
+    }
+}
+
+/// Full outcome of one [`SolveRequest`](crate::api::SolveRequest).
+#[derive(Clone)]
+pub struct SolveOutcome {
+    pub status: SolveStatus,
+    /// The solver report (the pilot's report for multi-RHS solves). On an
+    /// aborted solve this is partial: the trace covers the iterations that
+    /// ran and `x` is the last committed iterate.
+    pub report: SolveReport,
+    /// Multi-RHS only: the full `d x c` solution block.
+    pub x_block: Option<Matrix>,
+    /// Multi-RHS only: per-follower summary reports.
+    pub followers: Vec<SolveReport>,
+}
+
+impl SolveOutcome {
+    /// Outcome of a single-RHS solve.
+    pub fn single(status: SolveStatus, report: SolveReport) -> SolveOutcome {
+        SolveOutcome { status, report, x_block: None, followers: Vec::new() }
+    }
+
+    /// True when the budget ended the solve early.
+    pub fn aborted(&self) -> bool {
+        self.status.aborted()
+    }
+}
+
+impl std::fmt::Debug for SolveOutcome {
+    // manual: summarizes instead of dumping iterates (Matrix/SolveReport
+    // payloads are large, and Matrix has no Debug)
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveOutcome")
+            .field("status", &self.status)
+            .field("method", &self.report.method)
+            .field("iterations", &self.report.iterations)
+            .field("final_m", &self.report.final_m)
+            .field("x_block", &self.x_block.as_ref().map(|m| (m.rows, m.cols)))
+            .field("followers", &self.followers.len())
+            .finish()
+    }
+}
+
+/// Why a request could not be executed (distinct from a solve that ran
+/// and was aborted — that is a `SolveStatus`, not an error).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveError {
+    /// `request.method` is `None` and no router filled it in.
+    Unrouted,
+    /// The method's registry descriptor says it cannot warm start.
+    WarmStartUnsupported(&'static str),
+    /// [`MethodSpec::MultiRhs`](crate::api::MethodSpec::MultiRhs) without
+    /// a `rhs_block`.
+    MissingRhsBlock,
+    /// Malformed spec/request combination (message says what).
+    InvalidSpec(String),
+    /// Numerical failure inside the solver (e.g. Cholesky breakdown).
+    Numerical(String),
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Unrouted => {
+                write!(f, "request has no method: set one or submit through a routed service")
+            }
+            SolveError::WarmStartUnsupported(name) => {
+                write!(f, "method '{name}' does not support warm starts (x0 was set)")
+            }
+            SolveError::MissingRhsBlock => {
+                write!(f, "multi_rhs requires a d x c RHS block (SolveRequest::rhs_block)")
+            }
+            SolveError::InvalidSpec(msg) => write!(f, "invalid request: {msg}"),
+            SolveError::Numerical(msg) => write!(f, "numerical failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_semantics() {
+        assert!(!SolveStatus::Done.aborted());
+        assert!(SolveStatus::DeadlineExpired.aborted());
+        assert!(SolveStatus::Cancelled.aborted());
+        assert_eq!(SolveStatus::DeadlineExpired.to_string(), "deadline_expired");
+    }
+
+    #[test]
+    fn errors_display() {
+        assert!(SolveError::Unrouted.to_string().contains("no method"));
+        assert!(SolveError::WarmStartUnsupported("direct").to_string().contains("direct"));
+    }
+}

@@ -1,0 +1,571 @@
+//! The solver registry: every method family self-describes (name,
+//! capabilities) behind one object-safe [`Solver`] trait, and
+//! [`solve`] dispatches a [`SolveRequest`] to the entry that handles its
+//! [`MethodSpec`]. Adding a method = adding one entry here; the CLI usage
+//! text, the service, and the capability checks all pick it up.
+
+use crate::adaptive::{run_adaptive_ctx, AdaptiveConfig};
+use crate::api::method::MethodSpec;
+use crate::api::outcome::{SolveError, SolveOutcome, SolveStatus};
+use crate::api::request::{SolveCtx, SolveRequest};
+use crate::linalg::Matrix;
+use crate::precond::SketchedPreconditioner;
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::sketch::SketchKind;
+use crate::solvers::{
+    run_fixed_preconditioned, BlockPcg, ConjugateGradient, DirectSolver, Ihs, Pcg, PolyakIhs,
+    SolveReport,
+};
+
+/// Self-description of a registered method family.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodDescriptor {
+    /// Canonical name — equals [`MethodSpec::name`] for handled specs.
+    pub name: &'static str,
+    /// One-line summary for usage text.
+    pub summary: &'static str,
+    /// Accepts a warm-start `x0`.
+    pub warm_start: bool,
+    /// Produces per-iteration trace records (and honors `x_star` tracing).
+    pub traced: bool,
+    /// Consumes a `d x c` RHS block.
+    pub multi_rhs: bool,
+}
+
+/// An object-safe solver entry: one per method family.
+pub trait Solver: Send + Sync {
+    fn descriptor(&self) -> MethodDescriptor;
+    /// Does this entry execute the given spec?
+    fn handles(&self, spec: &MethodSpec) -> bool;
+    /// Execute. The budget has already been pre-checked by [`solve`];
+    /// loops re-check it per iteration.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError>;
+}
+
+struct DirectEntry;
+struct CgEntry;
+struct PcgFixedEntry;
+struct IhsEntry;
+struct AdaptivePcgEntry;
+struct AdaptiveIhsEntry;
+struct AdaptivePolyakEntry;
+struct MultiRhsEntry;
+
+static REGISTRY: [&dyn Solver; 8] = [
+    &DirectEntry,
+    &CgEntry,
+    &PcgFixedEntry,
+    &IhsEntry,
+    &AdaptivePcgEntry,
+    &AdaptiveIhsEntry,
+    &AdaptivePolyakEntry,
+    &MultiRhsEntry,
+];
+
+/// All registered method families (stable order: baselines first).
+pub fn registry() -> &'static [&'static dyn Solver] {
+    &REGISTRY
+}
+
+/// The entry handling `spec`, if any (total over the shipped variants).
+pub fn lookup(spec: &MethodSpec) -> Option<&'static dyn Solver> {
+    registry().iter().copied().find(|s| s.handles(spec))
+}
+
+/// The front door: execute a request end to end.
+///
+/// Validates the request against the method's descriptor (warm-start and
+/// multi-RHS capabilities), pre-checks the budget so an already-expired
+/// deadline aborts before any factorization work, then dispatches to the
+/// registered entry.
+pub fn solve(req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+    let spec = req.method.as_ref().ok_or(SolveError::Unrouted)?;
+    let entry = lookup(spec)
+        .ok_or_else(|| SolveError::InvalidSpec(format!("no registered solver for {spec:?}")))?;
+    let desc = entry.descriptor();
+    if let Some(x0) = &req.x0 {
+        if !desc.warm_start {
+            return Err(SolveError::WarmStartUnsupported(desc.name));
+        }
+        if x0.len() != req.problem.d() {
+            return Err(SolveError::InvalidSpec(format!(
+                "x0 has {} entries, problem d={}",
+                x0.len(),
+                req.problem.d()
+            )));
+        }
+    }
+    if desc.multi_rhs {
+        // validate the RHS block up front so a malformed request fails the
+        // same way whether or not the budget has already expired
+        let b_cols = req.b_cols.as_ref().ok_or(SolveError::MissingRhsBlock)?;
+        if b_cols.rows != req.problem.d() || b_cols.cols == 0 {
+            return Err(SolveError::InvalidSpec(format!(
+                "rhs block is {}x{}, expected d={} rows and c >= 1 columns",
+                b_cols.rows,
+                b_cols.cols,
+                req.problem.d()
+            )));
+        }
+    }
+    if let Some(status) = req.budget.exhausted() {
+        let x = req.x0.clone().unwrap_or_else(|| vec![0.0; req.problem.d()]);
+        let mut outcome = SolveOutcome::single(status, aborted_report(desc.name, x));
+        if desc.multi_rhs {
+            // keep the multi-RHS invariant even for a pre-start abort: the
+            // partial block is the start point (all-zero columns)
+            let b_cols = req.b_cols.as_ref().expect("checked above");
+            outcome.x_block = Some(Matrix::zeros(req.problem.d(), b_cols.cols));
+        }
+        return Ok(outcome);
+    }
+    entry.run(spec, req)
+}
+
+/// Report for a solve the budget killed before its first iteration.
+fn aborted_report(method: &str, x: Vec<f64>) -> SolveReport {
+    SolveReport {
+        method: method.into(),
+        x,
+        iterations: 0,
+        trace: Vec::new(),
+        final_m: 0,
+        sketch_doublings: 0,
+        secs: 0.0,
+        sketch_flops: 0.0,
+        factor_flops: 0.0,
+    }
+}
+
+/// Sample an embedding and factor the preconditioner for the fixed-sketch
+/// routes. `m: None` resolves to the oblivious `2d` baseline; either way
+/// `m` is clamped to the padded-n cap the SRHT imposes.
+fn build_fixed_pre(
+    prob: &Problem,
+    kind: SketchKind,
+    m: Option<usize>,
+    seed: u64,
+) -> Result<(SketchedPreconditioner, f64), SolveError> {
+    let cap = crate::linalg::next_pow2(prob.n());
+    let m = m.unwrap_or(2 * prob.d()).max(1).min(cap);
+    let mut rng = Rng::seed_from(seed);
+    let sketch = kind.sample(m, prob.n(), &mut rng);
+    let pre = SketchedPreconditioner::from_sketch(prob, &sketch)
+        .map_err(|e| SolveError::Numerical(e.to_string()))?;
+    Ok((pre, kind.sketch_cost_flops(m, prob.n(), prob.d())))
+}
+
+impl Solver for DirectEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "direct",
+            summary: "dense Cholesky factorization of H (exact baseline)",
+            warm_start: false,
+            traced: false,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::Direct)
+    }
+
+    fn run(&self, _spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let rep = DirectSolver::solve(&req.problem).map_err(|e| SolveError::Numerical(e.to_string()))?;
+        let ctx = req.ctx();
+        for rec in &rep.trace {
+            ctx.emit(rec);
+        }
+        Ok(SolveOutcome::single(SolveStatus::Done, rep))
+    }
+}
+
+impl Solver for CgEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "cg",
+            summary: "unpreconditioned conjugate gradient",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::Cg { .. })
+    }
+
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let cap = match spec {
+            MethodSpec::Cg { max_iters } => *max_iters,
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let mut ctx = req.ctx();
+        if let Some(cap) = cap {
+            ctx.stop.max_iters = ctx.stop.max_iters.min(cap.max(1));
+        }
+        let (rep, status) = ConjugateGradient::solve_ctx(&req.problem, &ctx);
+        Ok(SolveOutcome::single(status, rep))
+    }
+}
+
+impl Solver for PcgFixedEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "pcg",
+            summary: "PCG with one fixed sketched preconditioner (m=2d default)",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::PcgFixed { .. })
+    }
+
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (m, sketch) = match spec {
+            MethodSpec::PcgFixed { m, sketch } => (*m, *sketch),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let prob = &*req.problem;
+        let (pre, sketch_flops) = build_fixed_pre(prob, sketch, m, req.seed)?;
+        let mut pcg = Pcg::new(prob.d(), prob.n());
+        let ctx = req.ctx();
+        let (mut rep, status) = run_fixed_preconditioned(&mut pcg, prob, &pre, &ctx);
+        rep.sketch_flops = sketch_flops;
+        Ok(SolveOutcome::single(status, rep))
+    }
+}
+
+impl Solver for IhsEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "ihs",
+            summary: "fixed-sketch IHS (preconditioned gradient descent)",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::Ihs { .. })
+    }
+
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (m, sketch, rho) = match spec {
+            MethodSpec::Ihs { m, sketch, rho } => (*m, *sketch, *rho),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        if !(rho > 0.0 && rho < 1.0) {
+            return Err(SolveError::InvalidSpec(format!("ihs rho must be in (0,1), got {rho}")));
+        }
+        let prob = &*req.problem;
+        let (pre, sketch_flops) = build_fixed_pre(prob, sketch, m, req.seed)?;
+        let mut ihs = Ihs::new(rho, prob.d(), prob.n());
+        let ctx = req.ctx();
+        let (mut rep, status) = run_fixed_preconditioned(&mut ihs, prob, &pre, &ctx);
+        rep.sketch_flops = sketch_flops;
+        Ok(SolveOutcome::single(status, rep))
+    }
+}
+
+/// Shared body of the three adaptive entries.
+fn run_adaptive_entry<M: crate::solvers::PreconditionedMethod>(
+    method: &mut M,
+    sketch: SketchKind,
+    req: &SolveRequest,
+    rho: Option<f64>,
+) -> Result<SolveOutcome, SolveError> {
+    let mut cfg = AdaptiveConfig { sketch, seed: req.seed, ..Default::default() };
+    if let Some(rho) = rho {
+        if !(rho > 0.0 && rho < 1.0) {
+            return Err(SolveError::InvalidSpec(format!("rho must be in (0,1), got {rho}")));
+        }
+        cfg.rho = rho;
+    }
+    let ctx = req.ctx();
+    let (rep, status) = run_adaptive_ctx(method, &req.problem, &cfg, &ctx);
+    Ok(SolveOutcome::single(status, rep))
+}
+
+impl Solver for AdaptivePcgEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "adaptive_pcg",
+            summary: "adaptive-sketch PCG, Algorithm 4.2 (headline method)",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::AdaptivePcg { .. })
+    }
+
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let sketch = match spec {
+            MethodSpec::AdaptivePcg { sketch } => *sketch,
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let mut pcg = Pcg::new(req.problem.d(), req.problem.n());
+        run_adaptive_entry(&mut pcg, sketch, req, None)
+    }
+}
+
+impl Solver for AdaptiveIhsEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "adaptive_ihs",
+            summary: "adaptive-sketch IHS (NeurIPS-2020 controller)",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::AdaptiveIhs { .. })
+    }
+
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let sketch = match spec {
+            MethodSpec::AdaptiveIhs { sketch } => *sketch,
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let cfg = AdaptiveConfig::default();
+        let mut ihs = Ihs::new(cfg.rho, req.problem.d(), req.problem.n());
+        run_adaptive_entry(&mut ihs, sketch, req, None)
+    }
+}
+
+impl Solver for AdaptivePolyakEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "adaptive_polyak",
+            summary: "adaptive-sketch Polyak-IHS (experimental; Appendix A)",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::AdaptivePolyak { .. })
+    }
+
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (sketch, rho) = match spec {
+            MethodSpec::AdaptivePolyak { sketch, rho } => (*sketch, *rho),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let mut pk = PolyakIhs::new(rho, req.problem.d(), req.problem.n());
+        run_adaptive_entry(&mut pk, sketch, req, Some(rho))
+    }
+}
+
+impl Solver for MultiRhsEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "multi_rhs",
+            summary: "multiclass pilot/follower: adaptive pilot + block PCG",
+            warm_start: false,
+            traced: true,
+            multi_rhs: true,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::MultiRhs { .. })
+    }
+
+    /// The batcher's pilot/follower pipeline: one adaptive pilot on
+    /// column 0 discovers the sketch size, the remaining columns share
+    /// its preconditioner through block PCG. Progress streams the pilot's
+    /// trace (which is also `outcome.report.trace`); followers run as one
+    /// block solve under the same budget.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (sketch, rho, m_init, growth, m_cap) = match spec {
+            MethodSpec::MultiRhs { sketch, rho, m_init, growth, m_cap } => {
+                (*sketch, *rho, *m_init, *growth, *m_cap)
+            }
+            _ => unreachable!("handles() gates the spec"),
+        };
+        if !(rho > 0.0 && rho < 1.0) {
+            return Err(SolveError::InvalidSpec(format!("multi_rhs rho must be in (0,1), got {rho}")));
+        }
+        // presence and shape already validated by `solve`
+        let b_cols = req.b_cols.as_ref().ok_or(SolveError::MissingRhsBlock)?;
+        let prob = &*req.problem;
+        let d = prob.d();
+        let c = b_cols.cols;
+
+        // pilot: adaptive discovery on column 0 (problem.b is ignored —
+        // the block is the authoritative RHS set)
+        let mut pilot_prob = prob.clone();
+        pilot_prob.b = b_cols.col(0);
+        let cfg = AdaptiveConfig {
+            sketch,
+            rho,
+            m_init,
+            growth,
+            m_cap,
+            seed: req.seed,
+            ..Default::default()
+        };
+        let ctx = req.ctx();
+        let mut pcg = Pcg::new(d, prob.n());
+        let (pilot, mut status) = run_adaptive_ctx(&mut pcg, &pilot_prob, &cfg, &ctx);
+
+        let mut x = Matrix::zeros(d, c);
+        for i in 0..d {
+            x.set(i, 0, pilot.x[i]);
+        }
+        let mut followers = Vec::with_capacity(c.saturating_sub(1));
+        if c > 1 && status == SolveStatus::Done {
+            // rebuild the discovered preconditioner once for all followers
+            let mut rng = Rng::seed_from(req.seed ^ 0xBA7C4);
+            let sk = sketch.sample(pilot.final_m.max(1), prob.n(), &mut rng);
+            let pre = SketchedPreconditioner::from_sketch(&pilot_prob, &sk)
+                .map_err(|e| SolveError::Numerical(e.to_string()))?;
+            let mut bf = Matrix::zeros(d, c - 1);
+            for k in 1..c {
+                for i in 0..d {
+                    bf.set(i, k - 1, b_cols.at(i, k));
+                }
+            }
+            let fctx = SolveCtx::from_stop(ctx.stop, ctx.budget);
+            let (block, bstatus) = BlockPcg::solve_ctx(&pilot_prob, &bf, &pre, &fctx);
+            status = bstatus;
+            for k in 1..c {
+                for i in 0..d {
+                    x.set(i, k, block.x.at(i, k - 1));
+                }
+                followers.push(SolveReport {
+                    method: "block_pcg_follower".into(),
+                    x: block.x.col(k - 1),
+                    iterations: block.iterations,
+                    trace: Vec::new(),
+                    final_m: pilot.final_m,
+                    sketch_doublings: 0,
+                    secs: block.secs / (c - 1) as f64,
+                    sketch_flops: 0.0,
+                    factor_flops: 0.0,
+                });
+            }
+        }
+        Ok(SolveOutcome { status, report: pilot, x_block: Some(x), followers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn sample_specs() -> Vec<MethodSpec> {
+        let sk = SketchKind::Sjlt { s: 1 };
+        vec![
+            MethodSpec::Direct,
+            MethodSpec::Cg { max_iters: Some(10) },
+            MethodSpec::PcgFixed { m: None, sketch: sk },
+            MethodSpec::Ihs { m: Some(32), sketch: sk, rho: 0.125 },
+            MethodSpec::AdaptivePcg { sketch: sk },
+            MethodSpec::AdaptiveIhs { sketch: sk },
+            MethodSpec::AdaptivePolyak { sketch: sk, rho: 0.125 },
+            MethodSpec::MultiRhs { sketch: sk, rho: 0.25, m_init: 1, growth: 2, m_cap: None },
+        ]
+    }
+
+    #[test]
+    fn registry_covers_every_variant_with_matching_names() {
+        for spec in sample_specs() {
+            let entry = lookup(&spec).unwrap_or_else(|| panic!("{spec:?} has no entry"));
+            assert_eq!(entry.descriptor().name, spec.name(), "{spec:?}");
+        }
+        assert_eq!(registry().len(), 8);
+    }
+
+    #[test]
+    fn capabilities_are_consistent() {
+        for entry in registry() {
+            let d = entry.descriptor();
+            if d.multi_rhs {
+                assert!(!d.warm_start, "{}: block path starts at X=0", d.name);
+            }
+        }
+        let multi = lookup(&MethodSpec::MultiRhs {
+            sketch: SketchKind::Gaussian,
+            rho: 0.25,
+            m_init: 1,
+            growth: 2,
+            m_cap: None,
+        })
+        .unwrap();
+        assert!(multi.descriptor().multi_rhs);
+        let direct = lookup(&MethodSpec::Direct).unwrap();
+        assert!(!direct.descriptor().warm_start && !direct.descriptor().traced);
+    }
+
+    #[test]
+    fn solve_rejects_malformed_requests() {
+        use crate::linalg::Matrix;
+        use crate::problem::Problem;
+        let mut rng = Rng::seed_from(3);
+        let a = Matrix::from_vec(12, 4, (0..48).map(|_| rng.gaussian()).collect());
+        let prob = Arc::new(Problem::ridge(a, vec![1.0; 4], 0.5));
+
+        let unrouted = SolveRequest::new(prob.clone());
+        assert_eq!(solve(&unrouted).unwrap_err(), SolveError::Unrouted);
+
+        let warm_direct =
+            SolveRequest::new(prob.clone()).method(MethodSpec::Direct).warm_start(vec![0.0; 4]);
+        assert_eq!(solve(&warm_direct).unwrap_err(), SolveError::WarmStartUnsupported("direct"));
+
+        let no_block = SolveRequest::new(prob.clone())
+            .method(MethodSpec::MultiRhs {
+                sketch: SketchKind::Gaussian,
+                rho: 0.25,
+                m_init: 1,
+                growth: 2,
+                m_cap: None,
+            });
+        assert_eq!(solve(&no_block).unwrap_err(), SolveError::MissingRhsBlock);
+
+        let bad_x0 = SolveRequest::new(prob)
+            .method(MethodSpec::Cg { max_iters: None })
+            .warm_start(vec![0.0; 3]);
+        assert!(matches!(solve(&bad_x0).unwrap_err(), SolveError::InvalidSpec(_)));
+    }
+
+    #[test]
+    fn pre_expired_budget_keeps_multi_rhs_block_invariant() {
+        use crate::linalg::Matrix;
+        use crate::problem::Problem;
+        use std::time::Duration;
+        let mut rng = Rng::seed_from(5);
+        let (d, c) = (4usize, 3usize);
+        let a = Matrix::from_vec(12, d, (0..12 * d).map(|_| rng.gaussian()).collect());
+        let prob = Arc::new(Problem::ridge(a, vec![1.0; d], 0.5));
+        let b_cols = Matrix::from_vec(d, c, (0..d * c).map(|_| rng.gaussian()).collect());
+        let req = SolveRequest::new(prob)
+            .method(MethodSpec::MultiRhs {
+                sketch: SketchKind::Gaussian,
+                rho: 0.25,
+                m_init: 1,
+                growth: 2,
+                m_cap: None,
+            })
+            .rhs_block(b_cols)
+            .deadline_in(Duration::from_millis(0));
+        let out = solve(&req).unwrap();
+        assert!(out.aborted());
+        let block = out.x_block.expect("aborted multi-RHS outcome still carries a block");
+        assert_eq!((block.rows, block.cols), (d, c));
+        assert!(block.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,340 @@
+//! [`SolveRequest`]: the one typed entry ticket for every solve.
+//!
+//! A request bundles the problem handle with everything that used to be
+//! scattered across seven incompatible solver signatures: the method
+//! ([`MethodSpec`]), unified stop criteria ([`Stop`]), an optional
+//! warm-start point, an optional reference solution for exact-error
+//! tracing, a wall-clock/cancellation [`Budget`], and a streaming
+//! [`ProgressObserver`]. Solver loops receive the borrowed view
+//! ([`SolveCtx`]) so the same loop serves the builder API, the service
+//! workers, and the legacy wrappers.
+
+use crate::api::method::MethodSpec;
+use crate::api::outcome::SolveStatus;
+use crate::linalg::Matrix;
+use crate::problem::Problem;
+use crate::solvers::{IterRecord, StopRule};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Unified stop criteria, shared by every solver loop.
+///
+/// `rel_tol` is interpreted in each family's native convergence measure
+/// (kept from the seed implementations so iteration counts are unchanged):
+/// decrement ratio `δ̃_t/δ̃_0` for the fixed-preconditioner loops and block
+/// PCG, the preconditioner-independent gradient ratio `‖∇f‖²/‖∇f_0‖²` for
+/// the adaptive controller (δ̃ rescales on every re-sketch; Remark 4.2),
+/// and the residual-norm ratio for CG. `abs_decrement_tol` is the
+/// Remark 4.2 absolute certificate `δ̃_t <= ε/(m̂_δ + 1)`; it is the right
+/// knob for warm starts, where a *relative* tolerance is nearly met at
+/// `x_0` already. Either tolerance set to `0.0` is disabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stop {
+    /// Maximum accepted iterations (the paper's `T`).
+    pub max_iters: usize,
+    /// Relative tolerance in the family's native measure (0 disables).
+    pub rel_tol: f64,
+    /// Absolute decrement tolerance `δ̃_t <= tol` (0 disables).
+    pub abs_decrement_tol: f64,
+}
+
+impl Default for Stop {
+    fn default() -> Self {
+        Stop { max_iters: 100, rel_tol: 0.0, abs_decrement_tol: 0.0 }
+    }
+}
+
+impl Stop {
+    pub fn max_iters(t: usize) -> Stop {
+        Stop { max_iters: t, ..Default::default() }
+    }
+
+    pub fn with_rel_tol(mut self, tol: f64) -> Stop {
+        self.rel_tol = tol;
+        self
+    }
+
+    pub fn with_abs_decrement_tol(mut self, tol: f64) -> Stop {
+        self.abs_decrement_tol = tol;
+        self
+    }
+}
+
+impl From<StopRule> for Stop {
+    fn from(rule: StopRule) -> Stop {
+        Stop { max_iters: rule.max_iters, rel_tol: rule.tol, abs_decrement_tol: 0.0 }
+    }
+}
+
+/// Wall-clock and cancellation budget for a solve.
+///
+/// Loops poll [`Budget::exhausted`] once per iteration (one `Instant::now`
+/// + one relaxed atomic load — negligible next to an O(nd) data pass) and
+/// abort with a partial [`SolveOutcome`](crate::api::SolveOutcome) whose
+/// status records why.
+#[derive(Clone, Debug, Default)]
+pub struct Budget {
+    /// Absolute deadline; crossing it aborts the solve.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation token; setting it to `true` aborts.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl Budget {
+    /// No limits (the default).
+    pub fn none() -> Budget {
+        Budget::default()
+    }
+
+    /// Budget expiring `dur` from now.
+    pub fn deadline_in(dur: Duration) -> Budget {
+        Budget { deadline: Some(Instant::now() + dur), cancel: None }
+    }
+
+    pub fn with_deadline(mut self, at: Instant) -> Budget {
+        self.deadline = Some(at);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: Arc<AtomicBool>) -> Budget {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Why the solve must stop now, if it must.
+    pub fn exhausted(&self) -> Option<SolveStatus> {
+        if let Some(token) = &self.cancel {
+            if token.load(Ordering::Relaxed) {
+                return Some(SolveStatus::Cancelled);
+            }
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                return Some(SolveStatus::DeadlineExpired);
+            }
+        }
+        None
+    }
+}
+
+/// Streaming progress callback: invoked with every [`IterRecord`] exactly
+/// as it is appended to the final trace (same order, same values).
+pub type ProgressObserver = Arc<ProgressFn>;
+
+/// The unsized callback type behind [`ProgressObserver`].
+pub type ProgressFn = dyn Fn(&IterRecord) + Send + Sync;
+
+/// A fully described solve, built fluently and executed by
+/// [`api::solve`](crate::api::solve).
+#[derive(Clone)]
+pub struct SolveRequest {
+    /// The quadratic program (shared handle: requests are cheap to clone
+    /// and ship across worker threads).
+    pub problem: Arc<Problem>,
+    /// `None` = unrouted; the service fills it from its router policy,
+    /// direct `api::solve` callers must set it.
+    pub method: Option<MethodSpec>,
+    pub stop: Stop,
+    pub budget: Budget,
+    /// Warm-start point (length d). Rejected by methods whose registry
+    /// descriptor says `warm_start: false`.
+    pub x0: Option<Vec<f64>>,
+    /// Reference solution for exact-error tracing (`IterRecord::delta_rel`).
+    pub x_star: Option<Vec<f64>>,
+    /// Multi-RHS block (`d x c`) for [`MethodSpec::MultiRhs`]; column 0 is
+    /// the pilot RHS (the problem's own `b` is ignored by that method).
+    pub b_cols: Option<Arc<Matrix>>,
+    /// Seed for embedding sampling.
+    pub seed: u64,
+    pub observer: Option<ProgressObserver>,
+}
+
+impl SolveRequest {
+    /// Start a request for `problem` with default stop criteria, no
+    /// budget, cold start, and no method (to be routed).
+    pub fn new(problem: Arc<Problem>) -> SolveRequest {
+        SolveRequest {
+            problem,
+            method: None,
+            stop: Stop::default(),
+            budget: Budget::none(),
+            x0: None,
+            x_star: None,
+            b_cols: None,
+            seed: 0,
+            observer: None,
+        }
+    }
+
+    pub fn method(mut self, spec: MethodSpec) -> Self {
+        self.method = Some(spec);
+        self
+    }
+
+    pub fn stop(mut self, stop: Stop) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn max_iters(mut self, t: usize) -> Self {
+        self.stop.max_iters = t;
+        self
+    }
+
+    pub fn rel_tol(mut self, tol: f64) -> Self {
+        self.stop.rel_tol = tol;
+        self
+    }
+
+    pub fn abs_decrement_tol(mut self, tol: f64) -> Self {
+        self.stop.abs_decrement_tol = tol;
+        self
+    }
+
+    pub fn budget(mut self, budget: Budget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Abort the solve `dur` from *now* (request-build time).
+    pub fn deadline_in(mut self, dur: Duration) -> Self {
+        self.budget.deadline = Some(Instant::now() + dur);
+        self
+    }
+
+    pub fn deadline_ms(self, ms: u64) -> Self {
+        self.deadline_in(Duration::from_millis(ms))
+    }
+
+    pub fn cancel_token(mut self, token: Arc<AtomicBool>) -> Self {
+        self.budget.cancel = Some(token);
+        self
+    }
+
+    pub fn warm_start(mut self, x0: Vec<f64>) -> Self {
+        self.x0 = Some(x0);
+        self
+    }
+
+    /// Enable exact-error tracing against a known solution.
+    pub fn trace_against(mut self, x_star: Vec<f64>) -> Self {
+        self.x_star = Some(x_star);
+        self
+    }
+
+    /// Attach the `d x c` RHS block for [`MethodSpec::MultiRhs`].
+    pub fn rhs_block(mut self, b_cols: Matrix) -> Self {
+        self.b_cols = Some(Arc::new(b_cols));
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Stream every trace record to `f` as it is produced.
+    pub fn observe(mut self, f: impl Fn(&IterRecord) + Send + Sync + 'static) -> Self {
+        self.observer = Some(Arc::new(f));
+        self
+    }
+
+    /// Borrowed view handed to the solver loops.
+    pub fn ctx(&self) -> SolveCtx<'_> {
+        SolveCtx {
+            stop: self.stop,
+            budget: &self.budget,
+            x0: self.x0.as_deref(),
+            x_star: self.x_star.as_deref(),
+            observer: self.observer.as_deref(),
+        }
+    }
+}
+
+/// Borrowed execution context threaded through every solver loop: the
+/// shared [`Stop`] criteria, the [`Budget`], warm start, tracing target,
+/// and progress streaming. Loops that predate the api layer construct it
+/// from a bare [`StopRule`] via [`SolveCtx::from_stop`].
+pub struct SolveCtx<'a> {
+    pub stop: Stop,
+    pub budget: &'a Budget,
+    pub x0: Option<&'a [f64]>,
+    pub x_star: Option<&'a [f64]>,
+    pub observer: Option<&'a ProgressFn>,
+}
+
+impl<'a> SolveCtx<'a> {
+    /// Minimal context: stop criteria + budget, cold start, no tracing.
+    pub fn from_stop(stop: Stop, budget: &'a Budget) -> SolveCtx<'a> {
+        SolveCtx { stop, budget, x0: None, x_star: None, observer: None }
+    }
+
+    /// Stream one record to the observer, if any.
+    #[inline]
+    pub fn emit(&self, rec: &IterRecord) {
+        if let Some(observer) = self.observer {
+            observer(rec);
+        }
+    }
+
+    /// Materialize the start point for a d-dimensional solve: the warm
+    /// start (validated to length d — `api::solve` turns a mismatch into a
+    /// typed error before any loop sees it) or the origin.
+    pub fn x0_vec(&self, d: usize) -> Vec<f64> {
+        match self.x0 {
+            Some(x) => {
+                assert_eq!(x.len(), d, "warm start must have length d");
+                x.to_vec()
+            }
+            None => vec![0.0; d],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_reports_cancellation_then_deadline() {
+        assert_eq!(Budget::none().exhausted(), None);
+        let token = Arc::new(AtomicBool::new(false));
+        let b = Budget::none().with_cancel(token.clone());
+        assert_eq!(b.exhausted(), None);
+        token.store(true, Ordering::Relaxed);
+        assert_eq!(b.exhausted(), Some(SolveStatus::Cancelled));
+        let expired = Budget::deadline_in(Duration::from_millis(0));
+        assert_eq!(expired.exhausted(), Some(SolveStatus::DeadlineExpired));
+        let far = Budget::deadline_in(Duration::from_secs(3600));
+        assert_eq!(far.exhausted(), None);
+    }
+
+    #[test]
+    fn stop_converts_from_stop_rule() {
+        let rule = StopRule { max_iters: 7, tol: 1e-3 };
+        let stop: Stop = rule.into();
+        assert_eq!(stop, Stop { max_iters: 7, rel_tol: 1e-3, abs_decrement_tol: 0.0 });
+    }
+
+    #[test]
+    fn builder_accumulates_fields() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from(1);
+        let a = Matrix::from_vec(8, 3, (0..24).map(|_| rng.gaussian()).collect());
+        let prob = Arc::new(Problem::ridge(a, vec![1.0; 3], 0.5));
+        let req = SolveRequest::new(prob)
+            .method(MethodSpec::Direct)
+            .max_iters(9)
+            .rel_tol(1e-5)
+            .warm_start(vec![0.0; 3])
+            .seed(11);
+        assert_eq!(req.method, Some(MethodSpec::Direct));
+        assert_eq!(req.stop.max_iters, 9);
+        assert_eq!(req.stop.rel_tol, 1e-5);
+        assert_eq!(req.seed, 11);
+        let ctx = req.ctx();
+        assert_eq!(ctx.x0, Some(&[0.0, 0.0, 0.0][..]));
+        assert!(ctx.observer.is_none());
+    }
+}

@@ -2,16 +2,18 @@
 //! run over one (dataset, ν) panel with full tracing, plus CSV/markdown
 //! emission. Used by `benches/fig_synthetic.rs` and `benches/fig_real.rs`.
 
-use crate::adaptive::{AdaptiveConfig, AdaptiveIhs, AdaptivePcg, AdaptivePolyak};
+use crate::api::{self, MethodSpec, SolveRequest, Stop};
 use crate::bench_harness::report::{fmt_sci, Csv, MarkdownTable};
-use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
 use crate::sketch::SketchKind;
-use crate::solvers::{ConjugateGradient, DirectSolver, SolveReport, StopRule};
+use crate::solvers::{DirectSolver, SolveReport};
+use std::sync::Arc;
 
-/// One solver configuration in a figure panel.
+/// One solver configuration in a figure panel: an api [`MethodSpec`] plus
+/// the figure-specific shaping (plot label, per-method iteration budget
+/// and tolerance semantics).
 #[derive(Clone, Debug)]
-pub enum MethodSpec {
+pub enum FigureMethod {
     Direct,
     Cg,
     /// PCG with a fixed sketch size `mult * d` (paper baseline: mult = 2).
@@ -21,82 +23,95 @@ pub enum MethodSpec {
     AdaptivePolyak { kind: SketchKind },
 }
 
-impl MethodSpec {
+impl FigureMethod {
     pub fn label(&self) -> String {
         match self {
-            MethodSpec::Direct => "direct".into(),
-            MethodSpec::Cg => "cg".into(),
-            MethodSpec::PcgFixed { kind, mult } => format!("pcg-{}-{}d", kind.name(), mult),
-            MethodSpec::AdaptivePcg { kind } => format!("ada-pcg-{}", kind.name()),
-            MethodSpec::AdaptiveIhs { kind } => format!("ada-ihs-{}", kind.name()),
-            MethodSpec::AdaptivePolyak { kind } => format!("ada-polyak-{}", kind.name()),
+            FigureMethod::Direct => "direct".into(),
+            FigureMethod::Cg => "cg".into(),
+            FigureMethod::PcgFixed { kind, mult } => format!("pcg-{}-{}d", kind.name(), mult),
+            FigureMethod::AdaptivePcg { kind } => format!("ada-pcg-{}", kind.name()),
+            FigureMethod::AdaptiveIhs { kind } => format!("ada-ihs-{}", kind.name()),
+            FigureMethod::AdaptivePolyak { kind } => format!("ada-polyak-{}", kind.name()),
+        }
+    }
+
+    /// The api request shape for this figure entry: (spec, max_iters,
+    /// rel_tol). CG gets 10x the budget and a sqrt tolerance (its rel_tol
+    /// is a residual-*norm* ratio, the others' a δ-ratio); the slower
+    /// adaptive IHS/Polyak variants get 2x.
+    fn request_shape(&self, d: usize, t_max: usize, tol: f64) -> (MethodSpec, usize, f64) {
+        match self {
+            FigureMethod::Direct => (MethodSpec::Direct, 1, 0.0),
+            FigureMethod::Cg => (MethodSpec::Cg { max_iters: None }, t_max * 10, tol.sqrt()),
+            FigureMethod::PcgFixed { kind, mult } => {
+                (MethodSpec::PcgFixed { m: Some(mult * d), sketch: *kind }, t_max, tol)
+            }
+            FigureMethod::AdaptivePcg { kind } => {
+                (MethodSpec::AdaptivePcg { sketch: *kind }, t_max, tol)
+            }
+            FigureMethod::AdaptiveIhs { kind } => {
+                (MethodSpec::AdaptiveIhs { sketch: *kind }, t_max * 2, tol)
+            }
+            FigureMethod::AdaptivePolyak { kind } => {
+                // track the library default so a future rho retune keeps
+                // the figure panels consistent with the other entries
+                let rho = crate::adaptive::AdaptiveConfig::default().rho;
+                (MethodSpec::AdaptivePolyak { sketch: *kind, rho }, t_max * 2, tol)
+            }
         }
     }
 }
 
 /// The paper's default roster: direct, CG, PCG(m=2d) with SRHT+SJLT,
 /// adaptive PCG with SRHT+SJLT, adaptive IHS with SJLT.
-pub fn paper_roster() -> Vec<MethodSpec> {
+pub fn paper_roster() -> Vec<FigureMethod> {
     vec![
-        MethodSpec::Direct,
-        MethodSpec::Cg,
-        MethodSpec::PcgFixed { kind: SketchKind::Srht, mult: 2 },
-        MethodSpec::PcgFixed { kind: SketchKind::Sjlt { s: 1 }, mult: 2 },
-        MethodSpec::AdaptivePcg { kind: SketchKind::Srht },
-        MethodSpec::AdaptivePcg { kind: SketchKind::Sjlt { s: 1 } },
-        MethodSpec::AdaptiveIhs { kind: SketchKind::Sjlt { s: 1 } },
+        FigureMethod::Direct,
+        FigureMethod::Cg,
+        FigureMethod::PcgFixed { kind: SketchKind::Srht, mult: 2 },
+        FigureMethod::PcgFixed { kind: SketchKind::Sjlt { s: 1 }, mult: 2 },
+        FigureMethod::AdaptivePcg { kind: SketchKind::Srht },
+        FigureMethod::AdaptivePcg { kind: SketchKind::Sjlt { s: 1 } },
+        FigureMethod::AdaptiveIhs { kind: SketchKind::Sjlt { s: 1 } },
     ]
 }
 
-/// Run the roster on one problem with exact-error tracing.
+/// Run the roster on one problem with exact-error tracing — every entry
+/// goes through `api::solve`, the same path the CLI and service use.
 pub fn run_panel(
     prob: &Problem,
-    roster: &[MethodSpec],
+    roster: &[FigureMethod],
     t_max: usize,
     tol: f64,
     seed: u64,
 ) -> Vec<(String, SolveReport)> {
     let exact = DirectSolver::solve(prob).expect("H is SPD");
     let x_star = exact.x.clone();
+    let shared = Arc::new(prob.clone());
     let mut out = Vec::new();
-    for spec in roster {
-        let rep = match spec {
-            MethodSpec::Direct => exact.clone(),
-            MethodSpec::Cg => ConjugateGradient::solve(
-                prob,
-                StopRule { max_iters: t_max * 10, tol: tol.sqrt() },
-                Some(&x_star),
-            ),
-            MethodSpec::PcgFixed { kind, mult } => {
-                let m = (mult * prob.d()).min(crate::linalg::next_pow2(prob.n()));
-                let mut rng = crate::rng::Rng::seed_from(seed);
-                let sk = kind.sample(m, prob.n(), &mut rng);
+    for fig in roster {
+        let rep = match fig {
+            // reuse the reference factorization instead of re-solving
+            FigureMethod::Direct => exact.clone(),
+            _ => {
+                let (spec, max_iters, rel_tol) = fig.request_shape(prob.d(), t_max, tol);
+                let request = SolveRequest::new(shared.clone())
+                    .method(spec)
+                    .stop(Stop { max_iters, rel_tol, abs_decrement_tol: 0.0 })
+                    .seed(seed)
+                    .trace_against(x_star.clone());
                 let t0 = std::time::Instant::now();
-                let pre = SketchedPreconditioner::from_sketch(prob, &sk).expect("SPD");
-                let mut rep = crate::solvers::Pcg::solve_fixed(
-                    prob,
-                    &pre,
-                    StopRule { max_iters: t_max, tol },
-                    Some(&x_star),
-                );
-                rep.secs = t0.elapsed().as_secs_f64(); // include sketch+factor
-                rep.method = spec.label();
+                let mut rep = api::solve(&request).expect("figure request is well-formed").report;
+                if matches!(fig, FigureMethod::PcgFixed { .. }) {
+                    // the figures' time axis charges PCG-2d for its sketch
+                    // + factorization, not just the iteration loop
+                    rep.secs = t0.elapsed().as_secs_f64();
+                }
+                rep.method = fig.label();
                 rep
             }
-            MethodSpec::AdaptivePcg { kind } => {
-                let cfg = AdaptiveConfig { sketch: *kind, seed, tol, ..Default::default() };
-                AdaptivePcg::with_config(cfg).solve_traced(prob, t_max, Some(&x_star))
-            }
-            MethodSpec::AdaptiveIhs { kind } => {
-                let cfg = AdaptiveConfig { sketch: *kind, seed, tol, ..Default::default() };
-                AdaptiveIhs::with_config(cfg).solve_traced(prob, t_max * 2, Some(&x_star))
-            }
-            MethodSpec::AdaptivePolyak { kind } => {
-                let cfg = AdaptiveConfig { sketch: *kind, seed, tol, ..Default::default() };
-                AdaptivePolyak::with_config(cfg).solve_traced(prob, t_max * 2, Some(&x_star))
-            }
         };
-        out.push((spec.label(), rep));
+        out.push((fig.label(), rep));
     }
     out
 }
@@ -167,7 +182,7 @@ mod tests {
         let dir = std::env::temp_dir().join("sketchsolve_panel_test");
         let ds = SyntheticSpec::paper_profile(256, 32).build(5);
         let prob = ds.problem(1e-1);
-        let results = run_panel(&prob, &[MethodSpec::Cg], 20, 1e-8, 1);
+        let results = run_panel(&prob, &[FigureMethod::Cg], 20, 1e-8, 1);
         write_panel_csvs(dir.to_str().unwrap(), "t", &results).unwrap();
         for f in ["t_err_vs_iter.csv", "t_err_vs_time.csv", "t_m_vs_iter.csv"] {
             assert!(dir.join(f).exists(), "{f} missing");

@@ -11,12 +11,12 @@
 //! sketch, one factorization, one data pass per iteration — versus c of
 //! each when batching is off.
 
-use crate::adaptive::{AdaptiveConfig, AdaptivePcg};
+use crate::adaptive::AdaptiveConfig;
+use crate::api::{self, MethodSpec, SolveRequest, Stop};
 use crate::linalg::Matrix;
-use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
-use crate::rng::Rng;
-use crate::solvers::{BlockPcg, SolveReport, StopRule};
+use crate::solvers::SolveReport;
+use std::sync::Arc;
 
 /// Batched multi-RHS solver.
 pub struct MultiRhsSolver {
@@ -44,62 +44,45 @@ impl MultiRhsSolver {
 
     /// Solve `H x_k = b_k` for every column `b_k` of `b_cols` (d x c).
     /// `a`, `lambda`, `nu` define `H` as usual.
+    ///
+    /// This is now a thin shim: the pilot/follower pipeline itself lives
+    /// behind [`MethodSpec::MultiRhs`] in the api registry, so the CLI,
+    /// the service, and this convenience wrapper all run the identical
+    /// path. The wrapper builds the `MultiRhs` request — every pilot knob
+    /// of `cfg` (sketch, rho, m_init, growth, m_cap, seed) is carried on
+    /// the spec/request, and `cfg.tol`/`cfg.abs_decrement_tol` map onto
+    /// the unified stop criteria — then re-shapes the
+    /// [`SolveOutcome`](crate::api::SolveOutcome) into the legacy report.
     pub fn solve(&self, a: &Matrix, lambda: &[f64], nu: f64, b_cols: &Matrix) -> MultiRhsReport {
         let t0 = std::time::Instant::now();
         let d = a.cols;
         assert_eq!(b_cols.rows, d, "B must be d x c");
-        let c = b_cols.cols;
-        assert!(c >= 1);
+        assert!(b_cols.cols >= 1);
 
-        // pilot column: full adaptive solve discovers the sketch size
-        let pilot_problem = Problem::general(a.clone(), b_cols.col(0), lambda.to_vec(), nu);
-        let pilot = AdaptivePcg::with_config(self.cfg.clone()).solve(&pilot_problem, self.t_max);
-
-        let mut x = Matrix::zeros(d, c);
-        for i in 0..d {
-            x.set(i, 0, pilot.x[i]);
+        // the template problem's b is column 0 by the MultiRhs convention
+        let template = Problem::general(a.clone(), b_cols.col(0), lambda.to_vec(), nu);
+        let request = SolveRequest::new(Arc::new(template))
+            .method(MethodSpec::MultiRhs {
+                sketch: self.cfg.sketch,
+                rho: self.cfg.rho,
+                m_init: self.cfg.m_init,
+                growth: self.cfg.growth,
+                m_cap: self.cfg.m_cap,
+            })
+            .stop(Stop {
+                max_iters: self.t_max,
+                rel_tol: self.cfg.tol.max(0.0),
+                abs_decrement_tol: self.cfg.abs_decrement_tol.max(0.0),
+            })
+            .seed(self.cfg.seed)
+            .rhs_block(b_cols.clone());
+        let outcome = api::solve(&request).expect("multi-RHS request is well-formed");
+        MultiRhsReport {
+            x: outcome.x_block.expect("multi-RHS outcome carries the solution block"),
+            pilot: outcome.report,
+            followers: outcome.followers,
+            secs: t0.elapsed().as_secs_f64(),
         }
-
-        // rebuild the discovered preconditioner once for the followers
-        // (the adaptive run owns its internal one; reconstruction is one
-        // sketch + factorization at the *final* size — still shared by all
-        // c-1 followers) and solve them TOGETHER with block PCG: each
-        // iteration is one BLAS-3 sweep over A for all columns.
-        let mut followers = Vec::with_capacity(c.saturating_sub(1));
-        if c > 1 {
-            let mut rng = Rng::seed_from(self.cfg.seed ^ 0xBA7C4);
-            let sk = self.cfg.sketch.sample(pilot.final_m, a.rows, &mut rng);
-            let pre = SketchedPreconditioner::from_sketch(&pilot_problem, &sk)
-                .expect("H_S SPD by construction");
-            let stop = StopRule { max_iters: self.t_max, tol: self.cfg.tol.max(0.0) };
-            // follower RHS block (d x (c-1))
-            let mut bf = Matrix::zeros(d, c - 1);
-            for k in 1..c {
-                for i in 0..d {
-                    bf.set(i, k - 1, b_cols.at(i, k));
-                }
-            }
-            let block = BlockPcg::solve(&pilot_problem, &bf, &pre, stop);
-            for k in 1..c {
-                for i in 0..d {
-                    x.set(i, k, block.x.at(i, k - 1));
-                }
-                // per-column pseudo-report for metrics compatibility
-                followers.push(SolveReport {
-                    method: "block_pcg_follower".into(),
-                    x: block.x.col(k - 1),
-                    iterations: block.iterations,
-                    trace: Vec::new(),
-                    final_m: pilot.final_m,
-                    sketch_doublings: 0,
-                    secs: block.secs / (c - 1) as f64,
-                    sketch_flops: 0.0,
-                    factor_flops: 0.0,
-                });
-            }
-        }
-
-        MultiRhsReport { x, pilot, followers, secs: t0.elapsed().as_secs_f64() }
     }
 }
 
@@ -107,6 +90,7 @@ impl MultiRhsSolver {
 mod tests {
     use super::*;
     use crate::linalg::{matmul, syrk_t, Cholesky};
+    use crate::rng::Rng;
 
     fn decay_matrix(n: usize, d: usize, seed: u64) -> Matrix {
         let mut rng = Rng::seed_from(seed);

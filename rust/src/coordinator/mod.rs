@@ -9,8 +9,13 @@
 //! - [`batcher`] — multi-RHS batching: all class columns share sketching
 //!   and factorization work (the paper's hot-encoded multiclass setting),
 //! - [`router`] — solver selection policy (direct / CG / PCG-2d /
-//!   adaptive) from cheap problem statistics,
+//!   adaptive) from cheap problem statistics; decisions are
+//!   [`api::MethodSpec`](crate::api::MethodSpec)s, the same vocabulary
+//!   the CLI and the registry speak,
 //! - [`metrics`] — counters + per-iteration traces for the figures.
+//!
+//! Everything solver-shaped flows through `api::solve`: a worker's whole
+//! job pipeline is "route if unrouted, then one `api::solve` call".
 
 pub mod batcher;
 pub mod metrics;
@@ -20,4 +25,4 @@ pub mod service;
 pub use batcher::MultiRhsSolver;
 pub use metrics::Metrics;
 pub use router::{route, Route, RouterPolicy};
-pub use service::{JobSpec, JobStatus, SolveService};
+pub use service::{JobSpec, JobStatus, SolveService, RECENT_STATUS_CAP};

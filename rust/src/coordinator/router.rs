@@ -1,23 +1,23 @@
-//! Solver routing: pick the right method for a problem from cheap
+//! Solver routing: pick the right [`MethodSpec`] for a problem from cheap
 //! statistics, mirroring the decision table of the paper's experiments.
 //!
 //! - tiny problems → direct factorization (no sketching overhead can win);
 //! - well-conditioned problems (large ν relative to the top singular
-//!   value) → plain CG;
-//! - otherwise → adaptive PCG, the paper's headline method; a fixed
-//!   `m = 2d` PCG route is available for oblivious deployments.
+//!   value) → plain CG, with an iteration cap from the condition estimate;
+//! - otherwise → adaptive PCG, the paper's headline method — or, when the
+//!   policy asks for an oblivious deployment, the fixed `m = 2d` PCG
+//!   baseline ([`MethodSpec::pcg_2d`]).
+//!
+//! The router speaks the api vocabulary directly: there is no separate
+//! `Route` enum anymore ([`Route`] is a deprecated alias of
+//! [`MethodSpec`]).
 
+use crate::api::MethodSpec;
 use crate::problem::Problem;
 use crate::sketch::SketchKind;
 
-/// Routing decision.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Route {
-    Direct,
-    Cg { max_iters: usize },
-    PcgFixed { m: usize, sketch: SketchKind },
-    AdaptivePcg { sketch: SketchKind },
-}
+/// Deprecated alias: routing decisions *are* method specs now.
+pub type Route = MethodSpec;
 
 /// Tunable routing thresholds.
 #[derive(Debug, Clone)]
@@ -30,6 +30,10 @@ pub struct RouterPolicy {
     pub cg_cond_max: f64,
     /// Sketch family for the sketched routes.
     pub sketch: SketchKind,
+    /// Oblivious deployment mode: route ill-conditioned problems to the
+    /// paper's fixed `m = 2d` PCG baseline instead of the adaptive
+    /// controller (no sketch-size discovery, fully predictable cost).
+    pub oblivious_2d: bool,
 }
 
 impl Default for RouterPolicy {
@@ -39,6 +43,7 @@ impl Default for RouterPolicy {
             direct_nd_max: 1 << 16,
             cg_cond_max: 1e4,
             sketch: SketchKind::Sjlt { s: 1 },
+            oblivious_2d: false,
         }
     }
 }
@@ -63,20 +68,23 @@ pub fn condition_proxy(prob: &Problem, iters: usize) -> f64 {
     (smax2.max(0.0) + nu2) / nu2
 }
 
-/// Route a problem.
-pub fn route(prob: &Problem, policy: &RouterPolicy) -> Route {
+/// Route a problem to a method spec.
+pub fn route(prob: &Problem, policy: &RouterPolicy) -> MethodSpec {
     let n = prob.n();
     let d = prob.d();
     if d <= policy.direct_d_max || n * d <= policy.direct_nd_max {
-        return Route::Direct;
+        return MethodSpec::Direct;
     }
     let cond = condition_proxy(prob, 12);
     if cond <= policy.cg_cond_max {
         // CG iterations ~ sqrt(cond) * log(1/eps)
         let iters = (cond.sqrt() * 30.0).ceil() as usize;
-        return Route::Cg { max_iters: iters.clamp(16, 4 * d) };
+        return MethodSpec::Cg { max_iters: Some(iters.clamp(16, 4 * d)) };
     }
-    Route::AdaptivePcg { sketch: policy.sketch }
+    if policy.oblivious_2d {
+        return MethodSpec::pcg_2d(policy.sketch);
+    }
+    MethodSpec::AdaptivePcg { sketch: policy.sketch }
 }
 
 #[cfg(test)]
@@ -95,15 +103,18 @@ mod tests {
     #[test]
     fn tiny_problem_goes_direct() {
         let p = gauss_problem(100, 10, 0.1, 1);
-        assert_eq!(route(&p, &RouterPolicy::default()), Route::Direct);
+        assert_eq!(route(&p, &RouterPolicy::default()), MethodSpec::Direct);
     }
 
     #[test]
-    fn well_conditioned_goes_cg() {
+    fn well_conditioned_goes_cg_with_iter_cap() {
         // nu large → condition proxy small
         let p = gauss_problem(1024, 128, 50.0, 2);
         let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
-        assert!(matches!(route(&p, &policy), Route::Cg { .. }));
+        match route(&p, &policy) {
+            MethodSpec::Cg { max_iters: Some(cap) } => assert!(cap >= 16 && cap <= 4 * 128),
+            other => panic!("expected capped CG, got {other:?}"),
+        }
     }
 
     #[test]
@@ -114,7 +125,23 @@ mod tests {
         }
         let p = Problem::ridge(a, vec![1.0; 128], 1e-6);
         let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
-        assert!(matches!(route(&p, &policy), Route::AdaptivePcg { .. }));
+        assert!(matches!(route(&p, &policy), MethodSpec::AdaptivePcg { .. }));
+    }
+
+    #[test]
+    fn oblivious_policy_routes_to_pcg_2d() {
+        let mut a = Matrix::zeros(1024, 128);
+        for j in 0..128 {
+            a.set(j, j, 0.9f64.powi(j as i32));
+        }
+        let p = Problem::ridge(a, vec![1.0; 128], 1e-6);
+        let policy = RouterPolicy {
+            direct_d_max: 16,
+            direct_nd_max: 1 << 10,
+            oblivious_2d: true,
+            ..Default::default()
+        };
+        assert_eq!(route(&p, &policy), MethodSpec::pcg_2d(policy.sketch));
     }
 
     #[test]

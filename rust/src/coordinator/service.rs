@@ -1,32 +1,38 @@
 //! The solve service: a worker pool draining a job queue.
 //!
-//! Jobs carry a problem handle plus a routing override; workers route,
-//! solve and publish results. The pool is std::thread based (tokio is
-//! unavailable offline and the work is CPU-bound); the queue is an
-//! mpsc channel behind a mutex'd receiver (fan-out).
+//! Jobs are [`SolveRequest`]s plus an id; workers fill in the method via
+//! the router when the request is unrouted, run it through
+//! [`api::solve`], and publish [`SolveOutcome`]s. The pool is std::thread
+//! based (tokio is unavailable offline and the work is CPU-bound); the
+//! queue is an mpsc channel behind a mutex'd receiver (fan-out).
+//!
+//! Because every solver capability — warm starts, deadlines, cancellation
+//! tokens, progress streaming, multi-RHS blocks — lives on the request,
+//! the service has no per-method logic at all: `run_job` is routing plus
+//! one `api::solve` call.
 
-use crate::adaptive::{AdaptiveConfig, AdaptivePcg};
+use crate::api::{self, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::router::{route, Route, RouterPolicy};
-use crate::problem::Problem;
-use crate::sketch::SketchKind;
-use crate::solvers::{ConjugateGradient, DirectSolver, Pcg, SolveReport, StopRule};
-use crate::precond::SketchedPreconditioner;
-use std::collections::HashMap;
+use crate::coordinator::router::{route, RouterPolicy};
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// A solve request.
+/// A queued solve: a typed request plus the service-level id.
 #[derive(Clone)]
 pub struct JobSpec {
     pub id: u64,
-    pub problem: Arc<Problem>,
-    /// None = let the router decide.
-    pub route_override: Option<Route>,
-    pub t_max: usize,
-    pub tol: f64,
-    pub seed: u64,
+    /// The request. `request.method == None` means "let the router
+    /// decide"; everything else (stop criteria, warm start, budget,
+    /// observer, RHS block, seed) is taken as-is.
+    pub request: SolveRequest,
+}
+
+impl JobSpec {
+    pub fn new(id: u64, request: SolveRequest) -> JobSpec {
+        JobSpec { id, request }
+    }
 }
 
 /// Job lifecycle states.
@@ -41,7 +47,43 @@ pub enum JobStatus {
 /// Completed job output.
 pub struct JobResult {
     pub id: u64,
-    pub report: Result<SolveReport, String>,
+    pub outcome: Result<SolveOutcome, String>,
+}
+
+/// How many *retrieved* terminal job statuses [`SolveService::status`]
+/// keeps answering for. Active (queued/running/unretrieved) jobs are
+/// always tracked; once a result is handed out via
+/// [`SolveService::next_result`], its status moves into a bounded ring so
+/// the map cannot grow without bound under sustained traffic.
+pub const RECENT_STATUS_CAP: usize = 64;
+
+/// Status store: unbounded only for jobs still in flight.
+#[derive(Default)]
+struct StatusBoard {
+    active: HashMap<u64, JobStatus>,
+    recent: VecDeque<(u64, JobStatus)>,
+}
+
+impl StatusBoard {
+    fn set(&mut self, id: u64, status: JobStatus) {
+        self.active.insert(id, status);
+    }
+
+    /// Move a retrieved job's terminal status into the bounded ring.
+    fn retire(&mut self, id: u64) {
+        if let Some(status) = self.active.remove(&id) {
+            self.recent.push_back((id, status));
+            while self.recent.len() > RECENT_STATUS_CAP {
+                self.recent.pop_front();
+            }
+        }
+    }
+
+    fn get(&self, id: u64) -> Option<JobStatus> {
+        self.active.get(&id).cloned().or_else(|| {
+            self.recent.iter().rev().find(|(i, _)| *i == id).map(|(_, s)| s.clone())
+        })
+    }
 }
 
 /// The service handle.
@@ -50,7 +92,7 @@ pub struct SolveService {
     results_rx: mpsc::Receiver<JobResult>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    status: Arc<Mutex<HashMap<u64, JobStatus>>>,
+    status: Arc<Mutex<StatusBoard>>,
 }
 
 impl SolveService {
@@ -68,7 +110,7 @@ impl SolveService {
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
-        let status: Arc<Mutex<HashMap<u64, JobStatus>>> = Arc::new(Mutex::new(HashMap::new()));
+        let status: Arc<Mutex<StatusBoard>> = Arc::new(Mutex::new(StatusBoard::default()));
 
         let mut handles = Vec::new();
         for _ in 0..workers {
@@ -87,19 +129,23 @@ impl SolveService {
                         Ok(j) => j,
                         Err(_) => break, // channel closed: shut down
                     };
-                    status.lock().unwrap().insert(job.id, JobStatus::Running);
+                    status.lock().unwrap().set(job.id, JobStatus::Running);
                     let outcome = run_job(&job, &policy);
                     match &outcome {
-                        Ok(rep) => {
-                            metrics.job_completed(rep.iterations, rep.sketch_doublings, rep.secs);
-                            status.lock().unwrap().insert(job.id, JobStatus::Done);
+                        Ok(out) => {
+                            metrics.job_completed(
+                                out.report.iterations,
+                                out.report.sketch_doublings,
+                                out.report.secs,
+                            );
+                            status.lock().unwrap().set(job.id, JobStatus::Done);
                         }
                         Err(e) => {
                             metrics.job_failed();
-                            status.lock().unwrap().insert(job.id, JobStatus::Failed(e.clone()));
+                            status.lock().unwrap().set(job.id, JobStatus::Failed(e.clone()));
                         }
                     }
-                    let _ = results_tx.send(JobResult { id: job.id, report: outcome });
+                    let _ = results_tx.send(JobResult { id: job.id, outcome });
                 })
             }));
         }
@@ -109,19 +155,31 @@ impl SolveService {
 
     /// Submit a job (non-blocking).
     pub fn submit(&self, job: JobSpec) {
-        self.status.lock().unwrap().insert(job.id, JobStatus::Queued);
+        self.status.lock().unwrap().set(job.id, JobStatus::Queued);
         self.metrics.job_submitted();
         self.tx.as_ref().expect("service stopped").send(job).expect("workers alive");
     }
 
-    /// Status of a job id (None if unknown).
+    /// Status of a job id (None if unknown or evicted from the bounded
+    /// recent-status ring after retrieval).
     pub fn status(&self, id: u64) -> Option<JobStatus> {
-        self.status.lock().unwrap().get(&id).cloned()
+        self.status.lock().unwrap().get(id)
     }
 
-    /// Block for the next finished job.
+    /// (active-tracked, recently-retired) status counts — the first only
+    /// covers jobs whose results have not been retrieved yet, the second
+    /// is capped at [`RECENT_STATUS_CAP`].
+    pub fn status_counts(&self) -> (usize, usize) {
+        let board = self.status.lock().unwrap();
+        (board.active.len(), board.recent.len())
+    }
+
+    /// Block for the next finished job. Retrieving a result retires its
+    /// status entry into the bounded recent ring.
     pub fn next_result(&self) -> Option<JobResult> {
-        self.results_rx.recv().ok()
+        let result = self.results_rx.recv().ok()?;
+        self.status.lock().unwrap().retire(result.id);
+        Some(result)
     }
 
     /// Close the queue and join workers; returns remaining results.
@@ -132,51 +190,30 @@ impl SolveService {
         }
         let mut out = Vec::new();
         while let Ok(r) = self.results_rx.try_recv() {
+            self.status.lock().unwrap().retire(r.id);
             out.push(r);
         }
         out
     }
 }
 
-fn run_job(job: &JobSpec, policy: &RouterPolicy) -> Result<SolveReport, String> {
-    let decided = job.route_override.clone().unwrap_or_else(|| route(&job.problem, policy));
-    let stop = StopRule { max_iters: job.t_max, tol: job.tol };
-    match decided {
-        Route::Direct => DirectSolver::solve(&job.problem).map_err(|e| e.to_string()),
-        Route::Cg { max_iters } => Ok(ConjugateGradient::solve(
-            &job.problem,
-            StopRule { max_iters: max_iters.min(job.t_max.max(1)), tol: job.tol },
-            None,
-        )),
-        Route::PcgFixed { m, sketch } => {
-            let mut rng = crate::rng::Rng::seed_from(job.seed);
-            let sk = sketch.sample(m.min(crate::linalg::next_pow2(job.problem.n())), job.problem.n(), &mut rng);
-            let pre = SketchedPreconditioner::from_sketch(&job.problem, &sk).map_err(|e| e.to_string())?;
-            Ok(Pcg::solve_fixed(&job.problem, &pre, stop, None))
-        }
-        Route::AdaptivePcg { sketch } => {
-            let cfg = AdaptiveConfig {
-                sketch,
-                seed: job.seed,
-                tol: job.tol,
-                ..Default::default()
-            };
-            Ok(AdaptivePcg::with_config(cfg).solve(&job.problem, job.t_max))
-        }
+/// Routing + one `api::solve` call — the whole per-job pipeline.
+fn run_job(job: &JobSpec, policy: &RouterPolicy) -> Result<SolveOutcome, String> {
+    let mut request = job.request.clone();
+    if request.method.is_none() {
+        request.method = Some(route(&request.problem, policy));
     }
-}
-
-/// Convenience for a default fixed-PCG route at m = 2d (the paper's
-/// oblivious baseline).
-pub fn pcg_2d_route(d: usize, sketch: SketchKind) -> Route {
-    Route::PcgFixed { m: 2 * d, sketch }
+    api::solve(&request).map_err(|e| e.to_string())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::MethodSpec;
     use crate::linalg::Matrix;
+    use crate::problem::Problem;
     use crate::rng::Rng;
+    use crate::sketch::SketchKind;
 
     fn toy_problem(seed: u64) -> Arc<Problem> {
         let mut rng = Rng::seed_from(seed);
@@ -190,19 +227,14 @@ mod tests {
     fn jobs_complete_and_metrics_track() {
         let svc = SolveService::start(2, RouterPolicy::default());
         for id in 0..6u64 {
-            svc.submit(JobSpec {
-                id,
-                problem: toy_problem(id),
-                route_override: None,
-                t_max: 50,
-                tol: 1e-10,
-                seed: id,
-            });
+            let request =
+                SolveRequest::new(toy_problem(id)).max_iters(50).rel_tol(1e-10).seed(id);
+            svc.submit(JobSpec::new(id, request));
         }
         let mut done = 0;
         while done < 6 {
             let r = svc.next_result().expect("result");
-            assert!(r.report.is_ok(), "job {} failed: {:?}", r.id, r.report.as_ref().err());
+            assert!(r.outcome.is_ok(), "job {} failed: {:?}", r.id, r.outcome.as_ref().err());
             assert_eq!(svc.status(r.id), Some(JobStatus::Done));
             done += 1;
         }
@@ -213,36 +245,61 @@ mod tests {
     }
 
     #[test]
-    fn route_override_respected() {
+    fn explicit_method_respected() {
         let svc = SolveService::start(1, RouterPolicy::default());
-        svc.submit(JobSpec {
-            id: 1,
-            problem: toy_problem(9),
-            route_override: Some(Route::Cg { max_iters: 40 }),
-            t_max: 40,
-            tol: 1e-8,
-            seed: 1,
-        });
+        let request = SolveRequest::new(toy_problem(9))
+            .method(MethodSpec::Cg { max_iters: Some(40) })
+            .max_iters(40)
+            .rel_tol(1e-8)
+            .seed(1);
+        svc.submit(JobSpec::new(1, request));
         let r = svc.next_result().unwrap();
-        assert_eq!(r.report.unwrap().method, "cg");
+        assert_eq!(r.outcome.unwrap().report.method, "cg");
         svc.shutdown();
     }
 
     #[test]
     fn adaptive_route_works_through_service() {
         let svc = SolveService::start(1, RouterPolicy::default());
-        svc.submit(JobSpec {
-            id: 2,
-            problem: toy_problem(11),
-            route_override: Some(Route::AdaptivePcg { sketch: SketchKind::Sjlt { s: 1 } }),
-            t_max: 40,
-            tol: 1e-10,
-            seed: 2,
-        });
+        let request = SolveRequest::new(toy_problem(11))
+            .method(MethodSpec::AdaptivePcg { sketch: SketchKind::Sjlt { s: 1 } })
+            .max_iters(40)
+            .rel_tol(1e-10)
+            .seed(2);
+        svc.submit(JobSpec::new(2, request));
         let r = svc.next_result().unwrap();
-        let rep = r.report.unwrap();
-        assert!(rep.method.starts_with("adaptive_pcg"));
-        assert!(rep.final_residual_decrement() < 1e-9);
+        let out = r.outcome.unwrap();
+        assert!(out.report.method.starts_with("adaptive_pcg"));
+        assert!(!out.aborted());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn status_map_stays_bounded_under_sustained_traffic() {
+        // regression test for the unbounded `status: HashMap` growth: after
+        // results are retrieved, only a bounded ring of terminal statuses
+        // remains answerable.
+        let jobs = (RECENT_STATUS_CAP + 40) as u64;
+        let svc = SolveService::start(2, RouterPolicy::default());
+        let prob = toy_problem(77); // shared handle: requests are cheap
+        for id in 0..jobs {
+            let request =
+                SolveRequest::new(prob.clone()).method(MethodSpec::Direct).seed(id);
+            svc.submit(JobSpec::new(id, request));
+        }
+        let mut retrieved = Vec::new();
+        for _ in 0..jobs {
+            let r = svc.next_result().expect("result");
+            assert!(r.outcome.is_ok());
+            retrieved.push(r.id);
+        }
+        let (active, recent) = svc.status_counts();
+        assert_eq!(active, 0, "every retrieved job must leave the active map");
+        assert_eq!(recent, RECENT_STATUS_CAP);
+        // the oldest retrievals were evicted from the ring...
+        assert_eq!(svc.status(retrieved[0]), None);
+        // ...while the most recent ones still answer
+        assert_eq!(svc.status(*retrieved.last().unwrap()), Some(JobStatus::Done));
         svc.shutdown();
     }
 }

@@ -10,6 +10,10 @@
 //! at runtime to the (unknown) effective dimension of the data.
 //!
 //! Architecture (see DESIGN.md):
+//! - **L3 api (`api`)**: the unified solve surface — typed
+//!   `SolveRequest`s (method spec, stop criteria, warm start, budget,
+//!   streaming progress) dispatched through a self-describing solver
+//!   registry. Every consumer below flows through `api::solve`.
 //! - **L3 (this crate)**: solver coordinator — adaptive controller,
 //!   request batching for multi-RHS (multiclass) problems, routing, metrics.
 //! - **L3 execution (`par`)**: a zero-dependency scoped-thread parallel
@@ -22,6 +26,7 @@
 //!   (`runtime` module). Python is never on the request path.
 
 pub mod adaptive;
+pub mod api;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;

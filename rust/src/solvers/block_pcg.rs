@@ -8,11 +8,12 @@
 //! it makes the per-class marginal cost of multiclass ridge ~O(d²) instead
 //! of O(nd) per iteration.
 
+use crate::api::{Budget, SolveCtx, SolveStatus};
 use crate::linalg::{matmul_into, Matrix};
 use crate::par;
 use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
-use crate::solvers::StopRule;
+use crate::solvers::{IterRecord, StopRule};
 use std::time::Instant;
 
 /// Report for a block solve.
@@ -38,6 +39,25 @@ impl BlockPcg {
         pre: &SketchedPreconditioner,
         stop: StopRule,
     ) -> BlockSolveReport {
+        let budget = Budget::none();
+        let ctx = SolveCtx::from_stop(stop.into(), &budget);
+        Self::solve_ctx(prob_template, b_cols, pre, &ctx).0
+    }
+
+    /// Context-driven block solve: shared [`Stop`](crate::api::Stop)
+    /// criteria (`rel_tol` freezes a column when `δ̃_t/δ̃_0 <= rel_tol`,
+    /// `abs_decrement_tol` when `δ̃_t <= tol`), per-sweep budget polling,
+    /// and progress streaming (one record per block sweep carrying the
+    /// worst active column's decrement; `delta_rel` is NaN — per-column
+    /// exact errors are not tracked here). Warm starts are not supported:
+    /// the block always starts at `X = 0` (`ctx.x0` is ignored).
+    pub fn solve_ctx(
+        prob_template: &Problem,
+        b_cols: &Matrix,
+        pre: &SketchedPreconditioner,
+        ctx: &SolveCtx,
+    ) -> (BlockSolveReport, SolveStatus) {
+        let stop = ctx.stop;
         let t0 = Instant::now();
         let a = &prob_template.a;
         let d = a.cols;
@@ -64,7 +84,12 @@ impl BlockPcg {
         let at = a.transpose();
 
         let mut t = 0;
+        let mut status = SolveStatus::Done;
         while t < stop.max_iters && active.iter().any(|&a| a) {
+            if let Some(s) = ctx.budget.exhausted() {
+                status = s;
+                break;
+            }
             // HP = A^T (A P) + nu^2 Lambda P — ONE pass over A for all c,
             // with both GEMMs row-partitioned over the thread budget
             matmul_into(a, &p, &mut ap);
@@ -99,6 +124,11 @@ impl BlockPcg {
                 }
             }
             rt = solve_block(pre, &r);
+            // worst post-update decrement over the columns that took part
+            // in this sweep (already-frozen columns excluded; columns that
+            // freeze right now still count, so the streamed value never
+            // collapses to 0.0 on the final sweep)
+            let mut sweep_worst = 0.0f64;
             for k in 0..c {
                 if !active[k] {
                     continue;
@@ -110,19 +140,32 @@ impl BlockPcg {
                     p.set(i, k, v);
                 }
                 delta[k] = dnew;
-                if stop.tol > 0.0 && dnew / delta0[k] <= stop.tol {
+                sweep_worst = sweep_worst.max(dnew);
+                let rel_done = stop.rel_tol > 0.0 && dnew / delta0[k] <= stop.rel_tol;
+                let abs_done = stop.abs_decrement_tol > 0.0 && dnew <= stop.abs_decrement_tol;
+                if rel_done || abs_done {
                     active[k] = false;
                 }
             }
             t += 1;
+            if ctx.observer.is_some() {
+                ctx.emit(&IterRecord {
+                    t,
+                    secs: t0.elapsed().as_secs_f64(),
+                    m: pre.m,
+                    delta_tilde: sweep_worst,
+                    delta_rel: f64::NAN,
+                });
+            }
         }
 
-        BlockSolveReport {
+        let report = BlockSolveReport {
             x,
             iterations: t,
             final_decrements: delta.iter().zip(&delta0).map(|(d, d0)| d / d0).collect(),
             secs: t0.elapsed().as_secs_f64(),
-        }
+        };
+        (report, status)
     }
 }
 

@@ -2,6 +2,7 @@
 //! `H x = b`. Convergence degrades with the condition number — exactly the
 //! behaviour the paper's figures show for decreasing `nu`.
 
+use crate::api::{Budget, SolveCtx, SolveStatus};
 use crate::linalg::{axpy, dot, norm2};
 use crate::problem::Problem;
 use crate::solvers::{ErrTracker, IterRecord, SolveReport, StopRule};
@@ -14,31 +15,55 @@ impl ConjugateGradient {
     /// Run CG from `x0 = 0` with the given stopping rule. `x_star` (if
     /// provided) enables exact-error tracing for the figures.
     pub fn solve(prob: &Problem, stop: StopRule, x_star: Option<&[f64]>) -> SolveReport {
+        let budget = Budget::none();
+        let ctx = SolveCtx { stop: stop.into(), budget: &budget, x0: None, x_star, observer: None };
+        Self::solve_ctx(prob, &ctx).0
+    }
+
+    /// Context-driven CG: shared [`Stop`](crate::api::Stop) criteria
+    /// (`rel_tol` is the residual-*norm* ratio `‖r_t‖/‖r_0‖`, as before),
+    /// warm start, per-iteration budget polling, and progress streaming.
+    pub fn solve_ctx(prob: &Problem, ctx: &SolveCtx) -> (SolveReport, SolveStatus) {
         let d = prob.d();
         let n = prob.n();
         let t0 = Instant::now();
-        let x0 = vec![0.0; d];
-        let err = ErrTracker::new(prob, &x0, x_star);
+        let mut work = vec![0.0; n];
+        let x0 = ctx.x0_vec(d);
+        let err = ErrTracker::new(prob, &x0, ctx.x_star);
 
+        // r = b - Hx0 = -grad f(x0); at the cold start this is just b
+        let mut r = if ctx.x0.is_some() {
+            let mut r = vec![0.0; d];
+            prob.gradient(&x0, &mut r, &mut work);
+            for v in &mut r {
+                *v = -*v;
+            }
+            r
+        } else {
+            prob.b.clone()
+        };
         let mut x = x0;
-        // r = b - Hx = b at x0 = 0
-        let mut r = prob.b.clone();
         let mut p = r.clone();
         let mut rs = dot(&r, &r);
         let rs0 = rs.max(1e-300);
         let mut hp = vec![0.0; d];
-        let mut work = vec![0.0; n];
 
         let mut trace = vec![IterRecord {
             t: 0,
             secs: 0.0,
             m: 0,
             delta_tilde: 0.5 * rs, // ||grad||^2/2: no preconditioner
-            delta_rel: if x_star.is_some() { 1.0 } else { f64::NAN },
+            delta_rel: if ctx.x_star.is_some() { 1.0 } else { f64::NAN },
         }];
+        ctx.emit(&trace[0]);
 
+        let mut status = SolveStatus::Done;
         let mut t = 0;
-        while t < stop.max_iters {
+        while t < ctx.stop.max_iters {
+            if let Some(s) = ctx.budget.exhausted() {
+                status = s;
+                break;
+            }
             prob.hess_apply(&p, &mut hp, &mut work);
             let php = dot(&p, &hp);
             if php <= 0.0 || !php.is_finite() {
@@ -54,20 +79,25 @@ impl ConjugateGradient {
             }
             rs = rs_new;
             t += 1;
-            trace.push(IterRecord {
+            let rec = IterRecord {
                 t,
                 secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
                 m: 0,
                 delta_tilde: 0.5 * rs,
                 delta_rel: err.rel(prob, &x),
-            });
-            if stop.tol > 0.0 && rs / rs0 <= stop.tol * stop.tol {
+            };
+            ctx.emit(&rec);
+            trace.push(rec);
+            if ctx.stop.rel_tol > 0.0 && rs / rs0 <= ctx.stop.rel_tol * ctx.stop.rel_tol {
+                break;
+            }
+            if ctx.stop.abs_decrement_tol > 0.0 && 0.5 * rs <= ctx.stop.abs_decrement_tol {
                 break;
             }
         }
 
         let _ = norm2(&r);
-        SolveReport {
+        let report = SolveReport {
             method: "cg".into(),
             x,
             iterations: t,
@@ -77,7 +107,8 @@ impl ConjugateGradient {
             secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
             sketch_flops: 0.0,
             factor_flops: 0.0,
-        }
+        };
+        (report, status)
     }
 }
 

@@ -3,11 +3,11 @@
 //! `μ_t = 1 − ρ` (Theorem 3.2), giving `(ρ, φ(ρ)=ρ, α=1)`-linear
 //! convergence conditional on the embedding event.
 
+use crate::api::{Budget, SolveCtx};
 use crate::linalg::{axpy, dot};
 use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
-use crate::solvers::{ErrTracker, IterRecord, PreconditionedMethod, Proposal, SolveReport, StopRule};
-use std::time::Instant;
+use crate::solvers::{PreconditionedMethod, Proposal, SolveReport, StopRule};
 
 /// IHS state implementing [`PreconditionedMethod`].
 ///
@@ -54,7 +54,8 @@ impl Ihs {
         self.decrement = 0.5 * dot(&self.g, &self.v);
     }
 
-    /// Fixed-preconditioner IHS baseline loop.
+    /// Fixed-preconditioner IHS baseline loop (shared-loop wrapper; the
+    /// api layer adds budget/warm start/streaming on the same path).
     pub fn solve_fixed(
         prob: &Problem,
         pre: &SketchedPreconditioner,
@@ -62,47 +63,10 @@ impl Ihs {
         stop: StopRule,
         x_star: Option<&[f64]>,
     ) -> SolveReport {
-        let d = prob.d();
-        let t0 = Instant::now();
-        let x0 = vec![0.0; d];
-        let err = ErrTracker::new(prob, &x0, x_star);
-        let mut ihs = Ihs::new(rho, d, prob.n());
-        ihs.restart(prob, pre, &x0);
-        let d0 = ihs.current_decrement().max(1e-300);
-        let mut trace = vec![IterRecord {
-            t: 0,
-            secs: 0.0,
-            m: pre.m,
-            delta_tilde: d0,
-            delta_rel: if x_star.is_some() { 1.0 } else { f64::NAN },
-        }];
-        let mut t = 0;
-        while t < stop.max_iters {
-            let prop = ihs.propose(prob, pre);
-            ihs.commit();
-            t += 1;
-            trace.push(IterRecord {
-                t,
-                secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
-                m: pre.m,
-                delta_tilde: prop.delta_tilde_plus,
-                delta_rel: err.rel(prob, ihs.current()),
-            });
-            if stop.tol > 0.0 && prop.delta_tilde_plus / d0 <= stop.tol {
-                break;
-            }
-        }
-        SolveReport {
-            method: "ihs".into(),
-            x: ihs.current().to_vec(),
-            iterations: t,
-            trace,
-            final_m: pre.m,
-            sketch_doublings: 0,
-            secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
-            sketch_flops: 0.0,
-            factor_flops: pre.factor_flops,
-        }
+        let budget = Budget::none();
+        let ctx = SolveCtx { stop: stop.into(), budget: &budget, x0: None, x_star, observer: None };
+        let mut ihs = Ihs::new(rho, prob.d(), prob.n());
+        crate::solvers::run_fixed_preconditioned(&mut ihs, prob, pre, &ctx).0
     }
 }
 

@@ -171,6 +171,11 @@ impl<'a> ErrTracker<'a> {
 }
 
 /// Stop criteria shared by the fixed-size solver loops.
+///
+/// Legacy convenience: converts into the unified [`api::Stop`]
+/// (`crate::api::Stop`), which additionally carries the Remark 4.2
+/// absolute-decrement criterion and pairs with a [`api::Budget`] in the
+/// context-driven loops.
 #[derive(Clone, Copy, Debug)]
 pub struct StopRule {
     /// Maximum accepted iterations.
@@ -183,4 +188,78 @@ impl Default for StopRule {
     fn default() -> Self {
         StopRule { max_iters: 100, tol: 0.0 }
     }
+}
+
+/// One shared loop drives every fixed-preconditioner
+/// [`PreconditionedMethod`] (PCG, IHS, Polyak-IHS): restart at the warm
+/// start (or 0), then propose/commit until the [`Stop`] criteria fire or
+/// the [`Budget`](crate::api::Budget) is exhausted. Each accepted
+/// iteration streams its [`IterRecord`] to the context's observer before
+/// appending it to the trace, so an observer sees exactly the final trace.
+///
+/// This used to be three near-identical hand-rolled loops in `pcg.rs`,
+/// `ihs.rs` and `polyak.rs`; the `solve_fixed` constructors now all
+/// delegate here.
+pub fn run_fixed_preconditioned<M: PreconditionedMethod>(
+    method: &mut M,
+    prob: &Problem,
+    pre: &SketchedPreconditioner,
+    ctx: &crate::api::SolveCtx,
+) -> (SolveReport, crate::api::SolveStatus) {
+    use crate::api::SolveStatus;
+    let d = prob.d();
+    let t0 = std::time::Instant::now();
+    let x0 = ctx.x0_vec(d);
+    let err = ErrTracker::new(prob, &x0, ctx.x_star);
+    method.restart(prob, pre, &x0);
+    let d0 = method.current_decrement().max(1e-300);
+
+    let mut trace = vec![IterRecord {
+        t: 0,
+        secs: 0.0,
+        m: pre.m,
+        delta_tilde: d0,
+        delta_rel: if ctx.x_star.is_some() { 1.0 } else { f64::NAN },
+    }];
+    ctx.emit(&trace[0]);
+
+    let mut status = SolveStatus::Done;
+    let mut t = 0;
+    while t < ctx.stop.max_iters {
+        if let Some(s) = ctx.budget.exhausted() {
+            status = s;
+            break;
+        }
+        let prop = method.propose(prob, pre);
+        method.commit();
+        t += 1;
+        let rec = IterRecord {
+            t,
+            secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+            m: pre.m,
+            delta_tilde: prop.delta_tilde_plus,
+            delta_rel: err.rel(prob, method.current()),
+        };
+        ctx.emit(&rec);
+        trace.push(rec);
+        if ctx.stop.rel_tol > 0.0 && prop.delta_tilde_plus / d0 <= ctx.stop.rel_tol {
+            break;
+        }
+        if ctx.stop.abs_decrement_tol > 0.0 && prop.delta_tilde_plus <= ctx.stop.abs_decrement_tol {
+            break;
+        }
+    }
+
+    let report = SolveReport {
+        method: method.name().into(),
+        x: method.current().to_vec(),
+        iterations: t,
+        trace,
+        final_m: pre.m,
+        sketch_doublings: 0,
+        secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+        sketch_flops: 0.0,
+        factor_flops: pre.factor_flops,
+    };
+    (report, status)
 }

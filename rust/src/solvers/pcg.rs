@@ -6,11 +6,11 @@
 //! giving `(ρ, φ(ρ), α)`-linear convergence for
 //! `φ(ρ) = (1 − sqrt(1−ρ))/(1 + sqrt(1−ρ))`, `α = 4`.
 
+use crate::api::{Budget, SolveCtx};
 use crate::linalg::{axpy, dot};
 use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
-use crate::solvers::{ErrTracker, IterRecord, PreconditionedMethod, Proposal, SolveReport, StopRule};
-use std::time::Instant;
+use crate::solvers::{PreconditionedMethod, Proposal, SolveReport, StopRule};
 
 /// PCG state implementing [`PreconditionedMethod`].
 ///
@@ -53,54 +53,19 @@ impl Pcg {
     }
 
     /// Run fixed-preconditioner PCG (the paper's `PCG, m = 2d` baseline).
+    /// Thin wrapper over the shared loop with no budget/warm start; the
+    /// api layer drives [`crate::solvers::run_fixed_preconditioned`]
+    /// directly for those.
     pub fn solve_fixed(
         prob: &Problem,
         pre: &SketchedPreconditioner,
         stop: StopRule,
         x_star: Option<&[f64]>,
     ) -> SolveReport {
-        let d = prob.d();
-        let t0 = Instant::now();
-        let x0 = vec![0.0; d];
-        let err = ErrTracker::new(prob, &x0, x_star);
-        let mut pcg = Pcg::new(d, prob.n());
-        pcg.restart(prob, pre, &x0);
-        let d0 = pcg.current_decrement().max(1e-300);
-
-        let mut trace = vec![IterRecord {
-            t: 0,
-            secs: 0.0,
-            m: pre.m,
-            delta_tilde: d0,
-            delta_rel: if x_star.is_some() { 1.0 } else { f64::NAN },
-        }];
-        let mut t = 0;
-        while t < stop.max_iters {
-            let prop = pcg.propose(prob, pre);
-            pcg.commit();
-            t += 1;
-            trace.push(IterRecord {
-                t,
-                secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
-                m: pre.m,
-                delta_tilde: prop.delta_tilde_plus,
-                delta_rel: err.rel(prob, pcg.current()),
-            });
-            if stop.tol > 0.0 && prop.delta_tilde_plus / d0 <= stop.tol {
-                break;
-            }
-        }
-        SolveReport {
-            method: "pcg".into(),
-            x: pcg.current().to_vec(),
-            iterations: t,
-            trace,
-            final_m: pre.m,
-            sketch_doublings: 0,
-            secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
-            sketch_flops: 0.0,
-            factor_flops: pre.factor_flops,
-        }
+        let budget = Budget::none();
+        let ctx = SolveCtx { stop: stop.into(), budget: &budget, x0: None, x_star, observer: None };
+        let mut pcg = Pcg::new(prob.d(), prob.n());
+        crate::solvers::run_fixed_preconditioned(&mut pcg, prob, pre, &ctx).0
     }
 }
 

@@ -7,11 +7,11 @@
 //! loose to drive the adaptive test, which is why the paper (and this
 //! library) mark adaptive Polyak-IHS experimental.
 
+use crate::api::{Budget, SolveCtx};
 use crate::linalg::{axpy, dot};
 use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
-use crate::solvers::{ErrTracker, IterRecord, PreconditionedMethod, Proposal, SolveReport, StopRule};
-use std::time::Instant;
+use crate::solvers::{PreconditionedMethod, Proposal, SolveReport, StopRule};
 
 /// Heavy-ball step/momentum parameters for a given ρ (Corollary A.2).
 pub fn polyak_params(rho: f64) -> (f64, f64) {
@@ -61,7 +61,8 @@ impl PolyakIhs {
         self.decrement = 0.5 * dot(&self.g, &self.v);
     }
 
-    /// Fixed-preconditioner loop.
+    /// Fixed-preconditioner loop (shared-loop wrapper; the api layer adds
+    /// budget/warm start/streaming on the same path).
     pub fn solve_fixed(
         prob: &Problem,
         pre: &SketchedPreconditioner,
@@ -69,47 +70,10 @@ impl PolyakIhs {
         stop: StopRule,
         x_star: Option<&[f64]>,
     ) -> SolveReport {
-        let d = prob.d();
-        let t0 = Instant::now();
-        let x0 = vec![0.0; d];
-        let err = ErrTracker::new(prob, &x0, x_star);
-        let mut pk = PolyakIhs::new(rho, d, prob.n());
-        pk.restart(prob, pre, &x0);
-        let d0 = pk.current_decrement().max(1e-300);
-        let mut trace = vec![IterRecord {
-            t: 0,
-            secs: 0.0,
-            m: pre.m,
-            delta_tilde: d0,
-            delta_rel: if x_star.is_some() { 1.0 } else { f64::NAN },
-        }];
-        let mut t = 0;
-        while t < stop.max_iters {
-            let prop = pk.propose(prob, pre);
-            pk.commit();
-            t += 1;
-            trace.push(IterRecord {
-                t,
-                secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
-                m: pre.m,
-                delta_tilde: prop.delta_tilde_plus,
-                delta_rel: err.rel(prob, pk.current()),
-            });
-            if stop.tol > 0.0 && prop.delta_tilde_plus / d0 <= stop.tol {
-                break;
-            }
-        }
-        SolveReport {
-            method: "polyak_ihs".into(),
-            x: pk.current().to_vec(),
-            iterations: t,
-            trace,
-            final_m: pre.m,
-            sketch_doublings: 0,
-            secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
-            sketch_flops: 0.0,
-            factor_flops: pre.factor_flops,
-        }
+        let budget = Budget::none();
+        let ctx = SolveCtx { stop: stop.into(), budget: &budget, x0: None, x_star, observer: None };
+        let mut pk = PolyakIhs::new(rho, prob.d(), prob.n());
+        crate::solvers::run_fixed_preconditioned(&mut pk, prob, pre, &ctx).0
     }
 }
 

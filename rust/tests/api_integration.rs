@@ -1,0 +1,267 @@
+//! Integration tests for the unified solve API: every `MethodSpec`
+//! round-trips through `SolveService`, and warm starts / deadline aborts /
+//! cancellation / streaming progress work end to end through the service
+//! worker pool — the acceptance surface of the api redesign.
+
+use sketchsolve::api::{self, MethodSpec, SolveRequest, SolveStatus, Stop};
+use sketchsolve::coordinator::{JobSpec, RouterPolicy, SolveService};
+use sketchsolve::linalg::Matrix;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{DirectSolver, IterRecord};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn toy_problem(n: usize, d: usize, nu: f64, seed: u64) -> Arc<Problem> {
+    let mut rng = Rng::seed_from(seed);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+    let b = rng.gaussian_vec(d);
+    Arc::new(Problem::ridge(a, b, nu))
+}
+
+/// Fast-decaying spectrum (small effective dimension): the regime the
+/// paper targets, where the adaptive ladder climbs several rungs from
+/// m = 1 and fixed sketches at moderate m are strong embeddings.
+fn decay_problem(n: usize, d: usize, nu: f64, seed: u64) -> Arc<Problem> {
+    let mut rng = Rng::seed_from(seed);
+    let mut a = Matrix::zeros(n, d);
+    for j in 0..d {
+        a.set(j, j, 0.8f64.powi(j as i32));
+    }
+    for i in d..n {
+        for j in 0..d {
+            a.set(i, j, 1e-3 * rng.gaussian() / (n as f64).sqrt());
+        }
+    }
+    let b = rng.gaussian_vec(d);
+    Arc::new(Problem::ridge(a, b, nu))
+}
+
+#[test]
+fn every_method_spec_round_trips_through_the_service() {
+    let prob = decay_problem(256, 24, 1e-1, 42);
+    let exact = DirectSolver::solve(&prob).unwrap();
+    let d = prob.d();
+    let sk = SketchKind::Sjlt { s: 1 };
+
+    // ρ = 0.35 for the non-adaptive IHS/Polyak variants: a deliberately
+    // conservative (large-ρ ⇒ small-step) choice so the m = 128 embedding
+    // is far inside the stability region — this test exercises the api
+    // plumbing, not the paper's rates.
+    let specs: Vec<MethodSpec> = vec![
+        MethodSpec::Direct,
+        MethodSpec::Cg { max_iters: None },
+        MethodSpec::PcgFixed { m: None, sketch: sk },
+        MethodSpec::PcgFixed { m: Some(64), sketch: SketchKind::Gaussian },
+        MethodSpec::Ihs { m: Some(128), sketch: SketchKind::Gaussian, rho: 0.35 },
+        MethodSpec::AdaptivePcg { sketch: sk },
+        MethodSpec::AdaptiveIhs { sketch: sk },
+        MethodSpec::AdaptivePolyak { sketch: SketchKind::Gaussian, rho: 0.35 },
+        MethodSpec::MultiRhs { sketch: sk, rho: 0.25, m_init: 1, growth: 2, m_cap: None },
+    ];
+    let c = 3usize;
+    let mut b_cols = Matrix::zeros(d, c);
+    let mut rng = Rng::seed_from(7);
+    for k in 0..c {
+        for i in 0..d {
+            b_cols.set(i, k, if k == 0 { prob.b[i] } else { rng.gaussian() });
+        }
+    }
+
+    let svc = SolveService::start(2, RouterPolicy::default());
+    for (id, spec) in specs.iter().enumerate() {
+        let mut request = SolveRequest::new(prob.clone())
+            .method(spec.clone())
+            .stop(Stop { max_iters: 150, rel_tol: 1e-12, abs_decrement_tol: 0.0 })
+            .seed(id as u64 + 1);
+        if matches!(spec, MethodSpec::MultiRhs { .. }) {
+            request = request.rhs_block(b_cols.clone());
+        }
+        svc.submit(JobSpec::new(id as u64, request));
+    }
+    let mut outcomes = HashMap::new();
+    for _ in 0..specs.len() {
+        let r = svc.next_result().expect("result");
+        let out = r.outcome.unwrap_or_else(|e| panic!("job {} failed: {e}", r.id));
+        outcomes.insert(r.id, out);
+    }
+    svc.shutdown();
+
+    for (id, spec) in specs.iter().enumerate() {
+        let out = &outcomes[&(id as u64)];
+        assert_eq!(out.status, SolveStatus::Done, "{spec:?}");
+        if !matches!(spec, MethodSpec::MultiRhs { .. }) {
+            assert!(
+                out.report.method.starts_with(spec.name()),
+                "{spec:?}: reported method {}",
+                out.report.method
+            );
+        }
+        // accuracy: tight for the robust families, loose for the
+        // momentum method whose finite-m transient is larger
+        let tol_rel = if matches!(spec, MethodSpec::AdaptivePolyak { .. }) { 1e-2 } else { 1e-3 };
+        if matches!(spec, MethodSpec::MultiRhs { .. }) {
+            let block = out.x_block.as_ref().expect("multi-RHS block");
+            assert_eq!((block.rows, block.cols), (d, c));
+            assert_eq!(out.followers.len(), c - 1);
+            // every column matches the direct solve of that column
+            let factor = DirectSolver::factor(&prob).unwrap();
+            for k in 0..c {
+                let xk = factor.solve(&b_cols.col(k));
+                for i in 0..d {
+                    assert!(
+                        (block.at(i, k) - xk[i]).abs() < tol_rel * (1.0 + xk[i].abs()),
+                        "multi_rhs col {k} row {i}: {} vs {}",
+                        block.at(i, k),
+                        xk[i]
+                    );
+                }
+            }
+        } else {
+            for i in 0..d {
+                assert!(
+                    (out.report.x[i] - exact.x[i]).abs() < tol_rel * (1.0 + exact.x[i].abs()),
+                    "{spec:?} row {i}: {} vs {}",
+                    out.report.x[i],
+                    exact.x[i]
+                );
+            }
+        }
+    }
+
+    // the oblivious m resolution: PcgFixed { m: None } ran at m = 2d
+    assert_eq!(outcomes[&2].report.final_m, 2 * d);
+    assert_eq!(outcomes[&3].report.final_m, 64);
+    // the adaptive pilot climbed from m = 1 (method actually adapted)
+    assert!(outcomes[&5].report.sketch_doublings > 0);
+}
+
+#[test]
+fn warm_start_from_near_solution_converges_in_fewer_iterations() {
+    let prob = toy_problem(128, 24, 0.5, 31);
+    let d = prob.d();
+    let exact = DirectSolver::solve(&prob).unwrap();
+    let delta0 = prob.error_to(&vec![0.0; d], &exact.x);
+    let abs_tol = delta0 * 1e-10;
+    let mut rng = Rng::seed_from(5);
+    let x_near: Vec<f64> = exact.x.iter().map(|v| v + 1e-6 * rng.gaussian()).collect();
+
+    let spec = MethodSpec::PcgFixed { m: None, sketch: SketchKind::Gaussian };
+    let stop = Stop { max_iters: 200, rel_tol: 0.0, abs_decrement_tol: abs_tol };
+
+    let svc = SolveService::start(1, RouterPolicy::default());
+    let cold = SolveRequest::new(prob.clone()).method(spec.clone()).stop(stop).seed(9);
+    let warm =
+        SolveRequest::new(prob.clone()).method(spec).stop(stop).seed(9).warm_start(x_near);
+    svc.submit(JobSpec::new(0, cold));
+    svc.submit(JobSpec::new(1, warm));
+    let mut by_id = HashMap::new();
+    for _ in 0..2 {
+        let r = svc.next_result().unwrap();
+        by_id.insert(r.id, r.outcome.unwrap());
+    }
+    svc.shutdown();
+
+    let (cold, warm) = (&by_id[&0], &by_id[&1]);
+    assert_eq!(cold.status, SolveStatus::Done);
+    assert_eq!(warm.status, SolveStatus::Done);
+    // both met the absolute criterion...
+    assert!(cold.report.trace.last().unwrap().delta_tilde <= abs_tol);
+    assert!(warm.report.trace.last().unwrap().delta_tilde <= abs_tol);
+    // ...but the warm start needed strictly fewer iterations
+    assert!(
+        warm.report.iterations < cold.report.iterations,
+        "warm {} vs cold {}",
+        warm.report.iterations,
+        cold.report.iterations
+    );
+    assert!(warm.report.iterations >= 1);
+}
+
+#[test]
+fn zero_ms_deadline_aborts_cleanly_with_partial_outcome() {
+    let prob = decay_problem(256, 32, 1e-2, 11);
+    let d = prob.d();
+    let svc = SolveService::start(1, RouterPolicy::default());
+    let request = SolveRequest::new(prob)
+        .method(MethodSpec::AdaptivePcg { sketch: SketchKind::Sjlt { s: 1 } })
+        .max_iters(100)
+        .deadline_ms(0);
+    svc.submit(JobSpec::new(0, request));
+    let r = svc.next_result().unwrap();
+    let out = r.outcome.expect("an aborted solve is a status, not an error");
+    assert_eq!(out.status, SolveStatus::DeadlineExpired);
+    assert!(out.aborted());
+    // partial outcome: no iterations ran, the iterate is the start point
+    assert_eq!(out.report.iterations, 0);
+    assert_eq!(out.report.x, vec![0.0; d]);
+    // the job itself completed from the service's point of view
+    assert_eq!(svc.status(0), Some(sketchsolve::coordinator::JobStatus::Done));
+    svc.shutdown();
+}
+
+#[test]
+fn cancel_token_aborts_with_partial_outcome() {
+    let prob = toy_problem(96, 16, 0.5, 13);
+    let token = Arc::new(AtomicBool::new(true)); // already cancelled
+    let request = SolveRequest::new(prob)
+        .method(MethodSpec::Cg { max_iters: None })
+        .max_iters(50)
+        .cancel_token(token.clone());
+    let out = api::solve(&request).unwrap();
+    assert_eq!(out.status, SolveStatus::Cancelled);
+    assert_eq!(out.report.iterations, 0);
+    // un-cancelled token lets the same request run
+    token.store(false, Ordering::Relaxed);
+    let out = api::solve(&request).unwrap();
+    assert_eq!(out.status, SolveStatus::Done);
+    assert!(out.report.iterations > 0);
+}
+
+#[test]
+fn observer_streams_exactly_the_records_of_the_final_trace() {
+    // adaptive from m=1 on a decaying spectrum: several proposals get
+    // rejected (sketch doublings) — those must NOT be streamed; the
+    // observer sees precisely the accepted records that form the trace.
+    let prob = decay_problem(256, 32, 1e-2, 17);
+    let seen: Arc<Mutex<Vec<IterRecord>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = seen.clone();
+    let svc = SolveService::start(1, RouterPolicy::default());
+    let request = SolveRequest::new(prob)
+        .method(MethodSpec::AdaptivePcg { sketch: SketchKind::Sjlt { s: 1 } })
+        .max_iters(60)
+        .rel_tol(1e-10)
+        .seed(3)
+        .observe(move |rec| sink.lock().unwrap().push(rec.clone()));
+    svc.submit(JobSpec::new(0, request));
+    let out = svc.next_result().unwrap().outcome.unwrap();
+    svc.shutdown();
+
+    assert!(out.report.sketch_doublings > 0, "test needs rejected proposals to be meaningful");
+    let seen = seen.lock().unwrap();
+    assert_eq!(seen.len(), out.report.trace.len());
+    assert_eq!(seen.len(), out.report.iterations + 1);
+    for (got, want) in seen.iter().zip(&out.report.trace) {
+        assert_eq!(got.t, want.t);
+        assert_eq!(got.m, want.m);
+        assert_eq!(got.delta_tilde.to_bits(), want.delta_tilde.to_bits());
+        assert_eq!(got.secs.to_bits(), want.secs.to_bits());
+        assert_eq!(got.delta_rel.to_bits(), want.delta_rel.to_bits());
+    }
+}
+
+#[test]
+fn unrouted_requests_are_routed_by_the_service_but_rejected_by_solve() {
+    let prob = toy_problem(96, 16, 0.5, 23);
+    // direct api::solve refuses to guess
+    let unrouted = SolveRequest::new(prob.clone()).max_iters(40);
+    assert!(api::solve(&unrouted).is_err());
+    // the service routes it (tiny problem → direct)
+    let svc = SolveService::start(1, RouterPolicy::default());
+    svc.submit(JobSpec::new(0, unrouted));
+    let out = svc.next_result().unwrap().outcome.unwrap();
+    assert_eq!(out.report.method, "direct");
+    svc.shutdown();
+}

@@ -3,6 +3,7 @@
 //! experiments).
 
 use sketchsolve::adaptive::AdaptiveConfig;
+use sketchsolve::api::SolveRequest;
 use sketchsolve::coordinator::{JobSpec, MultiRhsSolver, RouterPolicy, SolveService};
 use sketchsolve::data::proxies::{proxy_spec, ProxyName};
 use sketchsolve::data::synthetic::SyntheticSpec;
@@ -40,20 +41,17 @@ fn service_handles_mixed_workload() {
         .enumerate()
     {
         let ds = SyntheticSpec::paper_profile(n, d).build(id as u64);
-        svc.submit(JobSpec {
-            id: id as u64,
-            problem: Arc::new(ds.problem(nu)),
-            route_override: None,
-            t_max: 80,
-            tol: 1e-8,
-            seed: id as u64,
-        });
+        let request = SolveRequest::new(Arc::new(ds.problem(nu)))
+            .max_iters(80)
+            .rel_tol(1e-8)
+            .seed(id as u64);
+        svc.submit(JobSpec::new(id as u64, request));
         expected += 1;
     }
     let mut ok = 0;
     for _ in 0..expected {
         let r = svc.next_result().unwrap();
-        let rep = r.report.expect("job must succeed");
+        let rep = r.outcome.expect("job must succeed").report;
         // every job converged in the decrement measure (direct has none)
         if rep.method != "direct" {
             assert!(

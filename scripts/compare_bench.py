@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Diff BENCH_micro.json thread-sweep medians against a committed baseline.
+
+The micro bench (`cargo bench --bench micro`) writes BENCH_micro.json with
+records of the form {op, threads, median_s, speedup_vs_1t}. This gate
+compares the medians of the current run against a committed baseline and
+fails (exit 1) when any shared (op, threads) cell is more than
+--threshold (default 15%) slower. A missing baseline is not an error —
+the gate reports "nothing to compare" and exits 0, so CI can invoke it
+unconditionally and it only bites once a baseline is committed (e.g. as
+benchmarks/BENCH_micro.baseline.json from a trusted runner).
+
+Usage:
+  scripts/compare_bench.py [--baseline benchmarks/BENCH_micro.baseline.json]
+                           [--current BENCH_micro.json] [--threshold 0.15]
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+
+
+def load_records(path):
+    """Index a BENCH_micro.json document as {(op, threads): median_s}."""
+    with open(path) as f:
+        doc = json.load(f)
+    records = {}
+    for rec in doc.get("records", []):
+        op = rec.get("op")
+        threads = rec.get("threads")
+        median = rec.get("median_s")
+        if op is None or threads is None or median is None:
+            continue
+        if not isinstance(median, (int, float)) or not math.isfinite(median) or median <= 0:
+            continue  # skip degenerate cells (e.g. NaN speedup artifacts)
+        records[(str(op), int(threads))] = float(median)
+    return records
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--baseline", default="benchmarks/BENCH_micro.baseline.json")
+    parser.add_argument("--current", default="BENCH_micro.json")
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="maximum tolerated relative slowdown per (op, threads) cell",
+    )
+    args = parser.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to compare (ok)")
+        return 0
+    if not os.path.exists(args.current):
+        print(f"current results {args.current} missing — run the micro bench first", file=sys.stderr)
+        return 1
+
+    try:
+        base = load_records(args.baseline)
+        cur = load_records(args.current)
+    except (json.JSONDecodeError, OSError) as e:
+        print(f"could not load bench records: {e}", file=sys.stderr)
+        return 1
+
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        print("no overlapping (op, threads) records; nothing to compare (ok)")
+        return 0
+
+    regressions = []
+    for key in shared:
+        op, threads = key
+        rel = cur[key] / base[key] - 1.0
+        verdict = "REGRESSION" if rel > args.threshold else "ok"
+        print(f"  {op:<40} t={threads}: base {base[key]:.6f}s  cur {cur[key]:.6f}s  {rel:+7.1%}  {verdict}")
+        if rel > args.threshold:
+            regressions.append((op, threads, rel))
+
+    missing = sorted(set(base) - set(cur))
+    for op, threads in missing:
+        print(f"  note: baseline cell ({op}, t={threads}) absent from current run")
+
+    if regressions:
+        print(
+            f"\nFAIL: {len(regressions)} cell(s) regressed by more than "
+            f"{args.threshold:.0%} vs {args.baseline}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\nOK: {len(shared)} cells within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
