@@ -73,7 +73,7 @@ fn main() {
     for kind in [SketchKind::Sjlt { s: 1 }, SketchKind::Srht, SketchKind::Gaussian] {
         let m = 512;
         let sk = kind.sample(m, n, &mut rng);
-        let st = bench_median(&format!("sketch {} m={m} ({n}x{d})", kind.name()), 1, reps, || sk.apply(&a));
+        let st = bench_median(&format!("sketch {} m={m} ({n}x{d})", kind.name()), 1, reps, || sk.apply_dense(&a));
         println!("{}", st.line());
     }
 
@@ -170,7 +170,7 @@ fn thread_sweep(rng: &mut Rng, reps: usize, flags: &Flags) {
         ),
     ];
     for (name, sk) in &sketches {
-        ops.push((format!("{name} m={m} ({n}x{d})"), Box::new(move || sk.apply(aref))));
+        ops.push((format!("{name} m={m} ({n}x{d})"), Box::new(move || sk.apply_dense(aref))));
     }
 
     let threads: Vec<usize> = vec![1, 2, 4, 8];

@@ -43,7 +43,7 @@ fn build_u(n: usize, d: usize, rng: &mut Rng) -> Matrix {
 fn deviation(u: &Matrix, dvec: &[f64], kind: SketchKind, m: usize, rng: &mut Rng) -> f64 {
     let d = u.cols;
     let sk = kind.sample(m, u.rows, rng);
-    let su = sk.apply(u);
+    let su = sk.apply_dense(u);
     let mut g = sketchsolve::linalg::syrk_t(&su);
     for i in 0..d {
         g.data[i * d + i] -= 1.0;

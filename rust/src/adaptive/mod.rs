@@ -231,7 +231,7 @@ fn build_pre(
     factor_flops: &mut f64,
 ) -> SketchedPreconditioner {
     let sketch = kind.sample(m, prob.n(), rng);
-    *sketch_flops += kind.sketch_cost_flops(m, prob.n(), prob.d());
+    *sketch_flops += kind.sketch_cost_flops_op(m, &prob.a);
     let pre = SketchedPreconditioner::from_sketch(prob, &sketch)
         .expect("H_S is SPD by construction (nu^2 Lambda > 0)");
     *factor_flops += pre.factor_flops;

@@ -44,6 +44,13 @@ pub enum MethodSpec {
     /// (mirroring `AdaptiveConfig`; seed and stop criteria come from the
     /// request itself).
     MultiRhs { sketch: SketchKind, rho: f64, m_init: usize, growth: usize, m_cap: Option<usize> },
+    /// PJRT/AOT-accelerated PCG over the SRHT
+    /// ([`runtime::XlaPcg`](crate::runtime::XlaPcg)). Capability-gated in
+    /// the registry: executable only when compiled `gradient`/`hess_apply`
+    /// /`sketch_gram` artifacts exist for the problem's shape bucket;
+    /// otherwise `solve` returns the typed `Unsupported` error. `m: None`
+    /// walks the available artifact bucket ladder adaptively.
+    XlaPcg { m: Option<usize> },
 }
 
 impl MethodSpec {
@@ -66,6 +73,7 @@ impl MethodSpec {
             MethodSpec::AdaptiveIhs { .. } => "adaptive_ihs",
             MethodSpec::AdaptivePolyak { .. } => "adaptive_polyak",
             MethodSpec::MultiRhs { .. } => "multi_rhs",
+            MethodSpec::XlaPcg { .. } => "xla_pcg",
         }
     }
 
@@ -90,6 +98,7 @@ impl MethodSpec {
             "adaptive_polyak" => {
                 MethodSpec::AdaptivePolyak { sketch, rho: rho.unwrap_or(DEFAULT_FIXED_RHO) }
             }
+            "xla_pcg" | "xlapcg" => MethodSpec::XlaPcg { m },
             "multi_rhs" | "multirhs" => {
                 let defaults = crate::adaptive::AdaptiveConfig::default();
                 MethodSpec::MultiRhs {
@@ -121,6 +130,7 @@ mod tests {
             MethodSpec::AdaptivePcg { sketch: sk },
             MethodSpec::AdaptiveIhs { sketch: sk },
             MethodSpec::AdaptivePolyak { sketch: sk, rho: DEFAULT_FIXED_RHO },
+            MethodSpec::XlaPcg { m: None },
             {
                 let defaults = crate::adaptive::AdaptiveConfig::default();
                 MethodSpec::MultiRhs {

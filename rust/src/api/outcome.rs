@@ -91,6 +91,10 @@ pub enum SolveError {
     InvalidSpec(String),
     /// Numerical failure inside the solver (e.g. Cholesky breakdown).
     Numerical(String),
+    /// The method is registered but not executable in this deployment —
+    /// the capability gate rejected it (e.g. the PJRT `xla_pcg` path when
+    /// no compiled artifacts exist for the problem's shape bucket).
+    Unsupported { method: &'static str, reason: String },
 }
 
 impl std::fmt::Display for SolveError {
@@ -107,6 +111,9 @@ impl std::fmt::Display for SolveError {
             }
             SolveError::InvalidSpec(msg) => write!(f, "invalid request: {msg}"),
             SolveError::Numerical(msg) => write!(f, "numerical failure: {msg}"),
+            SolveError::Unsupported { method, reason } => {
+                write!(f, "method '{method}' is not available here: {reason}")
+            }
         }
     }
 }

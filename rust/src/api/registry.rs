@@ -51,8 +51,9 @@ struct AdaptivePcgEntry;
 struct AdaptiveIhsEntry;
 struct AdaptivePolyakEntry;
 struct MultiRhsEntry;
+struct XlaPcgEntry;
 
-static REGISTRY: [&dyn Solver; 8] = [
+static REGISTRY: [&dyn Solver; 9] = [
     &DirectEntry,
     &CgEntry,
     &PcgFixedEntry,
@@ -61,6 +62,7 @@ static REGISTRY: [&dyn Solver; 8] = [
     &AdaptiveIhsEntry,
     &AdaptivePolyakEntry,
     &MultiRhsEntry,
+    &XlaPcgEntry,
 ];
 
 /// All registered method families (stable order: baselines first).
@@ -153,7 +155,7 @@ fn build_fixed_pre(
     let sketch = kind.sample(m, prob.n(), &mut rng);
     let pre = SketchedPreconditioner::from_sketch(prob, &sketch)
         .map_err(|e| SolveError::Numerical(e.to_string()))?;
-    Ok((pre, kind.sketch_cost_flops(m, prob.n(), prob.d())))
+    Ok((pre, kind.sketch_cost_flops_op(m, &prob.a)))
 }
 
 impl Solver for DirectEntry {
@@ -462,6 +464,78 @@ impl Solver for MultiRhsEntry {
     }
 }
 
+/// The shared PJRT engine behind the `xla_pcg` entry, loaded once per
+/// process from `SKETCHSOLVE_ARTIFACTS` (default `artifacts/`). `None`
+/// when the directory has no compilable manifest — the capability gate.
+fn xla_engine() -> Option<&'static crate::runtime::Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Option<crate::runtime::Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let dir = std::env::var("SKETCHSOLVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            crate::runtime::Engine::load(&dir).ok().filter(|e| !e.artifacts().is_empty())
+        })
+        .as_ref()
+}
+
+impl Solver for XlaPcgEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "xla_pcg",
+            summary: "PJRT/AOT-accelerated SRHT-PCG (needs compiled artifacts)",
+            warm_start: false,
+            traced: false,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::XlaPcg { .. })
+    }
+
+    /// Capability-gated execution: the entry is always *registered* (so
+    /// the CLI/service surface it uniformly), but runs only when the PJRT
+    /// engine compiled artifacts covering this problem's shape bucket.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let m = match spec {
+            MethodSpec::XlaPcg { m } => *m,
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let engine = xla_engine().ok_or_else(|| SolveError::Unsupported {
+            method: "xla_pcg",
+            reason: "no compiled PJRT artifacts (set SKETCHSOLVE_ARTIFACTS or run `make artifacts`)"
+                .into(),
+        })?;
+        let prob = &*req.problem;
+        let xp = crate::runtime::XlaPcg::new(engine);
+        if !xp.supports(prob) {
+            return Err(SolveError::Unsupported {
+                method: "xla_pcg",
+                reason: format!("no artifact bucket for n={} d={}", prob.n(), prob.d()),
+            });
+        }
+        let stop = req.stop;
+        let rep = match m {
+            Some(m) => xp.solve_fixed(prob, m, stop.max_iters, stop.rel_tol, req.seed),
+            None => xp.solve_adaptive(prob, stop.max_iters, stop.rel_tol, req.seed),
+        }
+        .map_err(|e| match e {
+            // a missing bucket (e.g. an explicit m with no compiled Gram
+            // artifact) is a capability miss, not a numerical failure
+            crate::runtime::EngineError::NoArtifact(k) => SolveError::Unsupported {
+                method: "xla_pcg",
+                reason: format!("no compiled artifact for {k}"),
+            },
+            other => SolveError::Numerical(other.to_string()),
+        })?;
+        let ctx = req.ctx();
+        for rec in &rep.trace {
+            ctx.emit(rec);
+        }
+        Ok(SolveOutcome::single(SolveStatus::Done, rep))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -478,6 +552,7 @@ mod tests {
             MethodSpec::AdaptiveIhs { sketch: sk },
             MethodSpec::AdaptivePolyak { sketch: sk, rho: 0.125 },
             MethodSpec::MultiRhs { sketch: sk, rho: 0.25, m_init: 1, growth: 2, m_cap: None },
+            MethodSpec::XlaPcg { m: None },
         ]
     }
 
@@ -487,7 +562,22 @@ mod tests {
             let entry = lookup(&spec).unwrap_or_else(|| panic!("{spec:?} has no entry"));
             assert_eq!(entry.descriptor().name, spec.name(), "{spec:?}");
         }
-        assert_eq!(registry().len(), 8);
+        assert_eq!(registry().len(), 9);
+    }
+
+    #[test]
+    fn xla_pcg_is_capability_gated() {
+        use crate::problem::Problem;
+        let mut rng = Rng::seed_from(7);
+        let a = Matrix::from_vec(16, 4, (0..64).map(|_| rng.gaussian()).collect());
+        let prob = Arc::new(Problem::ridge(a, vec![1.0; 4], 0.5));
+        let req = SolveRequest::new(prob).method(MethodSpec::XlaPcg { m: None });
+        // this build has no compiled PJRT artifacts: the entry must be
+        // registered (uniform surface) yet refuse with a typed error
+        match solve(&req) {
+            Err(SolveError::Unsupported { method, .. }) => assert_eq!(method, "xla_pcg"),
+            other => panic!("expected capability-gate rejection, got {other:?}"),
+        }
     }
 
     #[test]

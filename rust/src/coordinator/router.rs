@@ -58,8 +58,8 @@ pub fn condition_proxy(prob: &Problem, iters: usize) -> f64 {
     let (smax2, _) = crate::linalg::eig::power_iteration(
         d,
         |v, out| {
-            crate::linalg::matvec_into(&prob.a, v, &mut work);
-            crate::linalg::matvec_t_into(&prob.a, &work, out);
+            prob.a.matvec_into(v, &mut work);
+            prob.a.matvec_t_into(&work, out);
         },
         iters,
         &mut rng,

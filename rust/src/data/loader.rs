@@ -1,9 +1,11 @@
 //! Dataset loading from disk: numeric CSV (features + optional label
-//! column), the escape hatch for running the solvers on *actual* OpenML
-//! downloads when network access exists (the proxies in `proxies.rs` are
-//! the offline default).
+//! column) and SVMLight/libsvm sparse format, the escape hatches for
+//! running the solvers on *actual* OpenML/LIBSVM downloads when network
+//! access exists (the proxies in `proxies.rs` are the offline default).
+//! SVMLight rows parse straight into CSR — a sparse dataset is never
+//! densified on its way into a [`Problem`](crate::problem::Problem).
 
-use crate::linalg::Matrix;
+use crate::linalg::{Csr, Matrix};
 use std::io::BufRead;
 
 /// A loaded tabular dataset.
@@ -12,6 +14,14 @@ pub struct LoadedDataset {
     pub a: Matrix,
     /// Labels (length n) if a label column was designated.
     pub labels: Option<Vec<f64>>,
+}
+
+/// A loaded sparse (SVMLight/libsvm) dataset.
+pub struct LoadedSparseDataset {
+    /// n x d features in CSR form.
+    pub a: Csr,
+    /// Labels, length n (the format always carries them).
+    pub labels: Vec<f64>,
 }
 
 /// Loader errors.
@@ -96,6 +106,75 @@ pub fn parse_csv(text: &str, label_col: Option<usize>) -> Result<LoadedDataset, 
         a.row_mut(i).copy_from_slice(&r);
     }
     Ok(LoadedDataset { a, labels: label_col.map(|_| labels) })
+}
+
+/// Parse SVMLight/libsvm text: one `<label> <idx>:<val> ...` line per
+/// example. Rules honored:
+/// - blank lines and lines starting with `#` are skipped; an inline `#`
+///   starts a trailing comment;
+/// - `qid:<n>` tokens are accepted and ignored;
+/// - indices are 1-based (the format's convention) unless any index 0
+///   appears, in which case the whole file is treated as 0-based — the
+///   same auto-detection scikit-learn applies;
+/// - duplicate indices within a row are summed, ascending order is not
+///   required (rows are normalized while building the CSR).
+pub fn parse_svmlight(text: &str) -> Result<LoadedSparseDataset, LoadError> {
+    let mut labels: Vec<f64> = Vec::new();
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut min_idx = usize::MAX;
+    let mut max_idx = 0usize;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label_tok = toks.next().expect("non-empty line has a first token");
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("label '{label_tok}': {e}") })?;
+        let mut entries: Vec<(usize, f64)> = Vec::new();
+        for tok in toks {
+            if tok.starts_with("qid:") {
+                continue;
+            }
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LoadError::Parse {
+                line: lineno + 1,
+                msg: format!("expected idx:val, got '{tok}'"),
+            })?;
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("index '{idx_s}': {e}") })?;
+            let val: f64 = val_s
+                .parse()
+                .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("value '{val_s}': {e}") })?;
+            min_idx = min_idx.min(idx);
+            max_idx = max_idx.max(idx);
+            entries.push((idx, val));
+        }
+        labels.push(label);
+        rows.push(entries);
+    }
+    if rows.is_empty() {
+        return Err(LoadError::Empty);
+    }
+    // 1-based by convention; 0-based when the file says so
+    let offset = if min_idx == 0 { 0 } else { 1 };
+    let d = if min_idx == usize::MAX { 0 } else { max_idx + 1 - offset };
+    let n = rows.len();
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    for (i, entries) in rows.into_iter().enumerate() {
+        for (idx, val) in entries {
+            triplets.push((i, idx - offset, val));
+        }
+    }
+    Ok(LoadedSparseDataset { a: Csr::from_triplets(n, d, &triplets), labels })
+}
+
+/// Load an SVMLight/libsvm file from disk (emits CSR directly).
+pub fn load_svmlight(path: &str) -> Result<LoadedSparseDataset, LoadError> {
+    let text = std::fs::read_to_string(path)?;
+    parse_svmlight(&text)
 }
 
 /// Load a CSV file from disk.
@@ -188,6 +267,52 @@ f1,f2,label
             assert!(mean.abs() < 1e-12);
             assert!((var - 1.0).abs() < 1e-12);
         }
+    }
+
+    const SVM_SAMPLE: &str = "\
+# libsvm sample (1-based indices)
++1 1:0.5 3:2.0  # trailing comment
+-1 qid:7 2:-1.0
++1 1:1.5 4:0.25
+";
+
+    #[test]
+    fn parses_svmlight_one_based() {
+        let ds = parse_svmlight(SVM_SAMPLE).unwrap();
+        assert_eq!(ds.labels, vec![1.0, -1.0, 1.0]);
+        assert_eq!((ds.a.rows, ds.a.cols), (3, 4));
+        assert_eq!(ds.a.nnz(), 5);
+        let dense = ds.a.to_dense();
+        assert_eq!(dense.at(0, 0), 0.5);
+        assert_eq!(dense.at(0, 2), 2.0);
+        assert_eq!(dense.at(1, 1), -1.0);
+        assert_eq!(dense.at(2, 3), 0.25);
+    }
+
+    #[test]
+    fn parses_svmlight_zero_based_autodetect() {
+        let ds = parse_svmlight("1 0:2.0 2:1.0\n-1 1:3.0\n").unwrap();
+        assert_eq!((ds.a.rows, ds.a.cols), (2, 3));
+        let dense = ds.a.to_dense();
+        assert_eq!(dense.at(0, 0), 2.0);
+        assert_eq!(dense.at(1, 1), 3.0);
+    }
+
+    #[test]
+    fn svmlight_rejects_malformed() {
+        assert!(matches!(parse_svmlight(""), Err(LoadError::Empty)));
+        assert!(matches!(parse_svmlight("abc 1:2\n"), Err(LoadError::Parse { line: 1, .. })));
+        assert!(matches!(parse_svmlight("1 nocolon\n"), Err(LoadError::Parse { line: 1, .. })));
+        assert!(matches!(parse_svmlight("1 x:2.0\n"), Err(LoadError::Parse { line: 1, .. })));
+    }
+
+    #[test]
+    fn svmlight_loads_into_sparse_solver_pipeline() {
+        let ds = parse_svmlight(SVM_SAMPLE).unwrap();
+        let prob = crate::problem::Problem::ridge_from_labels(ds.a, &ds.labels, 1.0);
+        assert!(prob.a.is_sparse());
+        let rep = crate::solvers::DirectSolver::solve(&prob).unwrap();
+        assert!(rep.x.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Dataset layer: synthetic spectra (Figures 1–3), real-dataset proxies
-//! (Figures 4–9) and the random-features map used by the WESAD pipeline.
+//! (Figures 4–9), sparse synthetic generation and SVMLight loading for the
+//! CSR data path, and the random-features map used by the WESAD pipeline.
 
 pub mod loader;
 pub mod proxies;
 pub mod random_features;
 pub mod synthetic;
 
+pub use loader::{load_csv, load_svmlight, parse_csv, parse_svmlight, LoadedSparseDataset};
 pub use proxies::{proxy_spec, ProxyName};
-pub use synthetic::{Dataset, SyntheticSpec};
+pub use synthetic::{Dataset, SparseDataset, SparseSyntheticSpec, SyntheticSpec};

@@ -14,6 +14,10 @@
 //!   `SolveRequest`s (method spec, stop criteria, warm start, budget,
 //!   streaming progress) dispatched through a self-describing solver
 //!   registry. Every consumer below flows through `api::solve`.
+//! - **L3 data (`linalg::DataOp`)**: the operator-generic data layer —
+//!   dense, CSR-sparse and implicit column-scaled matrices are
+//!   first-class, so sketches apply at `O(nnz)` where the math allows and
+//!   SVMLight datasets load without densification.
 //! - **L3 (this crate)**: solver coordinator — adaptive controller,
 //!   request batching for multi-RHS (multiclass) problems, routing, metrics.
 //! - **L3 execution (`par`)**: a zero-dependency scoped-thread parallel

@@ -1,16 +1,22 @@
-//! Dense linear algebra substrate.
+//! Linear algebra substrate.
 //!
 //! Everything the solvers need, built from scratch for this offline image:
-//! row-major matrices, blocked GEMM/SYRK, Cholesky + triangular solves,
-//! the fast Walsh–Hadamard transform, and symmetric eigenvalue tools.
+//! row-major dense matrices, CSR sparse matrices, the [`DataOp`] operator
+//! layer that lets the rest of the stack stay format-agnostic, blocked
+//! GEMM/SYRK, Cholesky + triangular solves, the fast Walsh–Hadamard
+//! transform, and symmetric eigenvalue tools.
 
 pub mod cholesky;
 pub mod eig;
 pub mod fwht;
 pub mod gemm;
 pub mod matrix;
+pub mod op;
+pub mod sparse;
 
 pub use cholesky::{Cholesky, CholeskyError};
 pub use fwht::{fwht_rows, fwht_vec, hadamard_rows_normalized, next_pow2};
 pub use gemm::{matmul, matmul_acc, matmul_into, matmul_naive, matvec, matvec_into, matvec_t, matvec_t_into, syrk_t};
 pub use matrix::{axpy, copy, dot, norm2, scal, sub, Matrix};
+pub use op::{dense_row_gram, DataOp};
+pub use sparse::Csr;

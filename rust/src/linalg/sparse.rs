@@ -1,0 +1,529 @@
+//! Compressed sparse row (CSR) matrices.
+//!
+//! The sparse half of the [`DataOp`](crate::linalg::DataOp) data layer:
+//! real-world regression data (libsvm/SVMLight dumps, one-hot encodings,
+//! n-gram features) has `nnz(A) ≪ nd`, and the paper's SJLT cost pitch
+//! `O(s · nnz(A))` is only realizable when the data side can stay sparse.
+//! All kernels run on the [`crate::par`] layer with the same determinism
+//! contract as the dense GEMMs: contiguous output partitions, per-element
+//! accumulation in the sequential order, bit-identical results at any
+//! thread count.
+
+use super::matrix::Matrix;
+use crate::par;
+use crate::par::PAR_MIN_FLOPS;
+
+/// A `rows x cols` sparse matrix in CSR layout. Column indices are strictly
+/// ascending within each row; explicit zeros are permitted but the
+/// constructors never produce them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, length `rows + 1`; row `i` occupies
+    /// `indptr[i]..indptr[i+1]` of `indices`/`values`.
+    pub indptr: Vec<usize>,
+    /// Column indices (u32: the data layer caps d below 2^32).
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from raw CSR arrays (validated).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Csr {
+        assert_eq!(indptr.len(), rows + 1, "csr: indptr length");
+        assert_eq!(indices.len(), values.len(), "csr: indices/values length");
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len(), "csr: indptr tail");
+        for i in 0..rows {
+            assert!(indptr[i] <= indptr[i + 1], "csr: indptr must be non-decreasing");
+            let seg = &indices[indptr[i]..indptr[i + 1]];
+            for w in seg.windows(2) {
+                assert!(w[0] < w[1], "csr: row {i} columns must be strictly ascending");
+            }
+            if let Some(&last) = seg.last() {
+                assert!((last as usize) < cols, "csr: column index out of range in row {i}");
+            }
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from (row, col, value) triplets. Duplicates are summed; exact
+    /// zeros (including annihilated duplicates) are dropped.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Csr {
+        let mut trips: Vec<(usize, usize, f64)> = triplets.to_vec();
+        trips.sort_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(trips.len());
+        let mut values: Vec<f64> = Vec::with_capacity(trips.len());
+        let mut k = 0usize;
+        for r in 0..rows {
+            while k < trips.len() && trips[k].0 == r {
+                let c = trips[k].1;
+                assert!(c < cols, "csr: column index {c} out of range");
+                let mut v = trips[k].2;
+                k += 1;
+                while k < trips.len() && trips[k].0 == r && trips[k].1 == c {
+                    v += trips[k].2;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr[r + 1] = indices.len();
+        }
+        assert_eq!(k, trips.len(), "csr: triplet row index out of range");
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Compress a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &Matrix) -> Csr {
+        let mut indptr = vec![0usize; a.rows + 1];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..a.rows {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr[i + 1] = indices.len();
+        }
+        Csr { rows: a.rows, cols: a.cols, indptr, indices, values }
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of stored entries: `nnz / (rows * cols)`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Borrow row `i` as (column indices, values).
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Materialize as a dense matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cis, vs) = self.row(i);
+            let orow = out.row_mut(i);
+            for (ci, v) in cis.iter().zip(vs) {
+                orow[*ci as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Transpose in O(nnz) by counting sort; rows of the result keep the
+    /// strictly-ascending column invariant.
+    pub fn transpose(&self) -> Csr {
+        let mut indptr = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            indptr[j + 1] += indptr[j];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        for i in 0..self.rows {
+            let (cis, vs) = self.row(i);
+            for (ci, v) in cis.iter().zip(vs) {
+                let pos = cursor[*ci as usize];
+                cursor[*ci as usize] += 1;
+                indices[pos] = i as u32;
+                values[pos] = *v;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Scale row `i`'s values by `s[i]` in place (used by the implicit
+    /// `Λ^{-1/2} A^T` dualization).
+    pub fn scale_rows(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let (start, end) = (self.indptr[i], self.indptr[i + 1]);
+            let si = s[i];
+            for v in &mut self.values[start..end] {
+                *v *= si;
+            }
+        }
+    }
+
+    /// Sequential dot of row `i` with dense `x`.
+    #[inline]
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let (cis, vs) = self.row(i);
+        let mut s = 0.0;
+        for (ci, v) in cis.iter().zip(vs) {
+            s += v * x[*ci as usize];
+        }
+        s
+    }
+
+    /// `y = A x`. Rows are partitioned over the thread budget with
+    /// nnz-balanced boundaries (structure-only, so the partition never
+    /// depends on the budget's effect on values).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        if self.rows == 0 {
+            return;
+        }
+        let parts = if 2.0 * self.nnz() as f64 < PAR_MIN_FLOPS { 1 } else { par::parts_for(self.rows, 64) };
+        if parts == 1 {
+            for (i, yi) in y.iter_mut().enumerate() {
+                *yi = self.row_dot(i, x);
+            }
+            return;
+        }
+        let bounds =
+            par::weighted_boundaries(self.rows, parts, |i| (self.indptr[i + 1] - self.indptr[i] + 1) as f64);
+        par::parallel_chunks_mut(y, 1, &bounds, |r0, chunk| {
+            for (t, yi) in chunk.iter_mut().enumerate() {
+                *yi = self.row_dot(r0 + t, x);
+            }
+        });
+    }
+
+    /// `y = A^T x` without forming the transpose: an ordered reduction over
+    /// fixed 256-row chunks, mirroring the dense `matvec_t_into` semantics
+    /// (partials combined in ascending chunk order — identical at any
+    /// thread count).
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        if self.rows == 0 || self.cols == 0 {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            return;
+        }
+        if 2.0 * self.nnz() as f64 < PAR_MIN_FLOPS {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..self.rows {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let (cis, vs) = self.row(i);
+                for (ci, v) in cis.iter().zip(vs) {
+                    y[*ci as usize] += xi * v;
+                }
+            }
+            return;
+        }
+        const GRAIN: usize = 256;
+        let acc = par::parallel_reduce(
+            self.rows,
+            GRAIN,
+            |r| {
+                let mut part = vec![0.0; self.cols];
+                for i in r {
+                    let xi = x[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let (cis, vs) = self.row(i);
+                    for (ci, v) in cis.iter().zip(vs) {
+                        part[*ci as usize] += xi * v;
+                    }
+                }
+                part
+            },
+            |mut p, q| {
+                for (u, v) in p.iter_mut().zip(&q) {
+                    *u += v;
+                }
+                p
+            },
+        )
+        .expect("csr matvec_t: nonempty reduction");
+        y.copy_from_slice(&acc);
+    }
+
+    /// `C = A P` for a dense `cols x c` block `P` (overwrites `C`,
+    /// `rows x c`). This is the block-PCG `A P` sweep; output rows are
+    /// independent, so the partition is by rows with nnz weights.
+    pub fn matmat_into(&self, p: &Matrix, out: &mut Matrix) {
+        assert_eq!(p.rows, self.cols, "csr matmat: inner dims");
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, p.cols);
+        let c = p.cols;
+        if self.rows == 0 || c == 0 {
+            return;
+        }
+        let flops = 2.0 * self.nnz() as f64 * c as f64;
+        let parts = if flops < PAR_MIN_FLOPS { 1 } else { par::parts_for(self.rows, 8) };
+        let bounds = if parts == 1 {
+            vec![0, self.rows]
+        } else {
+            par::weighted_boundaries(self.rows, parts, |i| (self.indptr[i + 1] - self.indptr[i] + 1) as f64)
+        };
+        par::parallel_chunks_mut(&mut out.data, c, &bounds, |r0, chunk| {
+            for (li, orow) in chunk.chunks_mut(c).enumerate() {
+                orow.iter_mut().for_each(|v| *v = 0.0);
+                let (cis, vs) = self.row(r0 + li);
+                for (ci, v) in cis.iter().zip(vs) {
+                    let prow = p.row(*ci as usize);
+                    for (o, pv) in orow.iter_mut().zip(prow) {
+                        *o += v * pv;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Gram matrix `G = A^T A` (`cols x cols`), owner-computes over the
+    /// rows of `G` via the transposed structure: worker owning row `j`
+    /// accumulates `a_ij * a_ik` over `i ∈ col(j)` in ascending `i` order.
+    /// Exactly symmetric (the (j,k) and (k,j) sums run over the same `i`
+    /// set in the same order) and bit-identical at any thread count.
+    pub fn gram(&self) -> Matrix {
+        let d = self.cols;
+        let mut g = Matrix::zeros(d, d);
+        if d == 0 || self.nnz() == 0 {
+            return g;
+        }
+        let at = self.transpose();
+        // cost of row j of G is sum of nnz(row i) over i in col(j); the
+        // per-row nnz of A^T is a cheap structural proxy for balance
+        let flops: f64 = (0..self.rows)
+            .map(|i| {
+                let k = (self.indptr[i + 1] - self.indptr[i]) as f64;
+                k * k
+            })
+            .sum();
+        let parts = if 2.0 * flops < PAR_MIN_FLOPS { 1 } else { par::parts_for(d, 4) };
+        let bounds = if parts == 1 {
+            vec![0, d]
+        } else {
+            par::weighted_boundaries(d, parts, |j| (at.indptr[j + 1] - at.indptr[j] + 1) as f64)
+        };
+        par::parallel_chunks_mut(&mut g.data, d, &bounds, |j0, chunk| {
+            for (lj, grow) in chunk.chunks_mut(d).enumerate() {
+                let (ris, rvs) = at.row(j0 + lj);
+                for (ri, rv) in ris.iter().zip(rvs) {
+                    let (cis, cvs) = self.row(*ri as usize);
+                    for (ci, cv) in cis.iter().zip(cvs) {
+                        grow[*ci as usize] += rv * cv;
+                    }
+                }
+            }
+        });
+        g
+    }
+
+    /// Row Gram `W = A D A^T` (`rows x rows`) with `D = diag(weights)`
+    /// (`None` = identity). Upper triangle of sparse-sparse merge dots,
+    /// mirrored; triangular-weight partition like the dense SYRK.
+    pub fn gram_rows(&self, weights: Option<&[f64]>) -> Matrix {
+        let m = self.rows;
+        let mut w = Matrix::zeros(m, m);
+        if m == 0 {
+            return w;
+        }
+        if let Some(ws) = weights {
+            assert_eq!(ws.len(), self.cols);
+        }
+        let avg = self.nnz() as f64 / m.max(1) as f64;
+        let flops = (m as f64) * (m as f64) / 2.0 * avg;
+        let parts = if 2.0 * flops < PAR_MIN_FLOPS { 1 } else { par::parts_for(m, 4) };
+        let bounds = par::weighted_boundaries(m, parts.max(1), |i| (m - i) as f64);
+        par::parallel_chunks_mut(&mut w.data, m, &bounds, |i0, chunk| {
+            for (li, wrow) in chunk.chunks_mut(m).enumerate() {
+                let i = i0 + li;
+                for (j, slot) in wrow.iter_mut().enumerate().skip(i) {
+                    *slot = self.sparse_row_dot(i, j, weights);
+                }
+            }
+        });
+        for i in 0..m {
+            for j in 0..i {
+                w.data[i * m + j] = w.data[j * m + i];
+            }
+        }
+        w
+    }
+
+    /// Merge-dot of rows `i` and `j`, optionally weighted per column.
+    fn sparse_row_dot(&self, i: usize, j: usize, weights: Option<&[f64]>) -> f64 {
+        let (ci, vi) = self.row(i);
+        let (cj, vj) = self.row(j);
+        let (mut p, mut q) = (0usize, 0usize);
+        let mut s = 0.0;
+        while p < ci.len() && q < cj.len() {
+            match ci[p].cmp(&cj[q]) {
+                std::cmp::Ordering::Less => p += 1,
+                std::cmp::Ordering::Greater => q += 1,
+                std::cmp::Ordering::Equal => {
+                    let prod = vi[p] * vj[q];
+                    s += match weights {
+                        Some(ws) => prod * ws[ci[p] as usize],
+                        None => prod,
+                    };
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matvec, matvec_t, syrk_t};
+    use crate::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, n: usize, d: usize, per_row: usize) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for c in rng.sample_without_replacement(per_row.min(d), d) {
+                trips.push((i, c, rng.gaussian()));
+            }
+        }
+        Csr::from_triplets(n, d, &trips)
+    }
+
+    #[test]
+    fn triplets_roundtrip_and_dedup() {
+        let c = Csr::from_triplets(3, 4, &[(0, 1, 2.0), (2, 3, 1.0), (0, 1, 3.0), (1, 0, -1.0), (2, 0, 0.0)]);
+        assert_eq!(c.nnz(), 3); // duplicate summed, exact zero dropped
+        let dense = c.to_dense();
+        assert_eq!(dense.at(0, 1), 5.0);
+        assert_eq!(dense.at(1, 0), -1.0);
+        assert_eq!(dense.at(2, 3), 1.0);
+        assert_eq!(Csr::from_dense(&dense), c);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let mut rng = Rng::seed_from(301);
+        let c = random_sparse(&mut rng, 17, 9, 3);
+        let t = c.transpose();
+        assert_eq!(t.to_dense(), c.to_dense().transpose());
+        assert_eq!(t.transpose(), c);
+    }
+
+    #[test]
+    fn matvec_and_matvec_t_match_dense() {
+        let mut rng = Rng::seed_from(303);
+        let c = random_sparse(&mut rng, 40, 13, 4);
+        let dense = c.to_dense();
+        let x = rng.gaussian_vec(13);
+        let z = rng.gaussian_vec(40);
+        let mut y = vec![0.0; 40];
+        c.matvec_into(&x, &mut y);
+        let yd = matvec(&dense, &x);
+        for i in 0..40 {
+            assert!((y[i] - yd[i]).abs() < 1e-12);
+        }
+        let mut w = vec![0.0; 13];
+        c.matvec_t_into(&z, &mut w);
+        let wd = matvec_t(&dense, &z);
+        for j in 0..13 {
+            assert!((w[j] - wd[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmat_and_gram_match_dense() {
+        let mut rng = Rng::seed_from(305);
+        let c = random_sparse(&mut rng, 30, 10, 3);
+        let dense = c.to_dense();
+        let p = Matrix::from_vec(10, 4, (0..40).map(|_| rng.gaussian()).collect());
+        let mut out = Matrix::zeros(30, 4);
+        c.matmat_into(&p, &mut out);
+        assert!(out.max_abs_diff(&matmul(&dense, &p)) < 1e-12);
+        let g = c.gram();
+        assert!(g.max_abs_diff(&syrk_t(&dense)) < 1e-12);
+        // exact symmetry, not just approximate
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn gram_rows_weighted_matches_dense() {
+        let mut rng = Rng::seed_from(307);
+        let c = random_sparse(&mut rng, 12, 8, 3);
+        let dense = c.to_dense();
+        let w: Vec<f64> = (0..8).map(|_| 0.5 + rng.uniform()).collect();
+        let got = c.gram_rows(Some(&w));
+        // reference: scale columns by sqrt(w), then row Gram
+        let mut scaled = dense.clone();
+        for i in 0..12 {
+            for j in 0..8 {
+                let v = scaled.at(i, j) * w[j].sqrt();
+                scaled.set(i, j, v);
+            }
+        }
+        let rf = matmul(&scaled, &scaled.transpose());
+        assert!(got.max_abs_diff(&rf) < 1e-10);
+        let unweighted = c.gram_rows(None);
+        let rf2 = matmul(&dense, &dense.transpose());
+        assert!(unweighted.max_abs_diff(&rf2) < 1e-10);
+    }
+
+    #[test]
+    fn kernels_bitwise_identical_across_thread_counts() {
+        // nnz = 2.1M: 2·nnz clears PAR_MIN_FLOPS, so matvec/matvec_t/
+        // matmat all actually partition (gram clears its gate much earlier)
+        let mut rng = Rng::seed_from(309);
+        let c = random_sparse(&mut rng, 8192, 256, 256);
+        let x = rng.gaussian_vec(256);
+        let z = rng.gaussian_vec(8192);
+        let p = Matrix::from_vec(256, 8, (0..256 * 8).map(|_| rng.gaussian()).collect());
+        let run = |threads: usize| {
+            crate::par::with_threads(threads, || {
+                let mut y = vec![0.0; 8192];
+                c.matvec_into(&x, &mut y);
+                let mut w = vec![0.0; 256];
+                c.matvec_t_into(&z, &mut w);
+                let mut o = Matrix::zeros(8192, 8);
+                c.matmat_into(&p, &mut o);
+                (y, w, o.data, c.gram().data)
+            })
+        };
+        let base = run(1);
+        for t in [2usize, 4] {
+            assert_eq!(base, run(t), "csr kernels differ at {t} threads");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let c = Csr::from_triplets(0, 5, &[]);
+        assert_eq!(c.nnz(), 0);
+        let mut y: Vec<f64> = vec![];
+        c.matvec_into(&[0.0; 5], &mut y);
+        let c2 = Csr::from_triplets(3, 2, &[]);
+        assert_eq!(c2.density(), 0.0);
+        let g = c2.gram();
+        assert_eq!(g.data, vec![0.0; 4]);
+    }
+}

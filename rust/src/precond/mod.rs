@@ -11,7 +11,7 @@
 //! The factorization is refreshed whenever the adaptive controller doubles
 //! the sketch size and samples a fresh embedding.
 
-use crate::linalg::{matvec_into, matvec_t_into, syrk_t, Cholesky, CholeskyError, Matrix};
+use crate::linalg::{dense_row_gram, matvec_into, matvec_t_into, syrk_t, Cholesky, CholeskyError, Matrix};
 use crate::problem::Problem;
 use crate::sketch::Sketch;
 
@@ -46,9 +46,9 @@ impl SketchedPreconditioner {
     /// regularization. Chooses the primal or Woodbury path by m vs d.
     ///
     /// Both formations run on the parallel layer: the primal Gram goes
-    /// through the row-partitioned `syrk_t`, and the Woodbury `W_S` is
-    /// chunked here — either way the factorized operator is bit-identical
-    /// at any thread count.
+    /// through the row-partitioned `syrk_t`, and the Woodbury `W_S` through
+    /// the weighted row Gram of the `SA·Λ^{-1/2}` view — either way the
+    /// factorized operator is bit-identical at any thread count.
     pub fn build(sa: Matrix, lambda: &[f64], nu: f64) -> Result<Self, CholeskyError> {
         let m = sa.rows;
         let d = sa.cols;
@@ -64,42 +64,14 @@ impl SketchedPreconditioner {
             let flops = (m * d * d) as f64 + (d * d * d) as f64 / 3.0;
             Ok(SketchedPreconditioner { m, inner: Inner::Primal { chol }, factor_flops: flops })
         } else {
-            // W_S = SA Λ^{-1} (SA)^T + ν^2 I_m
+            // W_S = SA Λ^{-1} (SA)^T + ν^2 I_m: the weighted row Gram of
+            // the implicit `SA · Λ^{-1/2}` view (the same kernel
+            // `DataOp::ColScaled::gram_rows` dispatches to), weighted by
+            // Λ^{-1} directly — no rescaled copy of SA, and no sqrt/square
+            // rounding round-trip. Upper triangle with flop-balanced
+            // partition, mirrored.
             let lam_inv: Vec<f64> = lambda.iter().map(|&l| 1.0 / l).collect();
-            // scale columns of SA by lam_inv^{1/2} then SYRK on rows:
-            // W = (SA Λ^{-1/2})(SA Λ^{-1/2})^T
-            let mut scaled = sa.clone();
-            for r in 0..m {
-                let row = scaled.row_mut(r);
-                for j in 0..d {
-                    row[j] *= lam_inv[j].sqrt();
-                }
-            }
-            // W[i][j] = <scaled_i, scaled_j>: upper-triangle rows of W are
-            // partitioned over the thread budget with flop-balanced
-            // (triangular-weight) boundaries, then mirrored — each entry is
-            // one dot product, so the result is identical at any partition
-            let mut w = Matrix::zeros(m, m);
-            let parts = if (m as f64) * (m as f64) * (d as f64) < crate::par::PAR_MIN_FLOPS {
-                1
-            } else {
-                crate::par::parts_for(m, 8)
-            };
-            let bounds = crate::par::weighted_boundaries(m, parts, |i| (m - i) as f64);
-            crate::par::parallel_chunks_mut(&mut w.data, m, &bounds, |i0, chunk| {
-                let rows_here = chunk.len() / m;
-                for li in 0..rows_here {
-                    let i = i0 + li;
-                    for j in i..m {
-                        chunk[li * m + j] = crate::linalg::dot(scaled.row(i), scaled.row(j));
-                    }
-                }
-            });
-            for i in 0..m {
-                for j in 0..i {
-                    w.data[i * m + j] = w.data[j * m + i];
-                }
-            }
+            let mut w = dense_row_gram(&sa, Some(&lam_inv));
             for i in 0..m {
                 w.data[i * m + i] += nu2;
             }
@@ -114,6 +86,8 @@ impl SketchedPreconditioner {
     }
 
     /// Convenience: sample-free build directly from a problem + sketch.
+    /// `sketch.apply` dispatches on the problem's data format (dense GEMM,
+    /// nnz-proportional CSR kernels, or the column-scaled view).
     pub fn from_sketch(problem: &Problem, sketch: &Sketch) -> Result<Self, CholeskyError> {
         let sa = sketch.apply(&problem.a);
         Self::build(sa, &problem.lambda, problem.nu)

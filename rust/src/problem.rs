@@ -1,17 +1,20 @@
 //! The convex quadratic program of eq. (1.1):
 //! `x* = argmin_x 1/2 <x, Hx> - b^T x` with `H = A^T A + nu^2 * Lambda`.
 
-use crate::linalg::{axpy, dot, matvec_into, matvec_t_into, Matrix};
+use crate::linalg::{dot, DataOp};
 
 /// A regularized least-squares / convex quadratic problem instance.
 ///
 /// `H` is never materialized: the solvers only need `H v` products
 /// (two matvecs against `A` plus the diagonal term) and the gradient
-/// `∇f(x) = Hx − b`.
+/// `∇f(x) = Hx − b`. The data side is a [`DataOp`], so dense, CSR-sparse
+/// and implicit column-scaled matrices are all first-class — every
+/// consumer below (sketches, preconditioner, solver loops) dispatches on
+/// the format instead of assuming a dense buffer.
 #[derive(Clone)]
 pub struct Problem {
-    /// Data matrix, n x d (n >= d after dualization if needed).
-    pub a: Matrix,
+    /// Data operator, n x d (n >= d after dualization if needed).
+    pub a: DataOp,
     /// Linear term, length d.
     pub b: Vec<f64>,
     /// Diagonal of Lambda (all entries >= 1 per the paper's assumption).
@@ -23,35 +26,41 @@ pub struct Problem {
 impl Problem {
     /// Ridge-regression style problem: `Lambda = I`, `b` given directly in
     /// the quadratic form (i.e. `b = A^T y` for least-squares data `y`).
-    pub fn ridge(a: Matrix, b: Vec<f64>, nu: f64) -> Problem {
-        assert_eq!(a.cols, b.len(), "b must have length d");
+    /// Accepts anything convertible into a [`DataOp`] (a dense
+    /// [`Matrix`](crate::linalg::Matrix), a [`Csr`](crate::linalg::Csr),
+    /// or an operator built directly).
+    pub fn ridge(a: impl Into<DataOp>, b: Vec<f64>, nu: f64) -> Problem {
+        let a = a.into();
+        assert_eq!(a.cols(), b.len(), "b must have length d");
         assert!(nu > 0.0, "nu must be positive");
-        let d = a.cols;
+        let d = a.cols();
         Problem { a, b, lambda: vec![1.0; d], nu }
     }
 
     /// Ridge problem from raw regression data `(A, y)`: sets `b = A^T y`.
-    pub fn ridge_from_labels(a: Matrix, y: &[f64], nu: f64) -> Problem {
-        assert_eq!(a.rows, y.len());
-        let b = crate::linalg::matvec_t(&a, y);
+    pub fn ridge_from_labels(a: impl Into<DataOp>, y: &[f64], nu: f64) -> Problem {
+        let a = a.into();
+        assert_eq!(a.rows(), y.len());
+        let b = a.matvec_t(y);
         Problem::ridge(a, b, nu)
     }
 
     /// General form with a diagonal `Lambda >= I`.
-    pub fn general(a: Matrix, b: Vec<f64>, lambda: Vec<f64>, nu: f64) -> Problem {
-        assert_eq!(a.cols, b.len());
-        assert_eq!(a.cols, lambda.len());
+    pub fn general(a: impl Into<DataOp>, b: Vec<f64>, lambda: Vec<f64>, nu: f64) -> Problem {
+        let a = a.into();
+        assert_eq!(a.cols(), b.len());
+        assert_eq!(a.cols(), lambda.len());
         assert!(nu > 0.0);
         assert!(lambda.iter().all(|&l| l >= 1.0), "Lambda must dominate I_d");
         Problem { a, b, lambda, nu }
     }
 
     pub fn n(&self) -> usize {
-        self.a.rows
+        self.a.rows()
     }
 
     pub fn d(&self) -> usize {
-        self.a.cols
+        self.a.cols()
     }
 
     /// `out = H v = A^T (A v) + nu^2 * Lambda v`, using `work` (length n)
@@ -60,8 +69,8 @@ impl Problem {
         debug_assert_eq!(v.len(), self.d());
         debug_assert_eq!(out.len(), self.d());
         debug_assert_eq!(work.len(), self.n());
-        matvec_into(&self.a, v, work);
-        matvec_t_into(&self.a, work, out);
+        self.a.matvec_into(v, work);
+        self.a.matvec_t_into(work, out);
         let nu2 = self.nu * self.nu;
         for i in 0..self.d() {
             out[i] += nu2 * self.lambda[i] * v[i];
@@ -87,14 +96,12 @@ impl Problem {
     /// Error measure `delta_x = 1/2 ||x - x*||_H^2` given a reference
     /// solution (computed by the direct solver in experiments).
     pub fn error_to(&self, x: &[f64], x_star: &[f64]) -> f64 {
-        let mut diff: Vec<f64> = x.iter().zip(x_star).map(|(a, b)| a - b).collect();
+        let diff: Vec<f64> = x.iter().zip(x_star).map(|(a, b)| a - b).collect();
         let mut hd = vec![0.0; self.d()];
         let mut work = vec![0.0; self.n()];
         self.hess_apply(&diff, &mut hd, &mut work);
-        let e = 0.5 * dot(&diff, &hd);
-        // guard tiny negative from roundoff
-        axpy(0.0, &hd, &mut diff); // keep borrowck simple; no-op
-        e.max(0.0)
+        // max(0.0) guards a tiny negative from roundoff
+        (0.5 * dot(&diff, &hd)).max(0.0)
     }
 
     /// Exact effective dimension `d_e = tr(A_nu) / ||A_nu||_2` where
@@ -120,21 +127,17 @@ impl Problem {
     /// dual with linear term `A Λ^{-1} b`. This is how the paper assumes
     /// n ≥ d WLOG (and how the OVA-Lung experiment is run).
     pub fn dual(&self) -> DualProblem {
-        let n = self.n();
         let d = self.d();
-        // B = (A Λ^{-1/2})^T is d x n, so the dual data matrix (rows x
-        // cols with rows >= cols semantics) is B with "n_dual" = d rows.
-        let mut bmat = Matrix::zeros(d, n);
-        for i in 0..n {
-            let arow = self.a.row(i);
-            for j in 0..d {
-                bmat.data[j * n + i] = arow[j] / self.lambda[j].sqrt();
-            }
-        }
+        // B = (A Λ^{-1/2})^T is d x n: the transpose of the column-scaled
+        // view. `transposed()` keeps CSR data sparse (O(nnz) counting
+        // transpose + row scaling) and produces the dense layout directly
+        // for dense data — no intermediate rescaled copy of A either way.
+        let scale: Vec<f64> = self.lambda.iter().map(|l| 1.0 / l.sqrt()).collect();
+        let bop = DataOp::col_scaled(self.a.clone(), scale).transposed();
         // dual linear term: A Λ^{-1} b (length n)
         let lam_inv_b: Vec<f64> = (0..d).map(|j| self.b[j] / self.lambda[j]).collect();
-        let dual_b = crate::linalg::matvec(&self.a, &lam_inv_b);
-        let dual = Problem::ridge(bmat, dual_b, self.nu);
+        let dual_b = self.a.matvec(&lam_inv_b);
+        let dual = Problem::ridge(bop, dual_b, self.nu);
         DualProblem { dual, primal_lambda: self.lambda.clone(), primal_b: self.b.clone(), nu: self.nu }
     }
 
@@ -143,7 +146,7 @@ impl Problem {
     /// only in experiments/tests).
     pub fn effective_dimension_exact(&self) -> f64 {
         let d = self.d();
-        let mut g = crate::linalg::syrk_t(&self.a);
+        let mut g = self.a.gram();
         // scale by Lambda^{-1/2} on both sides
         for i in 0..d {
             for j in 0..d {
@@ -175,7 +178,7 @@ impl DualProblem {
     pub fn recover_primal(&self, w: &[f64]) -> Vec<f64> {
         let d = self.primal_lambda.len();
         // (AΛ^{-1/2})^T w has length d; multiply by Λ^{1/2} to undo scaling
-        let bw = crate::linalg::matvec(&self.dual.a, w);
+        let bw = self.dual.a.matvec(w);
         debug_assert_eq!(bw.len(), d);
         let nu2 = self.nu * self.nu;
         (0..d)
@@ -187,7 +190,7 @@ impl DualProblem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul, matvec, syrk_t};
+    use crate::linalg::{matvec, Matrix};
     use crate::rng::Rng;
 
     fn toy(rng: &mut Rng, n: usize, d: usize, nu: f64) -> Problem {
@@ -205,7 +208,7 @@ mod tests {
         let mut work = vec![0.0; 20];
         p.hess_apply(&v, &mut out, &mut work);
         // dense H
-        let mut h = syrk_t(&p.a);
+        let mut h = p.a.gram();
         for i in 0..7 {
             h.data[i * 7 + i] += p.nu * p.nu;
         }
@@ -220,7 +223,7 @@ mod tests {
         let mut rng = Rng::seed_from(33);
         let p = toy(&mut rng, 30, 5, 0.5);
         // solve exactly via dense Cholesky
-        let mut h = syrk_t(&p.a);
+        let mut h = p.a.gram();
         for i in 0..5 {
             h.data[i * 5 + i] += p.nu * p.nu;
         }
@@ -271,7 +274,7 @@ mod tests {
         let mut rng = Rng::seed_from(37);
         let p = toy(&mut rng, 25, 6, 0.4);
         let d = 6;
-        let mut h = syrk_t(&p.a);
+        let mut h = p.a.gram();
         for i in 0..d {
             h.data[i * d + i] += p.nu * p.nu;
         }
@@ -285,6 +288,68 @@ mod tests {
         let hinv_g = ch.solve(&g);
         let nd = 0.5 * dot(&g, &hinv_g);
         assert!((delta - nd).abs() / delta.max(1e-12) < 1e-8);
-        let _ = matmul(&p.a.transpose(), &p.a); // exercise transpose path
+        let at = p.a.transposed(); // exercise operator transpose path
+        assert_eq!((at.rows(), at.cols()), (p.d(), p.n()));
+    }
+
+    #[test]
+    fn sparse_problem_matches_dense_problem() {
+        use crate::linalg::Csr;
+        let mut rng = Rng::seed_from(39);
+        let (n, d) = (24, 8);
+        // sparse pattern: ~3 nnz per row
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for c in rng.sample_without_replacement(3, d) {
+                trips.push((i, c, rng.gaussian()));
+            }
+        }
+        let csr = Csr::from_triplets(n, d, &trips);
+        let y = rng.gaussian_vec(n);
+        let sparse = Problem::ridge_from_labels(csr.clone(), &y, 0.3);
+        let dense = Problem::ridge_from_labels(csr.to_dense(), &y, 0.3);
+        assert_eq!(sparse.b.len(), d);
+        let v = rng.gaussian_vec(d);
+        let (mut o1, mut o2) = (vec![0.0; d], vec![0.0; d]);
+        let (mut w1, mut w2) = (vec![0.0; n], vec![0.0; n]);
+        sparse.hess_apply(&v, &mut o1, &mut w1);
+        dense.hess_apply(&v, &mut o2, &mut w2);
+        for j in 0..d {
+            assert!((o1[j] - o2[j]).abs() < 1e-12);
+        }
+        assert!((sparse.objective(&v) - dense.objective(&v)).abs() < 1e-10);
+        let de_s = sparse.effective_dimension_exact();
+        let de_d = dense.effective_dimension_exact();
+        assert!((de_s - de_d).abs() < 1e-8);
+    }
+
+    #[test]
+    fn dual_stays_sparse_for_sparse_data() {
+        use crate::linalg::Csr;
+        let mut rng = Rng::seed_from(43);
+        let (n, d) = (6, 15); // underdetermined: dualization applies
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for c in rng.sample_without_replacement(4, d) {
+                trips.push((i, c, rng.gaussian()));
+            }
+        }
+        let csr = Csr::from_triplets(n, d, &trips);
+        let b = rng.gaussian_vec(d);
+        let sparse = Problem::ridge(csr.clone(), b.clone(), 0.4);
+        let dense = Problem::ridge(csr.to_dense(), b, 0.4);
+        let ds = sparse.dual();
+        let dd = dense.dual();
+        // the sparse dual keeps CSR storage (no densification)
+        assert!(ds.dual.a.is_sparse());
+        assert!(ds.dual.a.to_dense().max_abs_diff(&dd.dual.a.to_dense()) < 1e-12);
+        // dual solves recover the same primal
+        let exact_s = crate::solvers::DirectSolver::solve(&ds.dual).unwrap();
+        let exact_d = crate::solvers::DirectSolver::solve(&dd.dual).unwrap();
+        let xs = ds.recover_primal(&exact_s.x);
+        let xd = dd.recover_primal(&exact_d.x);
+        for j in 0..d {
+            assert!((xs[j] - xd[j]).abs() < 1e-8, "{} vs {}", xs[j], xd[j]);
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! The PJRT execution engine: artifact registry + compile-once dispatch.
 
+use super::xla;
 use crate::util::json::JsonValue;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -9,6 +9,7 @@
 //! f64 — tolerances documented in python/tests).
 
 mod engine;
+pub(crate) mod xla;
 pub mod xla_path;
 
 pub use engine::{ArtifactEntry, Engine, EngineError};

@@ -1,0 +1,135 @@
+//! Offline stand-in for the `xla`/PJRT bindings.
+//!
+//! The engine layer (`runtime::engine`) is written against the PJRT client
+//! API, but this build environment carries no XLA runtime and the crate is
+//! dependency-free by policy. These types keep the engine compiling and
+//! make the capability story explicit: constructing a client succeeds (so
+//! `Engine::load` on a missing manifest still yields an empty engine and
+//! the native path takes over), while anything that would actually need
+//! the runtime — compiling an HLO module, uploading a buffer, executing —
+//! returns an error. The api registry's `xla_pcg` entry keys its
+//! capability gate off exactly that: no compiled artifacts, no route.
+//!
+//! Swapping in the real bindings is a matter of replacing this module with
+//! the `xla` crate; the engine code does not change.
+
+use std::path::Path;
+
+const UNAVAILABLE: &str = "PJRT runtime not linked in this build (offline xla stub)";
+
+/// Error type mirroring the binding crate's.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(UNAVAILABLE.into())
+}
+
+/// PJRT client handle (stub: constructible, cannot compile or execute).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (PJRT not linked)".into()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Host literal (stub: shape-less placeholder).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// HLO computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_cannot_execute() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        assert!(client.compile(&XlaComputation::from_proto(&HloModuleProto)).is_err());
+        assert!(client.buffer_from_host_buffer(&[1.0], &[1], None).is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -90,8 +90,12 @@ impl<'e> XlaPcg<'e> {
         // --- PCG loop over PJRT matvecs.
         // A, b, Lambda and nu^2 are uploaded ONCE as device buffers; only
         // the d-vector iterate crosses the host boundary per call (§Perf:
-        // this removed the dominant per-iteration H2D copy of A).
-        let a_buf = self.engine.upload_f64(&prob.a.data, &[n, d])?;
+        // this removed the dominant per-iteration H2D copy of A). The AOT
+        // artifacts are dense-layout kernels, so non-dense operators are
+        // densified once at the upload boundary (`dense_view` borrows when
+        // the data is already dense).
+        let a_dense = prob.a.dense_view();
+        let a_buf = self.engine.upload_f64(&a_dense.data, &[n, d])?;
         let b_buf = self.engine.upload_f64(&prob.b, &[d])?;
         let lam_buf = self.engine.upload_f64(&prob.lambda, &[d])?;
         let nu2_buf = self.engine.upload_f64(&nu2, &[1])?;

@@ -5,9 +5,10 @@
 //! sqrt(8 log(16/delta)))^2` per Theorem 5.2 — but the most expensive to
 //! apply: `O(mnd)` flops for a dense data matrix.
 
-use crate::linalg::{matmul, Matrix};
+use crate::linalg::{matmul, Csr, Matrix};
 use crate::par;
 use crate::rng::Rng;
+use crate::sketch::flops;
 
 /// Rows per sampling block. Fixed (never derived from the thread budget) so
 /// the per-block RNG streams — and therefore the sampled S — are identical
@@ -51,7 +52,43 @@ impl GaussianSketch {
     /// `S * A` by dense GEMM.
     pub fn apply(&self, a: &Matrix) -> Matrix {
         assert_eq!(a.rows, self.n(), "apply: A must have n rows");
+        flops::record(2.0 * (self.m() as f64) * (a.rows as f64) * (a.cols as f64));
         matmul(&self.s, a)
+    }
+
+    /// `S * A` over CSR data: `O(m · nnz(A))` — each output row `r`
+    /// accumulates `S[r, i] · A[i, :]` over the stored entries of data row
+    /// `i`, in ascending `i` order (blocked by the nnz structure instead of
+    /// the dense GEMM panels). Output rows are partitioned over the thread
+    /// budget; per-row accumulation is sequential, so the result is
+    /// bit-identical at any thread count.
+    pub fn apply_csr(&self, a: &Csr) -> Matrix {
+        assert_eq!(a.rows, self.n(), "apply: A must have n rows");
+        let (m, n, d) = (self.m(), a.rows, a.cols);
+        let mut out = Matrix::zeros(m, d);
+        if m == 0 || d == 0 {
+            return out;
+        }
+        let work = 2.0 * (m as f64) * (a.nnz() as f64);
+        flops::record(work);
+        let parts = if work < par::PAR_MIN_FLOPS { 1 } else { par::parts_for(m, 4) };
+        let bounds = par::uniform_boundaries(m, parts);
+        par::parallel_chunks_mut(&mut out.data, d, &bounds, |r0, chunk| {
+            for (lr, orow) in chunk.chunks_mut(d).enumerate() {
+                let srow = self.s.row(r0 + lr);
+                for i in 0..n {
+                    let (cis, vs) = a.row(i);
+                    if cis.is_empty() {
+                        continue;
+                    }
+                    let sv = srow[i];
+                    for (ci, av) in cis.iter().zip(vs) {
+                        orow[*ci as usize] += sv * av;
+                    }
+                }
+            }
+        });
+        out
     }
 }
 

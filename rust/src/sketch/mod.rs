@@ -7,9 +7,44 @@
 //!   `O(n d log n)` apply via the FWHT.
 //! - **SJLT** — sparse Johnson–Lindenstrauss / OSNAP with `s` nonzeros per
 //!   column; `O(s nnz(A))` apply.
+//!
+//! Application is format-aware through [`DataOp`]: every family has a
+//! dense kernel and a CSR kernel, and the cost model scales with `nnz(A)`
+//! where the math allows it (SJLT and Gaussian; the SRHT densifies
+//! per-column-block since the Hadamard transform has no sparse shortcut).
 
-use crate::linalg::{fwht_rows, next_pow2, Matrix};
+use crate::linalg::{fwht_rows, next_pow2, DataOp, Matrix};
 use crate::rng::Rng;
+
+/// Flop accounting for sketch application, used by the op-parity suite to
+/// assert that sparse applies scale with `nnz`, not `n·d`. Each `apply`
+/// records the work of the kernel it dispatched to — one add per call, not
+/// per flop, so the counter costs nothing on the hot path. The counter is
+/// thread-local: `apply` records on the calling thread before fanning out,
+/// so concurrently running tests (or service workers) never see each
+/// other's counts.
+pub mod flops {
+    use std::cell::Cell;
+
+    thread_local! {
+        static SKETCH_APPLY: Cell<f64> = Cell::new(0.0);
+    }
+
+    /// Reset this thread's cumulative sketch-apply flop counter.
+    pub fn reset() {
+        SKETCH_APPLY.with(|c| c.set(0.0));
+    }
+
+    /// Flops recorded by sketch `apply` calls on this thread since the
+    /// last [`reset`].
+    pub fn sketch_apply_total() -> f64 {
+        SKETCH_APPLY.with(|c| c.get())
+    }
+
+    pub(crate) fn record(flops: f64) {
+        SKETCH_APPLY.with(|c| c.set(c.get() + flops));
+    }
+}
 
 mod gaussian;
 mod sjlt;
@@ -61,18 +96,32 @@ impl SketchKind {
         }
     }
 
-    /// Flop estimate of forming `S A` for an n x d matrix (the
+    /// Flop estimate of forming `S A` for a dense n x d matrix (the
     /// `C_sketch^{m,n,d}` cost of §4.1.1); used by the complexity
-    /// calculator behind Table 2.
+    /// calculator behind Table 2. Equals
+    /// [`sketch_cost_flops_op`](SketchKind::sketch_cost_flops_op) at
+    /// `nnz = n·d`.
     pub fn sketch_cost_flops(&self, m: usize, n: usize, d: usize) -> f64 {
+        self.sketch_cost_flops_nnz(m, n, d, n * d)
+    }
+
+    /// Format-aware sketch cost: SJLT and Gaussian scale with `nnz(A)`
+    /// (`O(s·nnz)` / `O(m·nnz)`); the SRHT always pays the dense FWHT
+    /// (`O(n' d log n')`) because it densifies per column block.
+    pub fn sketch_cost_flops_nnz(&self, m: usize, n: usize, d: usize, nnz: usize) -> f64 {
         match self {
-            SketchKind::Gaussian => 2.0 * (m * n * d) as f64,
+            SketchKind::Gaussian => 2.0 * (m as f64) * (nnz as f64),
             SketchKind::Srht => {
                 let np = next_pow2(n);
                 (np as f64) * (d as f64) * (np as f64).log2() + (m * d) as f64
             }
-            SketchKind::Sjlt { s } => (*s * n * d) as f64 * 2.0,
+            SketchKind::Sjlt { s } => 2.0 * (*s as f64) * (nnz as f64),
         }
+    }
+
+    /// Sketch cost against a concrete operator.
+    pub fn sketch_cost_flops_op(&self, m: usize, a: &DataOp) -> f64 {
+        self.sketch_cost_flops_nnz(m, a.rows(), a.cols(), a.nnz())
     }
 }
 
@@ -103,8 +152,34 @@ impl Sketch {
         }
     }
 
-    /// Compute `S * A` (`A` is n x d, result m x d).
-    pub fn apply(&self, a: &Matrix) -> Matrix {
+    /// Compute `S * A` (`A` is n x d, result m x d), dispatching on the
+    /// operator format. The CSR kernels never materialize a dense copy of
+    /// `A`; a `ColScaled` view sketches the inner operator and re-scales
+    /// the (small, m x d) result — `S·(A·D) = (S·A)·D`.
+    pub fn apply(&self, a: &DataOp) -> Matrix {
+        match a {
+            DataOp::Dense(m) => self.apply_dense(m),
+            DataOp::CsrSparse(c) => match self {
+                Sketch::Gaussian(s) => s.apply_csr(c),
+                Sketch::Srht(s) => s.apply_csr(c),
+                Sketch::Sjlt(s) => s.apply_csr(c),
+            },
+            DataOp::ColScaled { inner, scale } => {
+                let mut sa = self.apply(inner);
+                for r in 0..sa.rows {
+                    let row = sa.row_mut(r);
+                    for (v, s) in row.iter_mut().zip(scale) {
+                        *v *= s;
+                    }
+                }
+                sa
+            }
+        }
+    }
+
+    /// Dense-path `S * A` (the pre-[`DataOp`] signature, kept for benches
+    /// and tests that hold a bare [`Matrix`]).
+    pub fn apply_dense(&self, a: &Matrix) -> Matrix {
         match self {
             Sketch::Gaussian(s) => s.apply(a),
             Sketch::Srht(s) => s.apply(a),
@@ -116,7 +191,7 @@ impl Sketch {
     /// `S = S * I_n`.
     pub fn to_dense(&self) -> Matrix {
         let eye = Matrix::eye(self.n());
-        self.apply(&eye)
+        self.apply_dense(&eye)
     }
 }
 
@@ -167,7 +242,7 @@ mod tests {
             };
             let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
             let s = kind.sample(m, n, rng);
-            let sa1 = s.apply(&a);
+            let sa1 = s.apply_dense(&a);
             let sd = s.to_dense();
             assert_eq!(sd.rows, m);
             assert_eq!(sd.cols, n);
@@ -214,5 +289,20 @@ mod tests {
         let h = SketchKind::Srht.sketch_cost_flops(m, n, d);
         let j = SketchKind::Sjlt { s: 1 }.sketch_cost_flops(m, n, d);
         assert!(j < h && h < g);
+    }
+
+    #[test]
+    fn sparse_cost_scales_with_nnz() {
+        let (m, n, d) = (256, 65536, 512);
+        let nnz = n * 8; // ~8 nonzeros per row, density 8/d
+        for kind in [SketchKind::Gaussian, SketchKind::Sjlt { s: 2 }] {
+            let dense = kind.sketch_cost_flops(m, n, d);
+            let sparse = kind.sketch_cost_flops_nnz(m, n, d, nnz);
+            assert!((sparse / dense - nnz as f64 / (n * d) as f64).abs() < 1e-12, "{kind:?}");
+        }
+        // SRHT densifies: cost is nnz-independent
+        let s1 = SketchKind::Srht.sketch_cost_flops_nnz(m, n, d, nnz);
+        let s2 = SketchKind::Srht.sketch_cost_flops(m, n, d);
+        assert_eq!(s1, s2);
     }
 }

@@ -9,8 +9,9 @@
 //! trade-off that makes the SRHT the default for dense data.
 
 use super::hadamard_signs;
-use crate::linalg::{next_pow2, Matrix};
+use crate::linalg::{fwht_rows, next_pow2, Csr, Matrix};
 use crate::rng::Rng;
+use crate::sketch::flops;
 
 /// A sampled SRHT embedding.
 pub struct SrhtSketch {
@@ -49,9 +50,58 @@ impl SrhtSketch {
     /// unnormalized transform is `sqrt(n'/m) / sqrt(n') = 1/sqrt(m)`.
     pub fn apply(&self, a: &Matrix) -> Matrix {
         assert_eq!(a.rows, self.n, "apply: A must have n rows");
+        flops::record(self.transform_flops(a.cols));
         let x = hadamard_signs(a, &self.signs); // n_pad x d, unnormalized
         let mut out = x.select_rows(&self.rows);
         out.scale(1.0 / (self.m as f64).sqrt());
+        out
+    }
+
+    /// FWHT + subsample cost for a width-`d` apply (nnz-independent: the
+    /// Hadamard transform has no sparse shortcut).
+    fn transform_flops(&self, d: usize) -> f64 {
+        (self.n_pad as f64) * (d as f64) * (self.n_pad as f64).log2().max(1.0) + (self.m * d) as f64
+    }
+
+    /// `S * A` over CSR data. The FWHT is dense by nature, so the kernel
+    /// **densifies per column block** (`COL_BLOCK` columns at a time,
+    /// `O(n' · COL_BLOCK)` scratch — never a full dense copy of A): scatter
+    /// the block's stored entries with the `E` signs applied, run the same
+    /// per-column butterfly schedule as the dense path, subsample and
+    /// scale. Each column's transform is independent and identical to the
+    /// dense apply's, so results match it bitwise.
+    pub fn apply_csr(&self, a: &Csr) -> Matrix {
+        assert_eq!(a.rows, self.n, "apply: A must have n rows");
+        let d = a.cols;
+        let np = self.n_pad;
+        let mut out = Matrix::zeros(self.m, d);
+        if d == 0 || self.m == 0 {
+            return out;
+        }
+        flops::record(self.transform_flops(d));
+        let scale = 1.0 / (self.m as f64).sqrt();
+        const COL_BLOCK: usize = 128;
+        // CSC view of the block columns: transpose once, walk its rows
+        let at = a.transpose();
+        for j0 in (0..d).step_by(COL_BLOCK) {
+            let w = COL_BLOCK.min(d - j0);
+            let mut block = Matrix::zeros(np, w);
+            for (t, j) in (j0..j0 + w).enumerate() {
+                let (ris, vs) = at.row(j);
+                for (ri, v) in ris.iter().zip(vs) {
+                    let i = *ri as usize;
+                    block.data[i * w + t] = self.signs[i] * v;
+                }
+            }
+            fwht_rows(&mut block);
+            for (k, &ri) in self.rows.iter().enumerate() {
+                let brow = block.row(ri);
+                let orow = &mut out.row_mut(k)[j0..j0 + w];
+                for (o, bv) in orow.iter_mut().zip(brow) {
+                    *o = bv * scale;
+                }
+            }
+        }
         out
     }
 

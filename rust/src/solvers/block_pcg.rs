@@ -9,7 +9,7 @@
 //! of O(nd) per iteration.
 
 use crate::api::{Budget, SolveCtx, SolveStatus};
-use crate::linalg::{matmul_into, Matrix};
+use crate::linalg::Matrix;
 use crate::par;
 use crate::precond::SketchedPreconditioner;
 use crate::problem::Problem;
@@ -60,8 +60,8 @@ impl BlockPcg {
         let stop = ctx.stop;
         let t0 = Instant::now();
         let a = &prob_template.a;
-        let d = a.cols;
-        let n = a.rows;
+        let d = a.cols();
+        let n = a.rows();
         let c = b_cols.cols;
         assert_eq!(b_cols.rows, d);
         let nu2 = prob_template.nu * prob_template.nu;
@@ -81,7 +81,9 @@ impl BlockPcg {
         let mut hp = Matrix::zeros(d, c);
         // §Perf: A^T is iteration-invariant — hoisted out of the sweep (it
         // used to be re-materialized every iteration, one full O(nd) copy).
-        let at = a.transpose();
+        // For CSR data this is the O(nnz) counting transpose, so the
+        // backward sweep stays row-partitioned and nnz-proportional too.
+        let at = a.transposed();
 
         let mut t = 0;
         let mut status = SolveStatus::Done;
@@ -91,9 +93,10 @@ impl BlockPcg {
                 break;
             }
             // HP = A^T (A P) + nu^2 Lambda P — ONE pass over A for all c,
-            // with both GEMMs row-partitioned over the thread budget
-            matmul_into(a, &p, &mut ap);
-            matmul_into(&at, &ap, &mut hp);
+            // with both block products row-partitioned over the thread
+            // budget (dense GEMM or CSR matmat, by the data format)
+            a.matmat_into(&p, &mut ap);
+            at.matmat_into(&ap, &mut hp);
             for i in 0..d {
                 let li = nu2 * lambda[i];
                 let prow = p.row(i);
@@ -213,7 +216,7 @@ fn col_dot(a: &Matrix, b: &Matrix, k: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{syrk_t, Cholesky};
+    use crate::linalg::Cholesky;
     use crate::rng::Rng;
     use crate::sketch::SketchKind;
 
@@ -242,7 +245,7 @@ mod tests {
         let rep = BlockPcg::solve(&prob, &b, &pre, StopRule { max_iters: 60, tol: 1e-14 });
         // direct reference
         let d = prob.d();
-        let mut h = syrk_t(&prob.a);
+        let mut h = prob.a.gram();
         for i in 0..d {
             h.data[i * d + i] += prob.nu * prob.nu;
         }

@@ -3,7 +3,7 @@
 //! against, and the producer of reference solutions `x*` for the error
 //! traces of the figures.
 
-use crate::linalg::{syrk_t, Cholesky, CholeskyError};
+use crate::linalg::{Cholesky, CholeskyError};
 use crate::problem::Problem;
 use crate::solvers::{IterRecord, SolveReport};
 use std::time::Instant;
@@ -37,7 +37,7 @@ impl DirectSolver {
     /// coordinator's RHS batcher relies on this).
     pub fn factor(prob: &Problem) -> Result<Cholesky, CholeskyError> {
         let d = prob.d();
-        let mut h = syrk_t(&prob.a);
+        let mut h = prob.a.gram();
         let nu2 = prob.nu * prob.nu;
         for i in 0..d {
             h.data[i * d + i] += nu2 * prob.lambda[i];

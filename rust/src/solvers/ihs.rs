@@ -174,7 +174,7 @@ mod tests {
         let prob = Problem::ridge(a, b, 0.4);
         let exact = DirectSolver::solve(&prob).unwrap();
         // identity sketch: SA = A
-        let pre = SketchedPreconditioner::build(prob.a.clone(), &prob.lambda, prob.nu).unwrap();
+        let pre = SketchedPreconditioner::build(prob.a.to_dense(), &prob.lambda, prob.nu).unwrap();
         let rho = 0.25;
         let rep = Ihs::solve_fixed(&prob, &pre, rho, StopRule { max_iters: 10, tol: 0.0 }, Some(&exact.x));
         for rec in &rep.trace {

@@ -1,0 +1,190 @@
+//! Dense/sparse operator parity, end to end: the same matrix held as
+//! `DataOp::Dense` and `DataOp::CsrSparse` must produce matching results
+//! through every layer — `hess_apply`, each sketch family's `apply`, and a
+//! full adaptive-PCG solve — and each format must stay bit-identical
+//! across thread counts (extending the `par_determinism` contract to the
+//! sparse path). A flop-counter check asserts the SJLT's CSR apply does
+//! `O(s·nnz)` work, i.e. it never touches a dense copy of A.
+
+use sketchsolve::adaptive::{AdaptiveConfig, AdaptivePcg};
+use sketchsolve::data::SparseSyntheticSpec;
+use sketchsolve::linalg::{Csr, DataOp, Matrix};
+use sketchsolve::par;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::{flops, SketchKind};
+
+const PARITY_TOL: f64 = 1e-10;
+
+/// A deterministic sparse matrix and its dense twin.
+fn twins(n: usize, d: usize, per_row: usize, seed: u64) -> (Csr, Matrix) {
+    let mut rng = Rng::seed_from(seed);
+    let mut trips = Vec::new();
+    for i in 0..n {
+        for c in rng.sample_without_replacement(per_row, d) {
+            trips.push((i, c, rng.gaussian()));
+        }
+    }
+    let csr = Csr::from_triplets(n, d, &trips);
+    let dense = csr.to_dense();
+    (csr, dense)
+}
+
+#[test]
+fn hess_apply_parity_and_thread_determinism() {
+    // nnz and n·d both above the matvec parallel gates (2·nnz ≥ 4e6), so
+    // the thread sweep actually changes the partitions on both formats
+    let (n, d) = (8192usize, 512usize);
+    let (csr, dense) = twins(n, d, 300, 901);
+    let mut rng = Rng::seed_from(902);
+    let b = rng.gaussian_vec(d);
+    let v = rng.gaussian_vec(d);
+    let sparse_prob = Problem::ridge(csr, b.clone(), 0.3);
+    let dense_prob = Problem::ridge(dense, b, 0.3);
+
+    let run = |prob: &Problem, threads: usize| {
+        par::with_threads(threads, || {
+            let mut out = vec![0.0; d];
+            let mut work = vec![0.0; n];
+            prob.hess_apply(&v, &mut out, &mut work);
+            out
+        })
+    };
+    let hs = run(&sparse_prob, 1);
+    let hd = run(&dense_prob, 1);
+    for j in 0..d {
+        assert!((hs[j] - hd[j]).abs() < PARITY_TOL, "hess_apply differs at {j}: {} vs {}", hs[j], hd[j]);
+    }
+    // each format bitwise-stable across thread counts
+    for t in [2usize, 4] {
+        assert_eq!(hs, run(&sparse_prob, t), "sparse hess_apply differs at {t} threads");
+        assert_eq!(hd, run(&dense_prob, t), "dense hess_apply differs at {t} threads");
+    }
+}
+
+#[test]
+fn sketch_apply_parity_all_families_and_threads() {
+    // nnz = 819k puts Gaussian (2·m·nnz) and SJLT s=3 (2·s·nnz) above the
+    // parallel gates, so the thread sweep changes partitions; SJLT s=1
+    // stays under the gate and covers the serial path
+    let (n, d, m) = (4096usize, 256usize, 128usize);
+    let (csr, dense) = twins(n, d, 200, 903);
+    let dense_op = DataOp::Dense(dense);
+    let sparse_op = DataOp::CsrSparse(csr);
+    for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }, SketchKind::Sjlt { s: 3 }] {
+        let apply = |op: &DataOp, threads: usize| {
+            par::with_threads(threads, || {
+                // same seed → identical sampled S for both formats
+                let mut rng = Rng::seed_from(905);
+                kind.sample(m, n, &mut rng).apply(op)
+            })
+        };
+        let sd = apply(&dense_op, 1);
+        let ss = apply(&sparse_op, 1);
+        assert_eq!((ss.rows, ss.cols), (m, d));
+        let diff = sd.max_abs_diff(&ss);
+        assert!(diff < PARITY_TOL, "{kind:?}: dense vs csr apply diff {diff}");
+        for t in [2usize, 4] {
+            assert_eq!(ss.data, apply(&sparse_op, t).data, "{kind:?}: csr apply differs at {t} threads");
+            assert_eq!(sd.data, apply(&dense_op, t).data, "{kind:?}: dense apply differs at {t} threads");
+        }
+    }
+}
+
+#[test]
+fn sjlt_csr_apply_work_scales_with_nnz_not_nd() {
+    // n·d = 2M, nnz = 40960: a dense-path apply would record ~50x more work
+    let (n, d, m, s) = (4096usize, 512usize, 128usize, 2usize);
+    let per_row = 10usize;
+    let (csr, dense) = twins(n, d, per_row, 907);
+    let nnz = csr.nnz();
+    assert_eq!(nnz, n * per_row);
+    let mut rng = Rng::seed_from(908);
+    let sk = SketchKind::Sjlt { s }.sample(m, n, &mut rng);
+
+    flops::reset();
+    let ss = sk.apply(&DataOp::CsrSparse(csr));
+    let sparse_work = flops::sketch_apply_total();
+    let expected_sparse = 2.0 * (s * nnz) as f64;
+    assert_eq!(sparse_work, expected_sparse, "SJLT-on-CSR must record exactly O(s·nnz) work");
+
+    flops::reset();
+    let sd = sk.apply(&DataOp::Dense(dense));
+    let dense_work = flops::sketch_apply_total();
+    let expected_dense = 2.0 * (s * n * d) as f64;
+    assert_eq!(dense_work, expected_dense);
+
+    // the whole point: sparse work is nnz-proportional, far below n·d —
+    // and the results still agree, so no dense copy was consulted
+    assert!(sparse_work * 10.0 < dense_work, "sparse {sparse_work} vs dense {dense_work}");
+    assert!(sd.max_abs_diff(&ss) < PARITY_TOL);
+}
+
+#[test]
+fn adaptive_pcg_solve_parity_and_thread_determinism() {
+    // moderately regularized so both runs converge to near machine
+    // precision; the two formats then agree to well below PARITY_TOL
+    // nu = 1.0 keeps κ(H) small, so both runs reach the machine-precision
+    // floor and the dense/sparse solutions coincide far below PARITY_TOL
+    // (at loose tolerances the two fp paths could legitimately differ by
+    // more than 1e-10 through the condition number)
+    let (n, d) = (1024usize, 48usize);
+    let spec = SparseSyntheticSpec::paper_profile(n, d, 6);
+    let ds = spec.build(42);
+    let sparse_prob = ds.problem(1.0);
+    let dense_prob = Problem::ridge(ds.a.to_dense(), ds.b.clone(), 1.0);
+    assert!(sparse_prob.a.is_sparse());
+    assert!(!dense_prob.a.is_sparse());
+
+    let cfg = AdaptiveConfig { seed: 7, tol: 1e-26, ..Default::default() };
+    let solve = |prob: &Problem, threads: usize| {
+        par::with_threads(threads, || {
+            let rep = AdaptivePcg::with_config(cfg.clone()).solve(prob, 150);
+            (rep.x, rep.iterations, rep.final_m)
+        })
+    };
+    let (xs, its_s, m_s) = solve(&sparse_prob, 1);
+    let (xd, _its_d, _m_d) = solve(&dense_prob, 1);
+    // both converged; solutions agree to the parity tolerance
+    let max_diff = xs.iter().zip(&xd).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    let scale = xd.iter().map(|v| v.abs()).fold(0.0f64, f64::max).max(1.0);
+    assert!(
+        max_diff / scale < PARITY_TOL,
+        "adaptive solve dense/sparse rel diff {}",
+        max_diff / scale
+    );
+    // the sparse run is bitwise thread-count independent, like the dense
+    // one (covered by par_determinism)
+    for t in [2usize, 4] {
+        let (xt, its_t, m_t) = solve(&sparse_prob, t);
+        assert_eq!(xs, xt, "sparse adaptive solve differs at {t} threads");
+        assert_eq!((its_s, m_s), (its_t, m_t));
+    }
+}
+
+#[test]
+fn fixed_pcg_and_woodbury_parity() {
+    use sketchsolve::precond::SketchedPreconditioner;
+    use sketchsolve::solvers::{Pcg, StopRule};
+    // strong regularization keeps κ(H) ~ O(10): both formats converge to
+    // the fp floor, so their solutions agree far inside PARITY_TOL
+    let (n, d) = (512usize, 96usize);
+    let (csr, dense) = twins(n, d, 12, 911);
+    let mut rng = Rng::seed_from(912);
+    let b = rng.gaussian_vec(d);
+    let sparse_prob = Problem::ridge(csr, b.clone(), 2.0);
+    let dense_prob = Problem::ridge(dense, b, 2.0);
+    // m < d exercises the Woodbury (ColScaled-view) formation
+    for m in [32usize, 192] {
+        let run = |prob: &Problem| {
+            let mut rng = Rng::seed_from(913);
+            let sk = SketchKind::Sjlt { s: 1 }.sample(m, n, &mut rng);
+            let pre = SketchedPreconditioner::from_sketch(prob, &sk).unwrap();
+            Pcg::solve_fixed(prob, &pre, StopRule { max_iters: 200, tol: 1e-24 }, None).x
+        };
+        let xs = run(&sparse_prob);
+        let xd = run(&dense_prob);
+        let max_diff = xs.iter().zip(&xd).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(max_diff < PARITY_TOL, "m={m}: fixed-PCG dense/sparse diff {max_diff}");
+    }
+}

@@ -44,7 +44,7 @@ fn newton_decrement_brackets() {
 
         // compute rho_hat = ||C_S - I||_2 through dense eigs of
         // L^{-1} H_S L^{-T} where H = L L^T (similar to C_S)
-        let mut h = syrk_t(&prob.a);
+        let mut h = prob.a.gram();
         for i in 0..d {
             h.data[i * d + i] += nu * nu;
         }
