@@ -1,0 +1,119 @@
+//! λ-grid sweep benchmark: cold per-ν solves (fresh sketch formation at
+//! every grid point, cache bypassed) against the one-sketch cached sweep
+//! path. Emits `BENCH_sweep.json` in the same `{op, threads, median_s,
+//! speedup_vs_1t}` record schema as `BENCH_micro.json`, so
+//! `scripts/compare_bench.py` tracks regressions in both.
+//!
+//! `cargo bench --bench sweep -- [--quick] [--threads N] [--out FILE]`
+
+use sketchsolve::api::{self, Budget, MethodSpec, SolveCtx, SolveRequest, Stop};
+use sketchsolve::bench_harness::runner::bench_median;
+use sketchsolve::linalg::Matrix;
+use sketchsolve::par;
+use sketchsolve::precond::{form_sketch, SketchedPreconditioner};
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{run_fixed_preconditioned, Pcg};
+use sketchsolve::util::{Flags, JsonValue};
+use std::sync::Arc;
+
+fn main() {
+    let flags = Flags::parse();
+    let quick = flags.has("quick");
+    let reps = if quick { 3 } else { 5 };
+    if let Some(t) = flags.threads() {
+        par::set_max_threads(t);
+    }
+    let (n, d) = if quick { (2048usize, 128usize) } else { (8192usize, 256usize) };
+    let m = 2 * d;
+    let grid: Vec<f64> = vec![1.0, 0.3, 0.1, 0.03, 0.01, 0.003];
+    let iters = 10usize;
+    let kind = SketchKind::Sjlt { s: 1 };
+    let seed = 0x5EED5;
+
+    let mut rng = Rng::seed_from(0xABCD);
+    let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    let b = rng.gaussian_vec(d);
+    let prob = Arc::new(Problem::ridge(a, b, grid[0]));
+
+    println!("== lambda-grid sweep: cold vs cached (n={n} d={d} m={m} G={}) ==\n", grid.len());
+
+    // cold: every grid point re-forms the sketch (cache bypassed by
+    // calling the formation stage directly), then assembles and solves
+    let cold = |prob: &Problem| {
+        let budget = Budget::none();
+        let stop = Stop { max_iters: iters, rel_tol: 0.0, abs_decrement_tol: 0.0 };
+        let mut last = Vec::new();
+        for &nu in &grid {
+            let mut wp = prob.clone();
+            wp.nu = nu;
+            let sa = form_sketch(&prob.a, kind, m, seed);
+            let pre = SketchedPreconditioner::build(sa, &wp.lambda, wp.nu).expect("assemble");
+            let mut pcg = Pcg::new(d, n);
+            let ctx = SolveCtx::from_stop(stop, &budget);
+            let (rep, _) = run_fixed_preconditioned(&mut pcg, &wp, &pre, &ctx);
+            last = rep.x;
+        }
+        last
+    };
+
+    // cached: one LambdaSweep request; the sketch forms on the first rep
+    // and every later formation is a cache hit (steady-state serving)
+    let cached = |prob: &Arc<Problem>| {
+        let req = SolveRequest::new(prob.clone())
+            .method(MethodSpec::LambdaSweep {
+                grid: grid.clone(),
+                inner: Box::new(MethodSpec::PcgFixed { m: Some(m), sketch: kind }),
+                warm_start: false,
+            })
+            .stop(Stop { max_iters: iters, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+            .seed(seed);
+        let out = api::solve(&req).expect("sweep runs");
+        out.report.x.clone()
+    };
+
+    let threads: Vec<usize> = vec![1, 2, 4];
+    let mut records: Vec<JsonValue> = Vec::new();
+    for (label, run) in [
+        ("sweep_cold_per_point", &(|| cold(&prob)) as &dyn Fn() -> Vec<f64>),
+        ("sweep_cached_one_sketch", &(|| cached(&prob)) as &dyn Fn() -> Vec<f64>),
+    ] {
+        let mut base_median = 0.0f64;
+        for &t in &threads {
+            let st = par::with_threads(t, || bench_median(&format!("{label} t={t}"), 1, reps, || run()));
+            if t == 1 {
+                base_median = st.median_s;
+            }
+            let speedup = if st.median_s > 0.0 { base_median / st.median_s } else { f64::NAN };
+            println!("{}   {:.2}x vs 1t", st.line(), speedup);
+            records.push(JsonValue::obj(vec![
+                ("op", JsonValue::s(label)),
+                ("threads", JsonValue::num(t as f64)),
+                ("median_s", JsonValue::num(st.median_s)),
+                ("speedup_vs_1t", JsonValue::num(speedup)),
+            ]));
+        }
+    }
+
+    let cs = sketchsolve::coordinator::Metrics::sketch_cache_counters();
+    println!(
+        "\nsketch_cache after run: hits={} misses={} evictions={} bytes={}",
+        cs.hits, cs.misses, cs.evictions, cs.bytes
+    );
+
+    let out_path = flags.get_or("out", "BENCH_sweep.json");
+    let doc = JsonValue::obj(vec![
+        ("bench", JsonValue::s("lambda_sweep_cold_vs_cached")),
+        ("n", JsonValue::num(n as f64)),
+        ("d", JsonValue::num(d as f64)),
+        ("m", JsonValue::num(m as f64)),
+        ("grid_points", JsonValue::num(grid.len() as f64)),
+        ("hardware_budget", JsonValue::num(par::max_threads() as f64)),
+        ("records", JsonValue::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("sweep records written to {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

@@ -44,6 +44,22 @@ pub enum MethodSpec {
     /// (mirroring `AdaptiveConfig`; seed and stop criteria come from the
     /// request itself).
     MultiRhs { sketch: SketchKind, rho: f64, m_init: usize, growth: usize, m_cap: Option<usize> },
+    /// Regularization-path sweep: solve the problem at every ν in `grid`
+    /// while forming the sketch **once** (at the grid's smallest ν, where
+    /// the effective dimension — and hence the required sketch size — is
+    /// largest) and re-running only the cheap `H_S` assembly per grid
+    /// point. `inner` names the per-point method (`PcgFixed`, `Ihs`, or
+    /// `AdaptivePcg`, which pilots at the smallest ν to discover m). With
+    /// `warm_start`, the solution at one ν seeds the next walk step;
+    /// without it every point starts cold from the request's `x0`, making
+    /// the per-point iterates bitwise-identical to independent solves.
+    LambdaSweep { grid: Vec<f64>, inner: Box<MethodSpec>, warm_start: bool },
+    /// k-fold cross-validated sweep: runs a [`MethodSpec::LambdaSweep`]
+    /// on each fold's training rows (all folds share one cached sketch
+    /// per fold), scores validation MSE per grid point, then refits the
+    /// best ν on the full data. Requires raw labels on the request
+    /// (`SolveRequest::labels`).
+    CvSweep { grid: Vec<f64>, folds: usize, inner: Box<MethodSpec> },
     /// PJRT/AOT-accelerated PCG over the SRHT
     /// ([`runtime::XlaPcg`](crate::runtime::XlaPcg)). Capability-gated in
     /// the registry: executable only when compiled `gradient`/`hess_apply`
@@ -73,6 +89,8 @@ impl MethodSpec {
             MethodSpec::AdaptiveIhs { .. } => "adaptive_ihs",
             MethodSpec::AdaptivePolyak { .. } => "adaptive_polyak",
             MethodSpec::MultiRhs { .. } => "multi_rhs",
+            MethodSpec::LambdaSweep { .. } => "lambda_sweep",
+            MethodSpec::CvSweep { .. } => "cv_sweep",
             MethodSpec::XlaPcg { .. } => "xla_pcg",
         }
     }

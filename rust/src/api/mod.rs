@@ -26,6 +26,7 @@ mod method;
 mod outcome;
 mod registry;
 mod request;
+mod sweep;
 
 pub use method::{MethodSpec, DEFAULT_FIXED_RHO};
 pub use outcome::{SolveError, SolveOutcome, SolveStatus};

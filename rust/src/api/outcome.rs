@@ -45,14 +45,32 @@ pub struct SolveOutcome {
     pub report: SolveReport,
     /// Multi-RHS only: the full `d x c` solution block.
     pub x_block: Option<Matrix>,
-    /// Multi-RHS only: per-follower summary reports.
+    /// Multi-RHS and sweep solves: per-follower / per-grid-point summary
+    /// reports (for sweeps, `followers[i]` is the report at
+    /// `lambda_grid[i]` and `report` is the point the walk started from).
     pub followers: Vec<SolveReport>,
+    /// Sweep solves only: the ν grid, in the caller's order.
+    pub lambda_grid: Option<Vec<f64>>,
+    /// CV sweep only: the grid point with the smallest mean validation
+    /// MSE (the one `report`/`x` were refit at).
+    pub best_lambda: Option<f64>,
+    /// CV sweep only: mean validation MSE per grid point, aligned with
+    /// `lambda_grid`.
+    pub cv_mse: Option<Vec<f64>>,
 }
 
 impl SolveOutcome {
     /// Outcome of a single-RHS solve.
     pub fn single(status: SolveStatus, report: SolveReport) -> SolveOutcome {
-        SolveOutcome { status, report, x_block: None, followers: Vec::new() }
+        SolveOutcome {
+            status,
+            report,
+            x_block: None,
+            followers: Vec::new(),
+            lambda_grid: None,
+            best_lambda: None,
+            cv_mse: None,
+        }
     }
 
     /// True when the budget ended the solve early.
@@ -72,6 +90,8 @@ impl std::fmt::Debug for SolveOutcome {
             .field("final_m", &self.report.final_m)
             .field("x_block", &self.x_block.as_ref().map(|m| (m.rows, m.cols)))
             .field("followers", &self.followers.len())
+            .field("lambda_grid", &self.lambda_grid.as_ref().map(|g| g.len()))
+            .field("best_lambda", &self.best_lambda)
             .finish()
     }
 }

@@ -8,11 +8,12 @@ use crate::adaptive::{run_adaptive_ctx, AdaptiveConfig};
 use crate::api::method::MethodSpec;
 use crate::api::outcome::{SolveError, SolveOutcome, SolveStatus};
 use crate::api::request::{SolveCtx, SolveRequest};
+use crate::api::sweep::{run_cv_sweep, run_sweep};
 use crate::linalg::Matrix;
-use crate::precond::SketchedPreconditioner;
+use crate::precond::{form_sketch_cached, SketchedPreconditioner};
 use crate::problem::Problem;
 use crate::rng::Rng;
-use crate::sketch::SketchKind;
+use crate::sketch::{cache, SketchKind};
 use crate::solvers::{
     run_fixed_preconditioned, BlockPcg, ConjugateGradient, DirectSolver, Ihs, Pcg, PolyakIhs,
     SolveReport,
@@ -51,9 +52,11 @@ struct AdaptivePcgEntry;
 struct AdaptiveIhsEntry;
 struct AdaptivePolyakEntry;
 struct MultiRhsEntry;
+struct LambdaSweepEntry;
+struct CvSweepEntry;
 struct XlaPcgEntry;
 
-static REGISTRY: [&dyn Solver; 9] = [
+static REGISTRY: [&dyn Solver; 11] = [
     &DirectEntry,
     &CgEntry,
     &PcgFixedEntry,
@@ -62,6 +65,8 @@ static REGISTRY: [&dyn Solver; 9] = [
     &AdaptiveIhsEntry,
     &AdaptivePolyakEntry,
     &MultiRhsEntry,
+    &LambdaSweepEntry,
+    &CvSweepEntry,
     &XlaPcgEntry,
 ];
 
@@ -140,9 +145,15 @@ fn aborted_report(method: &str, x: Vec<f64>) -> SolveReport {
     }
 }
 
-/// Sample an embedding and factor the preconditioner for the fixed-sketch
-/// routes. `m: None` resolves to the oblivious `2d` baseline; either way
-/// `m` is clamped to the padded-n cap the SRHT imposes.
+/// Form (or fetch) the sketch and factor the preconditioner for the
+/// fixed-sketch routes. `m: None` resolves to the oblivious `2d` baseline;
+/// either way `m` is clamped to the padded-n cap the SRHT imposes.
+///
+/// Formation goes through the process-global content-keyed cache: batched
+/// tenants hitting the same `(data, family, seed, m)` share one `SA`, and
+/// the returned sketch-flop figure is 0 on a hit (no application ran).
+/// The payload is bitwise what a cold formation produces, so caching
+/// never changes a solution.
 fn build_fixed_pre(
     prob: &Problem,
     kind: SketchKind,
@@ -151,11 +162,11 @@ fn build_fixed_pre(
 ) -> Result<(SketchedPreconditioner, f64), SolveError> {
     let cap = crate::linalg::next_pow2(prob.n());
     let m = m.unwrap_or(2 * prob.d()).max(1).min(cap);
-    let mut rng = Rng::seed_from(seed);
-    let sketch = kind.sample(m, prob.n(), &mut rng);
-    let pre = SketchedPreconditioner::from_sketch(prob, &sketch)
+    let (sa, hit) = form_sketch_cached(&prob.a, kind, m, seed, cache::global());
+    let pre = SketchedPreconditioner::assemble(sa, &prob.lambda, prob.nu)
         .map_err(|e| SolveError::Numerical(e.to_string()))?;
-    Ok((pre, kind.sketch_cost_flops_op(m, &prob.a)))
+    let flops = if hit { 0.0 } else { kind.sketch_cost_flops_op(m, &prob.a) };
+    Ok((pre, flops))
 }
 
 impl Solver for DirectEntry {
@@ -464,6 +475,71 @@ impl Solver for MultiRhsEntry {
     }
 }
 
+impl Solver for LambdaSweepEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "lambda_sweep",
+            summary: "one-sketch regularization path: cached SA + per-nu re-assembly",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::LambdaSweep { .. })
+    }
+
+    /// One sketch, G solves: the walk forms `SA` at the smallest-ν grid
+    /// point (through the global cache, so concurrent tenants share it)
+    /// and re-assembles the preconditioner per point.
+    /// `outcome.followers[i]` is the solve at `grid[i]`; `outcome.report`
+    /// is the first walked (largest-ν) point.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (grid, inner, warm_start) = match spec {
+            MethodSpec::LambdaSweep { grid, inner, warm_start } => (grid, inner.as_ref(), *warm_start),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let outs = run_sweep(&req.problem, grid, inner, warm_start, req, cache::global())?;
+        let mut out = SolveOutcome::single(outs.status, outs.reports[outs.start_index].clone());
+        out.followers = outs.reports;
+        out.lambda_grid = Some(grid.clone());
+        Ok(out)
+    }
+}
+
+impl Solver for CvSweepEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "cv_sweep",
+            summary: "k-fold CV over a nu grid + full-data refit at the winner",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::CvSweep { .. })
+    }
+
+    /// Per fold: one cached sketch of the fold's training rows, walked
+    /// over the whole grid; validation MSE picks the winner, which is
+    /// refit on the full data. Requires `SolveRequest::labels`.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (grid, folds, inner) = match spec {
+            MethodSpec::CvSweep { grid, folds, inner } => (grid, *folds, inner.as_ref()),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let outs = run_cv_sweep(&req.problem, grid, folds, inner, req, cache::global())?;
+        let mut out = SolveOutcome::single(outs.status, outs.refit);
+        out.lambda_grid = Some(grid.clone());
+        out.best_lambda = Some(grid[outs.best_index]);
+        out.cv_mse = Some(outs.cv_mse);
+        Ok(out)
+    }
+}
+
 /// The shared PJRT engine behind the `xla_pcg` entry, loaded once per
 /// process from `SKETCHSOLVE_ARTIFACTS` (default `artifacts/`). `None`
 /// when the directory has no compilable manifest — the capability gate.
@@ -552,6 +628,16 @@ mod tests {
             MethodSpec::AdaptiveIhs { sketch: sk },
             MethodSpec::AdaptivePolyak { sketch: sk, rho: 0.125 },
             MethodSpec::MultiRhs { sketch: sk, rho: 0.25, m_init: 1, growth: 2, m_cap: None },
+            MethodSpec::LambdaSweep {
+                grid: vec![0.5, 0.1],
+                inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
+                warm_start: true,
+            },
+            MethodSpec::CvSweep {
+                grid: vec![0.5, 0.1],
+                folds: 2,
+                inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
+            },
             MethodSpec::XlaPcg { m: None },
         ]
     }
@@ -562,7 +648,7 @@ mod tests {
             let entry = lookup(&spec).unwrap_or_else(|| panic!("{spec:?} has no entry"));
             assert_eq!(entry.descriptor().name, spec.name(), "{spec:?}");
         }
-        assert_eq!(registry().len(), 9);
+        assert_eq!(registry().len(), 11);
     }
 
     #[test]

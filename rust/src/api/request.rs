@@ -145,6 +145,10 @@ pub struct SolveRequest {
     /// Multi-RHS block (`d x c`) for [`MethodSpec::MultiRhs`]; column 0 is
     /// the pilot RHS (the problem's own `b` is ignored by that method).
     pub b_cols: Option<Arc<Matrix>>,
+    /// Raw labels `y` (length n) for [`MethodSpec::CvSweep`]: fold
+    /// problems are rebuilt from rows of `A` and `y`, which the normal
+    /// equations form `b = Aᵀy` cannot recover.
+    pub labels: Option<Arc<Vec<f64>>>,
     /// Seed for embedding sampling.
     pub seed: u64,
     pub observer: Option<ProgressObserver>,
@@ -162,6 +166,7 @@ impl SolveRequest {
             x0: None,
             x_star: None,
             b_cols: None,
+            labels: None,
             seed: 0,
             observer: None,
         }
@@ -226,6 +231,12 @@ impl SolveRequest {
     /// Attach the `d x c` RHS block for [`MethodSpec::MultiRhs`].
     pub fn rhs_block(mut self, b_cols: Matrix) -> Self {
         self.b_cols = Some(Arc::new(b_cols));
+        self
+    }
+
+    /// Attach raw labels `y` (length n) for [`MethodSpec::CvSweep`].
+    pub fn labels(mut self, y: Vec<f64>) -> Self {
+        self.labels = Some(Arc::new(y));
         self
     }
 

@@ -1,0 +1,334 @@
+//! Regularization-path execution: one sketch, many ν.
+//!
+//! The sketched data `SA` does not depend on ν — the regularizer enters
+//! `H_S = (SA)ᵀSA + ν²Λ` only through the assembly stage — and the sketch
+//! size required for a (1±ε) embedding is governed by the effective
+//! dimension `d_eff(ν)`, which is *decreasing* in ν. A grid walk therefore
+//! sizes (and forms) its sketch once, at the grid's smallest ν, and every
+//! other point reuses it through the content-keyed
+//! [`sketch::cache`](crate::sketch::cache): per point, only a cheap
+//! Woodbury/Cholesky re-assembly plus a warm-started inner solve remains.
+//!
+//! The walk runs from the most regularized point (largest ν, easiest
+//! problem) down to the least, so with `warm_start` each solution seeds
+//! the next, slightly harder problem. Without `warm_start` every point
+//! starts from the request's own `x0`, making each point's iterates
+//! bitwise-identical to an independent cold solve — the property the
+//! cache-correctness tests pin down.
+
+use crate::adaptive::{run_adaptive_ctx, AdaptiveConfig};
+use crate::api::method::MethodSpec;
+use crate::api::outcome::{SolveError, SolveStatus};
+use crate::api::request::{SolveCtx, SolveRequest};
+use crate::precond::{form_sketch, SketchedPreconditioner};
+use crate::problem::Problem;
+use crate::sketch::cache::{CacheKey, SketchCache};
+use crate::sketch::SketchKind;
+use crate::solvers::{run_fixed_preconditioned, Ihs, Pcg, SolveReport};
+
+/// Everything a grid walk produces: per-point reports in the *caller's*
+/// grid order (not walk order) and the sketch size the walk settled on.
+pub(crate) struct SweepOutputs {
+    pub status: SolveStatus,
+    /// `reports[i]` is the solve at `grid[i]`; on an aborted walk the
+    /// unvisited points carry zero-iteration stub reports.
+    pub reports: Vec<SolveReport>,
+    /// Index into the grid of the first walked (largest-ν) point.
+    pub start_index: usize,
+    pub m: usize,
+}
+
+/// Outputs of a k-fold CV sweep: the refit at the winning grid point plus
+/// the per-point mean validation MSE.
+pub(crate) struct CvOutputs {
+    pub status: SolveStatus,
+    /// Full-data refit at `grid[best_index]`.
+    pub refit: SolveReport,
+    /// Mean validation MSE per grid point (caller's grid order). All-NaN
+    /// when the fold loop was aborted by the budget.
+    pub cv_mse: Vec<f64>,
+    pub best_index: usize,
+    pub m: usize,
+}
+
+/// The inner methods a sweep can walk with.
+enum InnerKind {
+    /// Fixed-sketch PCG (`rho: None`) or IHS (`rho: Some`).
+    Fixed { m: Option<usize>, sketch: SketchKind, rho: Option<f64> },
+    /// Adaptive PCG pilots at the smallest ν to discover m.
+    Adaptive { sketch: SketchKind },
+}
+
+fn classify_inner(inner: &MethodSpec) -> Result<InnerKind, SolveError> {
+    match inner {
+        MethodSpec::PcgFixed { m, sketch } => Ok(InnerKind::Fixed { m: *m, sketch: *sketch, rho: None }),
+        MethodSpec::Ihs { m, sketch, rho } => {
+            if !(*rho > 0.0 && *rho < 1.0) {
+                return Err(SolveError::InvalidSpec(format!("ihs rho must be in (0,1), got {rho}")));
+            }
+            Ok(InnerKind::Fixed { m: *m, sketch: *sketch, rho: Some(*rho) })
+        }
+        MethodSpec::AdaptivePcg { sketch } => Ok(InnerKind::Adaptive { sketch: *sketch }),
+        other => Err(SolveError::InvalidSpec(format!(
+            "sweep inner method must be pcg, ihs, or adaptive_pcg, got {}",
+            other.name()
+        ))),
+    }
+}
+
+fn validate_grid(grid: &[f64]) -> Result<(), SolveError> {
+    if grid.is_empty() {
+        return Err(SolveError::InvalidSpec("sweep grid is empty".into()));
+    }
+    if let Some(bad) = grid.iter().find(|v| !(v.is_finite() && **v > 0.0)) {
+        return Err(SolveError::InvalidSpec(format!("sweep grid values must be finite and > 0, got {bad}")));
+    }
+    Ok(())
+}
+
+/// Grid indices in walk order: descending ν (stable, so duplicate values
+/// keep the caller's relative order).
+fn walk_order(grid: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    order.sort_by(|&i, &j| grid[j].partial_cmp(&grid[i]).expect("grid validated finite"));
+    order
+}
+
+/// Stub report for a grid point the budget never let the walk reach.
+fn skipped_report(nu: f64, x: Vec<f64>) -> SolveReport {
+    SolveReport {
+        method: format!("sweep_skipped[nu={nu}]"),
+        x,
+        iterations: 0,
+        trace: Vec::new(),
+        final_m: 0,
+        sketch_doublings: 0,
+        secs: 0.0,
+        sketch_flops: 0.0,
+        factor_flops: 0.0,
+    }
+}
+
+/// Walk `grid` over `prob` (whose own `nu` is ignored — each point
+/// overrides it), forming the sketch at most once through `cache`.
+///
+/// The cache is consulted *per grid point* with the same key, so a single
+/// G-point walk records 1 miss + (G−1) hits on a cold cache — the counter
+/// shape the CI smoke job greps for — while the thread-local
+/// `sketch::flops` counter shows exactly one application.
+pub(crate) fn run_sweep(
+    prob: &Problem,
+    grid: &[f64],
+    inner: &MethodSpec,
+    warm_start: bool,
+    req: &SolveRequest,
+    cache: &SketchCache,
+) -> Result<SweepOutputs, SolveError> {
+    validate_grid(grid)?;
+    let kind = classify_inner(inner)?;
+    let d = prob.d();
+    let n = prob.n();
+    let order = walk_order(grid);
+    let start_index = order[0];
+    let anchor = *order.last().expect("grid validated non-empty"); // smallest ν
+
+    let mut reports: Vec<Option<SolveReport>> = grid.iter().map(|_| None).collect();
+    let mut status = SolveStatus::Done;
+    // the warm chain: the previous point's solution, or the request's x0
+    let mut x_chain: Option<Vec<f64>> = req.x0.clone();
+    let mut wp = prob.clone();
+
+    let (sketch, m, rho) = match kind {
+        InnerKind::Fixed { m, sketch, rho } => {
+            let cap = crate::linalg::next_pow2(n);
+            (sketch, m.unwrap_or(2 * d).max(1).min(cap), rho)
+        }
+        InnerKind::Adaptive { sketch } => {
+            // pilot at the smallest ν: largest d_eff, so the discovered m
+            // dominates every other grid point
+            wp.nu = grid[anchor];
+            let cfg = AdaptiveConfig { sketch, seed: req.seed, ..Default::default() };
+            let ctx = SolveCtx {
+                stop: req.stop,
+                budget: &req.budget,
+                x0: x_chain.as_deref(),
+                x_star: None,
+                observer: req.observer.as_deref(),
+            };
+            let mut pcg = Pcg::new(d, n);
+            let (mut rep, st) = run_adaptive_ctx(&mut pcg, &wp, &cfg, &ctx);
+            rep.method = format!("{}[nu={}]", rep.method, wp.nu);
+            let m = rep.final_m.max(1);
+            if warm_start {
+                x_chain = Some(rep.x.clone());
+            }
+            reports[anchor] = Some(rep);
+            if st.aborted() {
+                status = st;
+            }
+            (sketch, m, None)
+        }
+    };
+
+    // key computed once: every point shares (content, family, seed, m)
+    let key = CacheKey { fingerprint: prob.a.fingerprint(), kind: sketch, seed: req.seed, m };
+    let sketch_cost = sketch.sketch_cost_flops_op(m, &prob.a);
+
+    for &gi in &order {
+        if reports[gi].is_some() {
+            continue; // adaptive pilot already solved the anchor
+        }
+        if status.aborted() {
+            let x = x_chain.clone().unwrap_or_else(|| vec![0.0; d]);
+            reports[gi] = Some(skipped_report(grid[gi], x));
+            continue;
+        }
+        wp.nu = grid[gi];
+        let (sa, hit) = cache.get_or_insert(key, || form_sketch(&prob.a, sketch, m, req.seed));
+        let pre = SketchedPreconditioner::assemble(sa, &wp.lambda, wp.nu)
+            .map_err(|e| SolveError::Numerical(e.to_string()))?;
+        let ctx = SolveCtx {
+            stop: req.stop,
+            budget: &req.budget,
+            x0: x_chain.as_deref(),
+            x_star: None,
+            observer: req.observer.as_deref(),
+        };
+        let (mut rep, st) = match rho {
+            None => {
+                let mut pcg = Pcg::new(d, n);
+                run_fixed_preconditioned(&mut pcg, &wp, &pre, &ctx)
+            }
+            Some(rho) => {
+                let mut ihs = Ihs::new(rho, d, n);
+                run_fixed_preconditioned(&mut ihs, &wp, &pre, &ctx)
+            }
+        };
+        rep.method = format!("{}[nu={}]", rep.method, wp.nu);
+        rep.sketch_flops = if hit { 0.0 } else { sketch_cost };
+        if warm_start {
+            x_chain = Some(rep.x.clone());
+        }
+        if st.aborted() {
+            status = st;
+        }
+        reports[gi] = Some(rep);
+    }
+
+    let reports = reports
+        .into_iter()
+        .map(|r| r.expect("every grid point gets a report or a stub"))
+        .collect();
+    Ok(SweepOutputs { status, reports, start_index, m })
+}
+
+/// k-fold cross-validated grid search + full-data refit at the winner.
+///
+/// Fold k trains on rows `{i : i % folds != k}` and validates on the
+/// rest; each fold's training operator has its own content fingerprint,
+/// so each fold forms one sketch and walks its grid on hits. Validation
+/// MSE is averaged across folds per grid point; the best point is refit
+/// on the full data (through the same cache).
+pub(crate) fn run_cv_sweep(
+    prob: &Problem,
+    grid: &[f64],
+    folds: usize,
+    inner: &MethodSpec,
+    req: &SolveRequest,
+    cache: &SketchCache,
+) -> Result<CvOutputs, SolveError> {
+    validate_grid(grid)?;
+    let n = prob.n();
+    let y = req
+        .labels
+        .as_ref()
+        .ok_or_else(|| SolveError::InvalidSpec("cv_sweep requires raw labels (SolveRequest::labels)".into()))?;
+    if y.len() != n {
+        return Err(SolveError::InvalidSpec(format!("labels have {} entries, problem n={n}", y.len())));
+    }
+    if folds < 2 || folds > n {
+        return Err(SolveError::InvalidSpec(format!("cv folds must be in [2, n={n}], got {folds}")));
+    }
+
+    let mut mse_sum = vec![0.0f64; grid.len()];
+    let mut status = SolveStatus::Done;
+    for k in 0..folds {
+        let train: Vec<usize> = (0..n).filter(|i| i % folds != k).collect();
+        let val: Vec<usize> = (0..n).filter(|i| i % folds == k).collect();
+        let y_tr: Vec<f64> = train.iter().map(|&i| y[i]).collect();
+        let a_tr = prob.a.select_rows(&train);
+        let b_tr = a_tr.matvec_t(&y_tr);
+        let fold_prob =
+            Problem { a: a_tr, b: b_tr, lambda: prob.lambda.clone(), nu: prob.nu };
+        let outs = run_sweep(&fold_prob, grid, inner, true, req, cache)?;
+        if outs.status.aborted() {
+            status = outs.status;
+            break;
+        }
+        let a_val = prob.a.select_rows(&val);
+        let y_val: Vec<f64> = val.iter().map(|&i| y[i]).collect();
+        for (g, rep) in outs.reports.iter().enumerate() {
+            let pred = a_val.matvec(&rep.x);
+            let mse = pred
+                .iter()
+                .zip(&y_val)
+                .map(|(p, t)| (p - t) * (p - t))
+                .sum::<f64>()
+                / val.len() as f64;
+            mse_sum[g] += mse;
+        }
+    }
+
+    if status.aborted() {
+        let x = req.x0.clone().unwrap_or_else(|| vec![0.0; prob.d()]);
+        return Ok(CvOutputs {
+            status,
+            refit: skipped_report(grid[0], x),
+            cv_mse: vec![f64::NAN; grid.len()],
+            best_index: 0,
+            m: 0,
+        });
+    }
+
+    let cv_mse: Vec<f64> = mse_sum.iter().map(|s| s / folds as f64).collect();
+    let best_index = cv_mse
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.partial_cmp(b).expect("MSE is finite"))
+        .map(|(i, _)| i)
+        .expect("grid validated non-empty");
+
+    let refit_grid = [grid[best_index]];
+    let outs = run_sweep(prob, &refit_grid, inner, false, req, cache)?;
+    let mut refit = outs.reports.into_iter().next().expect("single-point sweep");
+    refit.method = format!("cv_refit:{}", refit.method);
+    Ok(CvOutputs { status: outs.status, refit, cv_mse, best_index, m: outs.m })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walk_order_is_descending_nu() {
+        assert_eq!(walk_order(&[0.1, 1.0, 0.5]), vec![1, 2, 0]);
+        assert_eq!(walk_order(&[2.0]), vec![0]);
+    }
+
+    #[test]
+    fn grid_validation_rejects_junk() {
+        assert!(validate_grid(&[]).is_err());
+        assert!(validate_grid(&[1.0, -0.5]).is_err());
+        assert!(validate_grid(&[1.0, f64::NAN]).is_err());
+        assert!(validate_grid(&[0.5, 0.1]).is_ok());
+    }
+
+    #[test]
+    fn inner_classification_gates_method_families() {
+        let sk = SketchKind::Sjlt { s: 1 };
+        assert!(classify_inner(&MethodSpec::PcgFixed { m: None, sketch: sk }).is_ok());
+        assert!(classify_inner(&MethodSpec::AdaptivePcg { sketch: sk }).is_ok());
+        assert!(classify_inner(&MethodSpec::Ihs { m: None, sketch: sk, rho: 2.0 }).is_err());
+        assert!(classify_inner(&MethodSpec::Direct).is_err());
+    }
+}

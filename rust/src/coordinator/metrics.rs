@@ -55,14 +55,29 @@ impl Metrics {
         self.ns_solve.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Counters of the process-global sketch cache every registry entry
+    /// forms sketches through. Surfaced here (not on a per-service
+    /// `Metrics`) because the cache is deliberately shared across
+    /// services and direct `api::solve` callers — that sharing *is* the
+    /// feature being observed.
+    pub fn sketch_cache_counters() -> crate::sketch::cache::CacheStats {
+        crate::sketch::cache::global().stats()
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let (s, c, f) = self.job_counts();
+        let cache = Metrics::sketch_cache_counters();
         format!(
-            "jobs {s} submitted / {c} done / {f} failed; {} iters, {} doublings, {:.3}s solving",
+            "jobs {s} submitted / {c} done / {f} failed; {} iters, {} doublings, {:.3}s solving; \
+             sketch_cache: hits={} misses={} evictions={} bytes={}",
             self.total_iterations(),
             self.total_doublings(),
-            self.solve_seconds()
+            self.solve_seconds(),
+            cache.hits,
+            cache.misses,
+            cache.evictions,
+            cache.bytes
         )
     }
 }
@@ -84,6 +99,7 @@ mod tests {
         assert_eq!(m.total_doublings(), 3);
         assert!((m.solve_seconds() - 0.5).abs() < 1e-6);
         assert!(m.summary().contains("2 submitted"));
+        assert!(m.summary().contains("sketch_cache: hits="));
     }
 
     #[test]

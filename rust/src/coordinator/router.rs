@@ -24,7 +24,11 @@ pub type Route = MethodSpec;
 pub struct RouterPolicy {
     /// Below this d, direct solve wins outright.
     pub direct_d_max: usize,
-    /// Below this n*d (flop proxy), direct solve wins.
+    /// Storage/flop proxy for the direct path: direct wins when both the
+    /// *stored* entry count (`DataOp::nnz` — equals n·d only for dense
+    /// data) and the d² factorization footprint sit below this. The nnz
+    /// gate keeps huge-but-sparse operators off the dense-cost direct
+    /// path while letting genuinely tiny sparse problems use it.
     pub direct_nd_max: usize,
     /// Condition-number proxy above which CG is hopeless.
     pub cg_cond_max: f64,
@@ -70,9 +74,17 @@ pub fn condition_proxy(prob: &Problem, iters: usize) -> f64 {
 
 /// Route a problem to a method spec.
 pub fn route(prob: &Problem, policy: &RouterPolicy) -> MethodSpec {
-    let n = prob.n();
     let d = prob.d();
-    if d <= policy.direct_d_max || n * d <= policy.direct_nd_max {
+    // nnz-aware direct gate: forming the Gram costs O(nnz·d), so measure
+    // the *stored* entries, not the dense n·d proxy. For dense data this
+    // is the old `n·d <= direct_nd_max` gate exactly (nnz = n·d, and
+    // d² <= n·d whenever n >= d); for sparse data it admits tiny-storage
+    // problems while the d² term keeps a huge-d operator — whose O(d³)
+    // Cholesky dwarfs its cheap sparse Gram — off the direct path.
+    let stored = prob.a.nnz();
+    if d <= policy.direct_d_max
+        || (stored <= policy.direct_nd_max && d * d <= policy.direct_nd_max)
+    {
         return MethodSpec::Direct;
     }
     let cond = condition_proxy(prob, 12);
@@ -142,6 +154,46 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(route(&p, &policy), MethodSpec::pcg_2d(policy.sketch));
+    }
+
+    #[test]
+    fn sparse_tiny_storage_goes_direct() {
+        use crate::linalg::Csr;
+        // n·d = 200k (way past direct_nd_max) but only ~2 stored entries
+        // per row and d² = 10k < 65536: the direct path is genuinely cheap
+        let n = 2000;
+        let d = 100;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            trips.push((i, i % d, 1.0 + i as f64 * 1e-3));
+            trips.push((i, (i * 7) % d, 0.5));
+        }
+        let a = Csr::from_triplets(n, d, &trips);
+        let p = Problem::ridge(a, vec![1.0; d], 0.1);
+        let policy = RouterPolicy { direct_d_max: 16, ..Default::default() };
+        assert!(p.a.is_sparse());
+        assert_eq!(route(&p, &policy), MethodSpec::Direct);
+    }
+
+    #[test]
+    fn sparse_huge_d_avoids_direct() {
+        use crate::linalg::Csr;
+        // storage is tiny but d² far exceeds the budget: the O(d³)
+        // factorization must keep this off the direct path
+        let n = 4000;
+        let d = 2000;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            trips.push((i, i % d, 0.9f64.powi((i % d) as i32).max(1e-6)));
+        }
+        let a = Csr::from_triplets(n, d, &trips);
+        let p = Problem::ridge(a, vec![1.0; d], 1e-6);
+        let policy = RouterPolicy { direct_d_max: 16, ..Default::default() };
+        assert!(p.a.nnz() <= policy.direct_nd_max, "storage fits the budget");
+        assert!(
+            !matches!(route(&p, &policy), MethodSpec::Direct),
+            "d^2 > direct_nd_max must veto the direct path"
+        );
     }
 
     #[test]

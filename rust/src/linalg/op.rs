@@ -51,6 +51,31 @@ impl From<Csr> for DataOp {
     }
 }
 
+/// Content identity of a data operator, used as the problem half of the
+/// sketch-cache key: shape, stored entries, and a 64-bit hash over the
+/// stored structure and values (including the column-scale vector of a
+/// [`DataOp::ColScaled`] view). Two operators with equal fingerprints are
+/// treated as the same data by the cache; dims/nnz ride along explicitly
+/// as cheap insurance against content-hash collisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DataFingerprint {
+    pub rows: usize,
+    pub cols: usize,
+    /// Stored entries ([`DataOp::nnz`]).
+    pub nnz: usize,
+    /// Mixed 64-bit hash over structure + values.
+    pub content: u64,
+}
+
+/// One splitmix64-style avalanche step folding `v` into `h`.
+#[inline]
+fn mix64(h: u64, v: u64) -> u64 {
+    let mut z = (h ^ v).wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
 impl DataOp {
     /// Wrap an operator in a column-scaling view `op · diag(scale)`.
     pub fn col_scaled(inner: DataOp, scale: Vec<f64>) -> DataOp {
@@ -246,6 +271,77 @@ impl DataOp {
         }
     }
 
+    /// Content fingerprint for the sketch cache (one O(nnz) pass; cheap
+    /// next to any sketch application, which is at least one such pass).
+    pub fn fingerprint(&self) -> DataFingerprint {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = self.hash_content(h);
+        DataFingerprint { rows: self.rows(), cols: self.cols(), nnz: self.nnz(), content: h }
+    }
+
+    fn hash_content(&self, mut h: u64) -> u64 {
+        match self {
+            DataOp::Dense(m) => {
+                h = mix64(h, 1);
+                for v in &m.data {
+                    h = mix64(h, v.to_bits());
+                }
+            }
+            DataOp::CsrSparse(c) => {
+                h = mix64(h, 2);
+                for &p in &c.indptr {
+                    h = mix64(h, p as u64);
+                }
+                for &i in &c.indices {
+                    h = mix64(h, i as u64);
+                }
+                for v in &c.values {
+                    h = mix64(h, v.to_bits());
+                }
+            }
+            DataOp::ColScaled { inner, scale } => {
+                h = mix64(h, 3);
+                h = inner.hash_content(h);
+                for v in scale {
+                    h = mix64(h, v.to_bits());
+                }
+            }
+        }
+        h
+    }
+
+    /// Gather the rows `idx` (in order, duplicates allowed) into a new
+    /// operator of the same format — the CV-fold split primitive. A
+    /// `ColScaled` view keeps its scale and selects rows of the inner
+    /// operator (row selection and column scaling commute).
+    pub fn select_rows(&self, idx: &[usize]) -> DataOp {
+        match self {
+            DataOp::Dense(m) => {
+                let mut data = Vec::with_capacity(idx.len() * m.cols);
+                for &i in idx {
+                    data.extend_from_slice(m.row(i));
+                }
+                DataOp::Dense(Matrix::from_vec(idx.len(), m.cols, data))
+            }
+            DataOp::CsrSparse(c) => {
+                let mut indptr = Vec::with_capacity(idx.len() + 1);
+                indptr.push(0usize);
+                let mut indices = Vec::new();
+                let mut values = Vec::new();
+                for &i in idx {
+                    let (cis, vs) = c.row(i);
+                    indices.extend_from_slice(cis);
+                    values.extend_from_slice(vs);
+                    indptr.push(indices.len());
+                }
+                DataOp::CsrSparse(Csr { rows: idx.len(), cols: c.cols, indptr, indices, values })
+            }
+            DataOp::ColScaled { inner, scale } => {
+                DataOp::col_scaled(inner.select_rows(idx), scale.clone())
+            }
+        }
+    }
+
     /// Materialized transpose: `Dense` transposes the buffer, `CsrSparse`
     /// runs the O(nnz) counting transpose, and a `ColScaled` view becomes a
     /// row-scaled materialization of `inner^T` (the one place the view must
@@ -425,6 +521,53 @@ mod tests {
         for i in 0..11 {
             for j in 0..11 {
                 assert_eq!(w.at(i, j), w.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_separates_content_not_just_shape() {
+        let mut rng = Rng::seed_from(509);
+        let (n, d) = (12, 5);
+        let a = random_dense(&mut rng, n, d);
+        let mut b = a.clone();
+        b.data[7] += 1e-9; // same dims, one entry nudged
+        let fa = DataOp::Dense(a.clone()).fingerprint();
+        let fb = DataOp::Dense(b).fingerprint();
+        assert_eq!((fa.rows, fa.cols, fa.nnz), (n, d, n * d));
+        assert_eq!((fb.rows, fb.cols), (n, d));
+        assert_ne!(fa, fb, "different data must fingerprint differently");
+        // deterministic: same content, same fingerprint
+        assert_eq!(fa, DataOp::Dense(a.clone()).fingerprint());
+        // a column-scaled view changes identity even with unit scale order
+        let scale: Vec<f64> = (0..d).map(|j| 1.0 + j as f64).collect();
+        let view = DataOp::col_scaled(DataOp::Dense(a), scale);
+        assert_ne!(view.fingerprint().content, fa.content);
+    }
+
+    #[test]
+    fn select_rows_gathers_in_order_across_formats() {
+        let mut rng = Rng::seed_from(511);
+        let (n, d) = (10, 4);
+        let dense = random_dense(&mut rng, n, d);
+        let idx = [7usize, 0, 3, 3];
+        for op in [DataOp::Dense(dense.clone()), DataOp::CsrSparse(Csr::from_dense(&dense))] {
+            let sub = op.select_rows(&idx);
+            assert_eq!((sub.rows(), sub.cols()), (idx.len(), d));
+            assert_eq!(sub.format_name(), op.format_name());
+            let got = sub.to_dense();
+            for (r, &i) in idx.iter().enumerate() {
+                for j in 0..d {
+                    assert_eq!(got.at(r, j), dense.at(i, j));
+                }
+            }
+        }
+        let scale: Vec<f64> = (0..d).map(|j| 0.5 + j as f64).collect();
+        let view = DataOp::col_scaled(DataOp::Dense(dense.clone()), scale.clone());
+        let sub = view.select_rows(&idx);
+        for (r, &i) in idx.iter().enumerate() {
+            for j in 0..d {
+                assert!((sub.to_dense().at(r, j) - dense.at(i, j) * scale[j]).abs() < 1e-15);
             }
         }
     }

@@ -1,19 +1,57 @@
 //! The sketched preconditioner `H_S = (SA)^T (SA) + nu^2 Lambda` and its
-//! cached factorization (§4.1.1).
+//! cached factorization (§4.1.1), split into two explicit stages:
 //!
-//! Two regimes:
-//! - **m >= d (primal)**: form `H_S` (O(m d^2)) and Cholesky it (O(d^3));
-//!   each solve is O(d^2).
-//! - **m < d (Woodbury)**: form `W_S = SA Λ^{-1} (SA)^T + ν^2 I_m`
-//!   (O(m^2 d)), Cholesky it (O(m^3)); each solve is O(m d) via
-//!   `v = Λ^{-1}/ν^2 (I − (SA)^T W_S^{-1} SA Λ^{-1}) z`.
+//! 1. **Sketch formation** ([`form_sketch`] / [`form_sketch_cached`]):
+//!    sample the embedding for `(kind, seed, m)` and apply it to the data
+//!    operator, producing `SA` (m x d). This is the expensive stage —
+//!    `O(s·nnz)` to `O(m·nnz)` — and it is *independent of the
+//!    regularization*, so the cached variant shares one `SA` across a
+//!    whole λ-grid, CV folds, and batched tenants via the content-keyed
+//!    [`sketch::cache`](crate::sketch::cache).
+//! 2. **Assembly** ([`SketchedPreconditioner::assemble`]): form and factor
+//!    `H_S` for a given `ν²Λ`. Two regimes:
+//!    - **m >= d (primal)**: form `H_S` (O(m d^2)) and Cholesky it
+//!      (O(d^3)); each solve is O(d^2).
+//!    - **m < d (Woodbury)**: form `W_S = SA Λ^{-1} (SA)^T + ν^2 I_m`
+//!      (O(m^2 d)), Cholesky it (O(m^3)); each solve is O(m d) via
+//!      `v = Λ^{-1}/ν^2 (I − (SA)^T W_S^{-1} SA Λ^{-1}) z`.
 //!
 //! The factorization is refreshed whenever the adaptive controller doubles
-//! the sketch size and samples a fresh embedding.
+//! the sketch size and samples a fresh embedding; a λ-grid sweep instead
+//! keeps `SA` and re-runs only stage 2 per grid point.
 
-use crate::linalg::{dense_row_gram, matvec_into, matvec_t_into, syrk_t, Cholesky, CholeskyError, Matrix};
+use crate::linalg::{dense_row_gram, matvec_into, matvec_t_into, syrk_t, Cholesky, CholeskyError, DataOp, Matrix};
 use crate::problem::Problem;
-use crate::sketch::Sketch;
+use crate::rng::Rng;
+use crate::sketch::cache::{CacheKey, SketchCache};
+use crate::sketch::{Sketch, SketchKind};
+use std::sync::Arc;
+
+/// Stage 1, cold: sample a fresh `(kind, seed)` embedding of size `m` and
+/// apply it to `a`. Pure in all four arguments — the same inputs always
+/// produce bitwise the same `SA` (block-seeded sampling, owner-computes
+/// kernels), which is what makes the formed sketch cacheable at all.
+pub fn form_sketch(a: &DataOp, kind: SketchKind, m: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from(seed);
+    let sketch = kind.sample(m, a.rows(), &mut rng);
+    sketch.apply(a)
+}
+
+/// Stage 1 through the content-keyed cache: bitwise the same result as
+/// [`form_sketch`], but repeated formations for the same
+/// `(data content, kind, seed, m)` collapse into one application. Returns
+/// the shared payload and whether it was a cache hit (callers use the
+/// flag for flop accounting: a hit spent no sketch flops here).
+pub fn form_sketch_cached(
+    a: &DataOp,
+    kind: SketchKind,
+    m: usize,
+    seed: u64,
+    cache: &SketchCache,
+) -> (Arc<Matrix>, bool) {
+    let key = CacheKey { fingerprint: a.fingerprint(), kind, seed, m };
+    cache.get_or_insert(key, || form_sketch(a, kind, m, seed))
+}
 
 /// Factorized `H_S`, ready to solve `H_S v = z` repeatedly.
 pub struct SketchedPreconditioner {
@@ -28,9 +66,10 @@ pub struct SketchedPreconditioner {
 enum Inner {
     /// m >= d: Cholesky of H_S (d x d).
     Primal { chol: Cholesky },
-    /// m < d: Woodbury with Cholesky of W_S (m x m). Keeps SA around.
+    /// m < d: Woodbury with Cholesky of W_S (m x m). Keeps a shared
+    /// handle on SA (cache-resident payloads are never copied per ν).
     Woodbury {
-        sa: Matrix,
+        sa: Arc<Matrix>,
         chol: Cholesky,
         /// Λ^{-1} diagonal.
         lam_inv: Vec<f64>,
@@ -42,14 +81,16 @@ enum Inner {
 }
 
 impl SketchedPreconditioner {
-    /// Build from an already-computed sketch `SA` (m x d) and the problem's
-    /// regularization. Chooses the primal or Woodbury path by m vs d.
+    /// Stage 2: form and factor `H_S` for the regularization `ν²Λ` from a
+    /// shared, already-formed `SA` (m x d). Chooses the primal or Woodbury
+    /// path by m vs d. Only this stage depends on ν — a λ-grid sweep calls
+    /// it once per grid point against one `SA`.
     ///
     /// Both formations run on the parallel layer: the primal Gram goes
     /// through the row-partitioned `syrk_t`, and the Woodbury `W_S` through
     /// the weighted row Gram of the `SA·Λ^{-1/2}` view — either way the
     /// factorized operator is bit-identical at any thread count.
-    pub fn build(sa: Matrix, lambda: &[f64], nu: f64) -> Result<Self, CholeskyError> {
+    pub fn assemble(sa: Arc<Matrix>, lambda: &[f64], nu: f64) -> Result<Self, CholeskyError> {
         let m = sa.rows;
         let d = sa.cols;
         assert_eq!(lambda.len(), d);
@@ -83,6 +124,12 @@ impl SketchedPreconditioner {
                 factor_flops: flops,
             })
         }
+    }
+
+    /// Build from an owned `SA` (the pre-split signature; thin wrapper
+    /// over [`SketchedPreconditioner::assemble`]).
+    pub fn build(sa: Matrix, lambda: &[f64], nu: f64) -> Result<Self, CholeskyError> {
+        Self::assemble(Arc::new(sa), lambda, nu)
     }
 
     /// Convenience: sample-free build directly from a problem + sketch.

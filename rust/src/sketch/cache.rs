@@ -1,0 +1,243 @@
+//! Content-keyed sketch cache: the layer between *sketch formation* and
+//! *preconditioner assembly* (see `precond`).
+//!
+//! The sketched data `SA` is independent of the regularization — ν enters
+//! `H_S = (SA)ᵀSA + ν²Λ` only through the cheap assembly stage — and the
+//! sampling is a pure function of `(kind, seed, m, n)`. So `SA` is fully
+//! determined by the *content* of `A` plus `(kind, seed, m)`, and any two
+//! requests agreeing on that key (a λ-grid sweep walking its grid, CV
+//! folds refitting, batched service tenants hitting the same dataset) can
+//! share one formation. The cache stores `Arc<Matrix>` payloads under a
+//! [`CacheKey`] with size-bounded LRU eviction; hit/miss/eviction/bytes
+//! counters are surfaced through `coordinator::metrics`.
+//!
+//! Correctness does not depend on the cache: a hit returns bitwise the
+//! same `SA` a fresh formation would produce (same sampling stream, same
+//! deterministic kernels), so eviction or a disabled cache only costs
+//! time, never changes a solution.
+
+use crate::linalg::{DataFingerprint, Matrix};
+use crate::sketch::SketchKind;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Identity of one formed sketch: problem fingerprint × sketch family ×
+/// seed × sketch size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub fingerprint: DataFingerprint,
+    pub kind: SketchKind,
+    pub seed: u64,
+    pub m: usize,
+}
+
+/// Snapshot of the cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes currently held by cached `SA` payloads.
+    pub bytes: u64,
+    /// Entries currently cached.
+    pub entries: u64,
+}
+
+struct Entry {
+    sa: Arc<Matrix>,
+    bytes: usize,
+    /// LRU stamp from the state clock (larger = more recently used).
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    entries: HashMap<CacheKey, Entry>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// A size-bounded LRU store of formed sketches. Thread-safe; formation on
+/// a miss runs *outside* the lock, so concurrent tenants with different
+/// keys never serialize on each other's sketch work. (Two tenants racing
+/// on the *same* cold key may both form it — the loser's copy is dropped;
+/// both formations produce identical bits, so nothing observable differs.)
+pub struct SketchCache {
+    capacity_bytes: usize,
+    state: Mutex<CacheState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SketchCache {
+    pub fn new(capacity_bytes: usize) -> SketchCache {
+        SketchCache {
+            capacity_bytes,
+            state: Mutex::new(CacheState::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Fetch `key`, forming the payload with `form` on a miss. Returns the
+    /// shared payload and whether this call was a hit.
+    pub fn get_or_insert(&self, key: CacheKey, form: impl FnOnce() -> Matrix) -> (Arc<Matrix>, bool) {
+        if let Some(sa) = self.lookup(&key) {
+            return (sa, true);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let sa = Arc::new(form());
+        self.insert(key, sa.clone());
+        (sa, false)
+    }
+
+    /// Fetch without forming; counts a hit or a miss.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<Matrix>> {
+        let found = self.lookup(key);
+        if found.is_none() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    fn lookup(&self, key: &CacheKey) -> Option<Arc<Matrix>> {
+        let mut st = self.state.lock().expect("sketch cache poisoned");
+        st.clock += 1;
+        let stamp = st.clock;
+        match st.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = stamp;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.sa.clone())
+            }
+            None => None,
+        }
+    }
+
+    /// Store a formed payload, evicting least-recently-used entries while
+    /// over capacity. A payload larger than the whole capacity is not
+    /// cached at all (the caller keeps its `Arc`; counters still record
+    /// the miss that produced it).
+    pub fn insert(&self, key: CacheKey, sa: Arc<Matrix>) {
+        let bytes = sa.data.len() * std::mem::size_of::<f64>();
+        if bytes > self.capacity_bytes {
+            return;
+        }
+        let mut st = self.state.lock().expect("sketch cache poisoned");
+        if st.entries.contains_key(&key) {
+            return; // a racing tenant inserted the identical payload first
+        }
+        while st.bytes + bytes > self.capacity_bytes {
+            let victim = st
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("over capacity implies at least one entry");
+            let gone = st.entries.remove(&victim).expect("victim came from this map");
+            st.bytes -= gone.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        st.clock += 1;
+        let stamp = st.clock;
+        st.bytes += bytes;
+        st.entries.insert(key, Entry { sa, bytes, last_used: stamp });
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let st = self.state.lock().expect("sketch cache poisoned");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: st.bytes as u64,
+            entries: st.entries.len() as u64,
+        }
+    }
+}
+
+/// Default capacity of the process-global cache (overridable via the
+/// `SKETCHSOLVE_SKETCH_CACHE_MB` environment variable, read once).
+const DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
+
+/// The process-global cache every registry entry forms sketches through.
+pub fn global() -> &'static SketchCache {
+    static GLOBAL: OnceLock<SketchCache> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let cap = std::env::var("SKETCHSOLVE_SKETCH_CACHE_MB")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|mb| mb << 20)
+            .unwrap_or(DEFAULT_CAPACITY_BYTES);
+        SketchCache::new(cap)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DataOp;
+
+    fn key_for(data: &[f64], rows: usize, cols: usize, seed: u64, m: usize) -> CacheKey {
+        let op = DataOp::Dense(Matrix::from_vec(rows, cols, data.to_vec()));
+        CacheKey { fingerprint: op.fingerprint(), kind: SketchKind::Sjlt { s: 1 }, seed, m }
+    }
+
+    fn payload(rows: usize, cols: usize, fill: f64) -> Matrix {
+        Matrix::from_vec(rows, cols, vec![fill; rows * cols])
+    }
+
+    #[test]
+    fn hit_returns_shared_payload_without_reforming() {
+        let cache = SketchCache::new(1 << 20);
+        let k = key_for(&[1.0, 2.0, 3.0, 4.0], 2, 2, 7, 4);
+        let (first, hit1) = cache.get_or_insert(k, || payload(4, 2, 1.5));
+        assert!(!hit1);
+        let (second, hit2) = cache.get_or_insert(k, || panic!("must not re-form on a hit"));
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&first, &second));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions, st.entries), (1, 1, 0, 1));
+        assert_eq!(st.bytes, (4 * 2 * 8) as u64);
+    }
+
+    #[test]
+    fn lru_eviction_under_small_capacity() {
+        // capacity fits exactly one 4x2 payload (64 bytes)
+        let cache = SketchCache::new(64);
+        let ka = key_for(&[1.0, 0.0, 0.0, 1.0], 2, 2, 1, 4);
+        let kb = key_for(&[2.0, 0.0, 0.0, 2.0], 2, 2, 1, 4);
+        cache.get_or_insert(ka, || payload(4, 2, 1.0));
+        cache.get_or_insert(kb, || payload(4, 2, 2.0)); // evicts a
+        assert!(cache.get(&ka).is_none(), "a was least-recently-used");
+        assert!(cache.get(&kb).is_some());
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, 64);
+        // an oversized payload is passed through, never stored
+        let big = key_for(&[9.0], 1, 1, 1, 32);
+        let (arc, hit) = cache.get_or_insert(big, || payload(32, 2, 3.0));
+        assert!(!hit && arc.rows == 32);
+        assert_eq!(cache.stats().entries, 1, "oversized payload must not be cached");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_misses_at_equal_shape() {
+        let cache = SketchCache::new(1 << 20);
+        let ka = key_for(&[1.0, 2.0, 3.0, 4.0], 2, 2, 42, 4);
+        let kb = key_for(&[1.0, 2.0, 3.0, 5.0], 2, 2, 42, 4); // same dims, different data
+        assert_ne!(ka, kb);
+        cache.get_or_insert(ka, || payload(4, 2, 1.0));
+        let (_, hit) = cache.get_or_insert(kb, || payload(4, 2, 2.0));
+        assert!(!hit, "same-shape different-content data must miss");
+        assert_eq!(cache.stats().misses, 2);
+    }
+}

@@ -46,6 +46,8 @@ pub mod flops {
     }
 }
 
+pub mod cache;
+
 mod gaussian;
 mod sjlt;
 mod srht;
@@ -55,7 +57,7 @@ pub use sjlt::SjltSketch;
 pub use srht::SrhtSketch;
 
 /// The sketch families the library supports.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SketchKind {
     Gaussian,
     Srht,

@@ -1,0 +1,239 @@
+//! Cache-correctness and flop-accounting tests for the sketch reuse
+//! layer: a cached-sketch sweep must be *bitwise* indistinguishable from
+//! cold per-ν solves at any thread count, and a G-point sweep must apply
+//! the sketch exactly once regardless of G.
+//!
+//! Every test uses its own data seed/dims: the sketch cache is
+//! process-global and the test binary runs tests concurrently, so unique
+//! content keeps one test's entries (and flop counts — the apply counter
+//! is thread-local, but cache hits suppress applies) out of another's.
+
+use sketchsolve::api::{self, MethodSpec, SolveRequest, SolveStatus, Stop};
+use sketchsolve::coordinator::{JobSpec, Metrics, RouterPolicy, SolveService};
+use sketchsolve::linalg::Matrix;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::{flops, SketchKind};
+use std::sync::Arc;
+
+fn gauss_problem(n: usize, d: usize, nu: f64, seed: u64) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+    let b = rng.gaussian_vec(d);
+    Problem::ridge(a, b, nu)
+}
+
+const SK: SketchKind = SketchKind::Sjlt { s: 1 };
+
+#[test]
+fn cold_start_sweep_is_bitwise_identical_to_independent_solves_at_1_2_4_threads() {
+    let grid = vec![0.5, 0.05, 0.011];
+    let (n, d, m) = (220, 24, 64);
+    let mut per_thread_solutions: Vec<Vec<Vec<f64>>> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let xs = sketchsolve::par::with_threads(threads, || {
+            let prob = Arc::new(gauss_problem(n, d, 0.1, 0xA11CE));
+            let sweep = SolveRequest::new(prob.clone())
+                .method(MethodSpec::LambdaSweep {
+                    grid: grid.clone(),
+                    inner: Box::new(MethodSpec::PcgFixed { m: Some(m), sketch: SK }),
+                    warm_start: false,
+                })
+                .stop(Stop { max_iters: 25, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+                .seed(7);
+            let out = api::solve(&sweep).expect("sweep runs");
+            assert_eq!(out.status, SolveStatus::Done);
+            assert_eq!(out.followers.len(), grid.len());
+            assert_eq!(out.lambda_grid.as_deref(), Some(&grid[..]));
+            for (gi, nu) in grid.iter().enumerate() {
+                // independent cold solve at this grid point
+                let mut cold_prob = (*prob).clone();
+                cold_prob.nu = *nu;
+                let cold = SolveRequest::new(Arc::new(cold_prob))
+                    .method(MethodSpec::PcgFixed { m: Some(m), sketch: SK })
+                    .stop(Stop { max_iters: 25, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+                    .seed(7);
+                let cold_out = api::solve(&cold).expect("cold solve runs");
+                assert_eq!(
+                    out.followers[gi].x, cold_out.report.x,
+                    "sweep point nu={nu} must be bitwise-identical to a cold solve ({threads} threads)"
+                );
+                assert_eq!(out.followers[gi].iterations, cold_out.report.iterations);
+            }
+            out.followers.iter().map(|r| r.x.clone()).collect::<Vec<_>>()
+        });
+        per_thread_solutions.push(xs);
+    }
+    // determinism contract: same bits at every thread count
+    assert_eq!(per_thread_solutions[0], per_thread_solutions[1]);
+    assert_eq!(per_thread_solutions[0], per_thread_solutions[2]);
+}
+
+#[test]
+fn warm_started_sweep_matches_a_manually_chained_walk() {
+    let grid = vec![0.02, 0.8, 0.15]; // deliberately unsorted
+    let (n, d, m) = (180, 20, 48);
+    let prob = Arc::new(gauss_problem(n, d, 0.1, 0xBEEF1));
+    let stop = Stop { max_iters: 20, rel_tol: 0.0, abs_decrement_tol: 0.0 };
+    let sweep = SolveRequest::new(prob.clone())
+        .method(MethodSpec::LambdaSweep {
+            grid: grid.clone(),
+            inner: Box::new(MethodSpec::PcgFixed { m: Some(m), sketch: SK }),
+            warm_start: true,
+        })
+        .stop(stop)
+        .seed(3);
+    let out = api::solve(&sweep).expect("sweep runs");
+
+    // replay the walk by hand: descending nu, each solve warm-started
+    // from the previous solution
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    order.sort_by(|&i, &j| grid[j].partial_cmp(&grid[i]).unwrap());
+    assert_eq!(out.report.x, out.followers[order[0]].x, "report is the first walked point");
+    let mut x_prev: Option<Vec<f64>> = None;
+    for &gi in &order {
+        let mut cold_prob = (*prob).clone();
+        cold_prob.nu = grid[gi];
+        let mut req = SolveRequest::new(Arc::new(cold_prob))
+            .method(MethodSpec::PcgFixed { m: Some(m), sketch: SK })
+            .stop(stop)
+            .seed(3);
+        if let Some(x0) = &x_prev {
+            req = req.warm_start(x0.clone());
+        }
+        let step = api::solve(&req).expect("chained solve runs");
+        assert_eq!(
+            out.followers[gi].x, step.report.x,
+            "warm chain point nu={} must match the replay",
+            grid[gi]
+        );
+        x_prev = Some(step.report.x);
+    }
+}
+
+#[test]
+fn sweep_applies_the_sketch_exactly_once_regardless_of_grid_size() {
+    // unique dims+seed: nothing else in this binary forms this content
+    let (n, d, m) = (230, 21, 56);
+    let prob = Arc::new(gauss_problem(n, d, 0.1, 0xF10C0));
+    let dense_apply_flops = 2.0 * 1.0 * (n as f64) * (d as f64); // SJLT s=1
+    let run = |grid: Vec<f64>| {
+        let req = SolveRequest::new(prob.clone())
+            .method(MethodSpec::LambdaSweep {
+                grid,
+                inner: Box::new(MethodSpec::PcgFixed { m: Some(m), sketch: SK }),
+                warm_start: true,
+            })
+            .stop(Stop { max_iters: 12, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+            .seed(11);
+        api::solve(&req).expect("sweep runs")
+    };
+
+    flops::reset();
+    let out = run(vec![1.0, 0.3, 0.1, 0.03]);
+    assert_eq!(
+        flops::sketch_apply_total(),
+        dense_apply_flops,
+        "a 4-point sweep applies the sketch exactly once"
+    );
+    // the miss is billed to exactly one grid point, hits to none
+    let billed: Vec<f64> = out.followers.iter().map(|r| r.sketch_flops).collect();
+    assert_eq!(billed.iter().filter(|&&f| f > 0.0).count(), 1);
+
+    flops::reset();
+    let out8 = run(vec![2.0, 1.0, 0.6, 0.3, 0.2, 0.1, 0.05, 0.03]);
+    assert_eq!(
+        flops::sketch_apply_total(),
+        0.0,
+        "an 8-point sweep over the same content re-applies nothing"
+    );
+    assert!(out8.followers.iter().all(|r| r.sketch_flops == 0.0));
+}
+
+#[test]
+fn cv_sweep_scores_the_grid_and_refits_the_winner() {
+    let (n, d) = (150, 10);
+    let mut rng = Rng::seed_from(0xCAFE5);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+    let x_true: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let row: f64 = (0..d).map(|j| a.at(i, j) * x_true[j]).sum();
+            row + 0.01 * rng.gaussian()
+        })
+        .collect();
+    let prob = Arc::new(Problem::ridge_from_labels(a, &y, 0.1));
+    let grid = vec![3.0, 0.5, 0.05];
+    let req = SolveRequest::new(prob)
+        .method(MethodSpec::CvSweep {
+            grid: grid.clone(),
+            folds: 3,
+            inner: Box::new(MethodSpec::PcgFixed { m: Some(32), sketch: SK }),
+        })
+        .stop(Stop { max_iters: 30, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+        .labels(y)
+        .seed(5);
+    let out = api::solve(&req).expect("cv sweep runs");
+    assert_eq!(out.status, SolveStatus::Done);
+    let best = out.best_lambda.expect("cv picks a winner");
+    assert!(grid.contains(&best));
+    let mse = out.cv_mse.expect("cv reports per-point MSE");
+    assert_eq!(mse.len(), grid.len());
+    assert!(mse.iter().all(|e| e.is_finite() && *e >= 0.0));
+    // the winner has the smallest mean MSE
+    let best_idx = grid.iter().position(|g| *g == best).unwrap();
+    assert!(mse.iter().all(|e| *e >= mse[best_idx]));
+    assert!(out.report.method.starts_with("cv_refit:"), "refit report: {}", out.report.method);
+    assert_eq!(out.report.x.len(), d);
+}
+
+#[test]
+fn cv_sweep_without_labels_is_rejected() {
+    let prob = Arc::new(gauss_problem(60, 6, 0.1, 0xD00D1));
+    let req = SolveRequest::new(prob).method(MethodSpec::CvSweep {
+        grid: vec![0.5, 0.1],
+        folds: 2,
+        inner: Box::new(MethodSpec::PcgFixed { m: Some(16), sketch: SK }),
+    });
+    assert!(matches!(api::solve(&req), Err(api::SolveError::InvalidSpec(_))));
+}
+
+#[test]
+fn service_tenants_share_one_cached_sketch() {
+    // unique content for this test; warm the cache with one direct solve
+    // so the subsequent service jobs deterministically hit
+    let (n, d, m) = (210, 18, 40);
+    let prob = Arc::new(gauss_problem(n, d, 0.05, 0x5EAF00D));
+    let fixed = MethodSpec::PcgFixed { m: Some(m), sketch: SK };
+    let warm = SolveRequest::new(prob.clone())
+        .method(fixed.clone())
+        .stop(Stop { max_iters: 8, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+        .seed(21);
+    api::solve(&warm).expect("warm-up solve runs");
+
+    let before = Metrics::sketch_cache_counters();
+    let jobs = 4u64;
+    let svc = SolveService::start(2, RouterPolicy::default());
+    for id in 0..jobs {
+        let req = SolveRequest::new(prob.clone())
+            .method(fixed.clone())
+            .stop(Stop { max_iters: 8, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+            .seed(21);
+        svc.submit(JobSpec::new(id, req));
+    }
+    for _ in 0..jobs {
+        let r = svc.next_result().expect("job completes");
+        r.outcome.expect("tenant solve succeeds");
+    }
+    let after = Metrics::sketch_cache_counters();
+    // other tests may hit/miss concurrently, so assert deltas as floors:
+    // all four tenants found the warmed entry
+    assert!(
+        after.hits >= before.hits + jobs,
+        "expected >= {jobs} new hits, got {} -> {}",
+        before.hits,
+        after.hits
+    );
+    assert!(svc.metrics.summary().contains("sketch_cache: hits="));
+    svc.shutdown();
+}
