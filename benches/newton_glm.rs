@@ -1,0 +1,103 @@
+//! GLM Newton-sketch benchmark: logistic training with a sketched-PCG
+//! inner solve against the dense exact-Newton baseline (`inner = direct`),
+//! swept over thread counts. Emits `BENCH_newton.json` in the same
+//! `{op, threads, median_s, speedup_vs_1t}` record schema as
+//! `BENCH_micro.json`, so `scripts/compare_bench.py` tracks regressions.
+//!
+//! Reps after the first serve every per-step sketch from the
+//! content-keyed cache (the warm-serving steady state, like the sweep
+//! bench); the printed cache counters make the hit pattern visible.
+//!
+//! `cargo bench --bench newton_glm -- [--quick] [--threads N] [--out FILE]`
+
+use sketchsolve::api::{self, MethodSpec, SolveRequest, Stop};
+use sketchsolve::bench_harness::runner::bench_median;
+use sketchsolve::glm::GlmLossKind;
+use sketchsolve::linalg::Matrix;
+use sketchsolve::par;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::util::{Flags, JsonValue};
+use std::sync::Arc;
+
+fn main() {
+    let flags = Flags::parse();
+    let quick = flags.has("quick");
+    let reps = if quick { 3 } else { 5 };
+    if let Some(t) = flags.threads() {
+        par::set_max_threads(t);
+    }
+    let (n, d) = if quick { (2048usize, 64usize) } else { (8192usize, 128usize) };
+    let seed = 0x6E57u64;
+
+    // separable-with-noise logistic data, same recipe as the acceptance test
+    let mut rng = Rng::seed_from(0xFACE);
+    let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    let x_true = rng.gaussian_vec(d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let z: f64 = (0..d).map(|j| a.data[i * d + j] * x_true[j]).sum();
+        y[i] = if z + 0.5 * rng.gaussian() >= 0.0 { 1.0 } else { -1.0 };
+    }
+    let prob = Arc::new(Problem::general(a, vec![0.0; d], vec![1.0; d], 1.0));
+
+    println!("== GLM Newton sketch: logistic training (n={n} d={d}) ==\n");
+
+    let solve_with = |inner: MethodSpec| {
+        let req = SolveRequest::new(prob.clone())
+            .method(MethodSpec::NewtonSketch {
+                loss: GlmLossKind::Logistic,
+                inner: Box::new(inner),
+            })
+            .stop(Stop { max_iters: 50, rel_tol: 0.0, abs_decrement_tol: 1e-10 })
+            .labels(y.clone())
+            .seed(seed);
+        let out = api::solve(&req).expect("newton solve runs");
+        out.report.x
+    };
+
+    let threads: Vec<usize> = vec![1, 2, 4];
+    let mut records: Vec<JsonValue> = Vec::new();
+    for (label, inner) in [
+        ("newton_sketch_pcg", MethodSpec::PcgFixed { m: Some(2 * d), sketch: SketchKind::Sjlt { s: 1 } }),
+        ("newton_exact_direct", MethodSpec::Direct),
+    ] {
+        let mut base_median = 0.0f64;
+        for &t in &threads {
+            let st = par::with_threads(t, || {
+                bench_median(&format!("{label} t={t}"), 1, reps, || solve_with(inner.clone()))
+            });
+            if t == 1 {
+                base_median = st.median_s;
+            }
+            let speedup = if st.median_s > 0.0 { base_median / st.median_s } else { f64::NAN };
+            println!("{}   {:.2}x vs 1t", st.line(), speedup);
+            records.push(JsonValue::obj(vec![
+                ("op", JsonValue::s(label)),
+                ("threads", JsonValue::num(t as f64)),
+                ("median_s", JsonValue::num(st.median_s)),
+                ("speedup_vs_1t", JsonValue::num(speedup)),
+            ]));
+        }
+    }
+
+    let cs = sketchsolve::coordinator::Metrics::sketch_cache_counters();
+    println!(
+        "\nsketch_cache after run: hits={} misses={} evictions={} bytes={}",
+        cs.hits, cs.misses, cs.evictions, cs.bytes
+    );
+
+    let out_path = flags.get_or("out", "BENCH_newton.json");
+    let doc = JsonValue::obj(vec![
+        ("bench", JsonValue::s("newton_glm_logistic")),
+        ("n", JsonValue::num(n as f64)),
+        ("d", JsonValue::num(d as f64)),
+        ("hardware_budget", JsonValue::num(par::max_threads() as f64)),
+        ("records", JsonValue::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("newton records written to {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

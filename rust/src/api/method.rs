@@ -7,6 +7,7 @@
 //! returns one, the CLI parses one, the service queues one — there is no
 //! second routing vocabulary (`coordinator::Route` is a deprecated alias).
 
+use crate::glm::GlmLossKind;
 use crate::sketch::SketchKind;
 
 /// Default step-size parameter ρ for the fixed-sketch IHS / Polyak-IHS
@@ -67,6 +68,15 @@ pub enum MethodSpec {
     /// otherwise `solve` returns the typed `Unsupported` error. `m: None`
     /// walks the available artifact bucket ladder adaptively.
     XlaPcg { m: Option<usize> },
+    /// GLM training by adaptive Newton sketch (arXiv:2105.07291): a damped
+    /// outer Newton loop on `Σ ℓ(a_iᵀx, y_i) + (ν²/2)xᵀΛx` whose per-step
+    /// quadratic model `(AᵀD(x)A + ν²Λ)Δ = -∇f` is solved by `inner` over
+    /// the implicit row-scaled operator `D(x)^{1/2}A`. The outer loop owns
+    /// the sketch size: it threads `m` into an `inner` of `PcgFixed`/`Ihs`
+    /// and doubles it only when a step stalls. Requires raw labels on the
+    /// request (`SolveRequest::labels`); `inner` must be a single-RHS
+    /// quadratic method (`Direct` gives the exact-Newton reference).
+    NewtonSketch { loss: GlmLossKind, inner: Box<MethodSpec> },
 }
 
 impl MethodSpec {
@@ -92,6 +102,7 @@ impl MethodSpec {
             MethodSpec::LambdaSweep { .. } => "lambda_sweep",
             MethodSpec::CvSweep { .. } => "cv_sweep",
             MethodSpec::XlaPcg { .. } => "xla_pcg",
+            MethodSpec::NewtonSketch { .. } => "newton_sketch",
         }
     }
 
@@ -117,6 +128,11 @@ impl MethodSpec {
                 MethodSpec::AdaptivePolyak { sketch, rho: rho.unwrap_or(DEFAULT_FIXED_RHO) }
             }
             "xla_pcg" | "xlapcg" => MethodSpec::XlaPcg { m },
+            // loss defaults to logistic; the CLI overrides it from --loss
+            "newton_sketch" | "newton-sketch" => MethodSpec::NewtonSketch {
+                loss: GlmLossKind::Logistic,
+                inner: Box::new(MethodSpec::PcgFixed { m, sketch }),
+            },
             "multi_rhs" | "multirhs" => {
                 let defaults = crate::adaptive::AdaptiveConfig::default();
                 MethodSpec::MultiRhs {
@@ -149,6 +165,10 @@ mod tests {
             MethodSpec::AdaptiveIhs { sketch: sk },
             MethodSpec::AdaptivePolyak { sketch: sk, rho: DEFAULT_FIXED_RHO },
             MethodSpec::XlaPcg { m: None },
+            MethodSpec::NewtonSketch {
+                loss: GlmLossKind::Logistic,
+                inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
+            },
             {
                 let defaults = crate::adaptive::AdaptiveConfig::default();
                 MethodSpec::MultiRhs {
@@ -166,6 +186,17 @@ mod tests {
             assert_eq!(reparsed, spec);
         }
         assert_eq!(MethodSpec::parse_with("nope", sk, None, None), None);
+    }
+
+    #[test]
+    fn newton_sketch_aliases_and_defaults() {
+        let sk = SketchKind::Sjlt { s: 1 };
+        let want = MethodSpec::NewtonSketch {
+            loss: GlmLossKind::Logistic,
+            inner: Box::new(MethodSpec::PcgFixed { m: Some(64), sketch: sk }),
+        };
+        assert_eq!(MethodSpec::parse_with("newton-sketch", sk, Some(64), None), Some(want.clone()));
+        assert_eq!(MethodSpec::parse_with("newton_sketch", sk, Some(64), None), Some(want));
     }
 
     #[test]

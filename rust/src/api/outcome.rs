@@ -3,6 +3,7 @@
 //! the status says whether the stop criteria were reached or the budget
 //! cut the solve short.
 
+use crate::glm::NewtonRecord;
 use crate::linalg::Matrix;
 use crate::solvers::SolveReport;
 
@@ -57,6 +58,10 @@ pub struct SolveOutcome {
     /// CV sweep only: mean validation MSE per grid point, aligned with
     /// `lambda_grid`.
     pub cv_mse: Option<Vec<f64>>,
+    /// `newton_sketch` only: the outer Newton iteration trace (objective,
+    /// decrement, inner iterations, sketch size, step length per
+    /// iteration).
+    pub newton_trace: Option<Vec<NewtonRecord>>,
 }
 
 impl SolveOutcome {
@@ -70,6 +75,7 @@ impl SolveOutcome {
             lambda_grid: None,
             best_lambda: None,
             cv_mse: None,
+            newton_trace: None,
         }
     }
 
@@ -92,6 +98,7 @@ impl std::fmt::Debug for SolveOutcome {
             .field("followers", &self.followers.len())
             .field("lambda_grid", &self.lambda_grid.as_ref().map(|g| g.len()))
             .field("best_lambda", &self.best_lambda)
+            .field("newton_trace", &self.newton_trace.as_ref().map(|t| t.len()))
             .finish()
     }
 }

@@ -55,8 +55,9 @@ struct MultiRhsEntry;
 struct LambdaSweepEntry;
 struct CvSweepEntry;
 struct XlaPcgEntry;
+struct NewtonSketchEntry;
 
-static REGISTRY: [&dyn Solver; 11] = [
+static REGISTRY: [&dyn Solver; 12] = [
     &DirectEntry,
     &CgEntry,
     &PcgFixedEntry,
@@ -68,6 +69,7 @@ static REGISTRY: [&dyn Solver; 11] = [
     &LambdaSweepEntry,
     &CvSweepEntry,
     &XlaPcgEntry,
+    &NewtonSketchEntry,
 ];
 
 /// All registered method families (stable order: baselines first).
@@ -471,7 +473,10 @@ impl Solver for MultiRhsEntry {
                 });
             }
         }
-        Ok(SolveOutcome { status, report: pilot, x_block: Some(x), followers })
+        let mut out = SolveOutcome::single(status, pilot);
+        out.x_block = Some(x);
+        out.followers = followers;
+        Ok(out)
     }
 }
 
@@ -537,6 +542,34 @@ impl Solver for CvSweepEntry {
         out.best_lambda = Some(grid[outs.best_index]);
         out.cv_mse = Some(outs.cv_mse);
         Ok(out)
+    }
+}
+
+impl Solver for NewtonSketchEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "newton_sketch",
+            summary: "GLM training: damped Newton over a sketched row-scaled Hessian",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::NewtonSketch { .. })
+    }
+
+    /// Delegates to [`glm::solve_newton`](crate::glm::solve_newton): the
+    /// outer damped-Newton loop whose per-step quadratic model routes back
+    /// through this registry under the `inner` spec. Requires raw labels
+    /// on the request.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (loss, inner) = match spec {
+            MethodSpec::NewtonSketch { loss, inner } => (*loss, inner.as_ref()),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        crate::glm::solve_newton(req, loss, inner)
     }
 }
 
@@ -639,6 +672,10 @@ mod tests {
                 inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
             },
             MethodSpec::XlaPcg { m: None },
+            MethodSpec::NewtonSketch {
+                loss: crate::glm::GlmLossKind::Logistic,
+                inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
+            },
         ]
     }
 
@@ -648,7 +685,7 @@ mod tests {
             let entry = lookup(&spec).unwrap_or_else(|| panic!("{spec:?} has no entry"));
             assert_eq!(entry.descriptor().name, spec.name(), "{spec:?}");
         }
-        assert_eq!(registry().len(), 11);
+        assert_eq!(registry().len(), 12);
     }
 
     #[test]

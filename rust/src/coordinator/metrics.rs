@@ -10,6 +10,12 @@ pub struct Metrics {
     jobs_failed: AtomicU64,
     iterations: AtomicU64,
     sketch_doublings: AtomicU64,
+    /// GLM Newton-sketch jobs completed.
+    newton_solves: AtomicU64,
+    /// Outer Newton iterations accumulated across those jobs (the
+    /// `iterations` counter above also includes them; this one isolates
+    /// the GLM share).
+    newton_outer_iters: AtomicU64,
     /// Nanoseconds accumulated per phase.
     ns_solve: AtomicU64,
 }
@@ -28,6 +34,21 @@ impl Metrics {
         self.iterations.fetch_add(iterations as u64, Ordering::Relaxed);
         self.sketch_doublings.fetch_add(doublings as u64, Ordering::Relaxed);
         self.ns_solve.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Record a completed GLM Newton-sketch job (called *in addition to*
+    /// [`Metrics::job_completed`] when the outcome carries a Newton trace).
+    pub fn newton_solve_recorded(&self, outer_iters: usize) {
+        self.newton_solves.fetch_add(1, Ordering::Relaxed);
+        self.newton_outer_iters.fetch_add(outer_iters as u64, Ordering::Relaxed);
+    }
+
+    pub fn newton_solves(&self) -> u64 {
+        self.newton_solves.load(Ordering::Relaxed)
+    }
+
+    pub fn newton_outer_iterations(&self) -> u64 {
+        self.newton_outer_iters.load(Ordering::Relaxed)
     }
 
     pub fn job_failed(&self) {
@@ -70,10 +91,13 @@ impl Metrics {
         let cache = Metrics::sketch_cache_counters();
         format!(
             "jobs {s} submitted / {c} done / {f} failed; {} iters, {} doublings, {:.3}s solving; \
+             newton: {} solves / {} outer iters; \
              sketch_cache: hits={} misses={} evictions={} bytes={}",
             self.total_iterations(),
             self.total_doublings(),
             self.solve_seconds(),
+            self.newton_solves(),
+            self.newton_outer_iterations(),
             cache.hits,
             cache.misses,
             cache.evictions,
@@ -98,7 +122,11 @@ mod tests {
         assert_eq!(m.total_iterations(), 10);
         assert_eq!(m.total_doublings(), 3);
         assert!((m.solve_seconds() - 0.5).abs() < 1e-6);
+        m.newton_solve_recorded(7);
+        assert_eq!(m.newton_solves(), 1);
+        assert_eq!(m.newton_outer_iterations(), 7);
         assert!(m.summary().contains("2 submitted"));
+        assert!(m.summary().contains("newton: 1 solves / 7 outer iters"));
         assert!(m.summary().contains("sketch_cache: hits="));
     }
 

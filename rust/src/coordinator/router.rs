@@ -99,6 +99,25 @@ pub fn route(prob: &Problem, policy: &RouterPolicy) -> MethodSpec {
     MethodSpec::AdaptivePcg { sketch: policy.sketch }
 }
 
+/// Route a GLM training problem: wrap the quadratic routing decision for
+/// the per-step Newton systems into a [`MethodSpec::NewtonSketch`]. The
+/// quadratic table applies unchanged to the inner model `AᵀD(x)A + ν²Λ`
+/// (same shape, same sparsity, conditioning no worse than the ν-only
+/// proxy): tiny problems get exact Newton (`Direct` inner),
+/// well-conditioned ones a CG inner, everything else the sketched
+/// `PcgFixed` inner whose `m` the outer loop then owns and grows on
+/// stall (the adaptive mechanism lives *outside* the inner solve here, so
+/// an `AdaptivePcg` inner would double the adaptivity and fight the
+/// carry-over policy).
+pub fn route_glm(prob: &Problem, policy: &RouterPolicy, loss: crate::glm::GlmLossKind) -> MethodSpec {
+    let inner = match route(prob, policy) {
+        MethodSpec::Direct => MethodSpec::Direct,
+        cg @ MethodSpec::Cg { .. } => cg,
+        _ => MethodSpec::PcgFixed { m: None, sketch: policy.sketch },
+    };
+    MethodSpec::NewtonSketch { loss, inner: Box::new(inner) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +213,35 @@ mod tests {
             !matches!(route(&p, &policy), MethodSpec::Direct),
             "d^2 > direct_nd_max must veto the direct path"
         );
+    }
+
+    #[test]
+    fn glm_routing_wraps_the_quadratic_decision() {
+        use crate::glm::GlmLossKind;
+        // tiny → exact Newton (Direct inner)
+        let tiny = gauss_problem(100, 10, 0.1, 11);
+        match route_glm(&tiny, &RouterPolicy::default(), GlmLossKind::Logistic) {
+            MethodSpec::NewtonSketch { loss, inner } => {
+                assert_eq!(loss, GlmLossKind::Logistic);
+                assert_eq!(*inner, MethodSpec::Direct);
+            }
+            other => panic!("expected NewtonSketch, got {other:?}"),
+        }
+        // ill-conditioned → sketched PcgFixed inner (never adaptive: the
+        // outer loop owns the sketch size)
+        let mut a = Matrix::zeros(1024, 128);
+        for j in 0..128 {
+            a.set(j, j, 0.9f64.powi(j as i32));
+        }
+        let p = Problem::ridge(a, vec![1.0; 128], 1e-6);
+        let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
+        match route_glm(&p, &policy, GlmLossKind::Poisson) {
+            MethodSpec::NewtonSketch { loss, inner } => {
+                assert_eq!(loss, GlmLossKind::Poisson);
+                assert!(matches!(*inner, MethodSpec::PcgFixed { m: None, .. }));
+            }
+            other => panic!("expected NewtonSketch, got {other:?}"),
+        }
     }
 
     #[test]

@@ -138,6 +138,9 @@ impl SolveService {
                                 out.report.sketch_doublings,
                                 out.report.secs,
                             );
+                            if let Some(nt) = &out.newton_trace {
+                                metrics.newton_solve_recorded(nt.len());
+                            }
                             status.lock().unwrap().set(job.id, JobStatus::Done);
                         }
                         Err(e) => {

@@ -31,6 +31,9 @@ pub enum LoadError {
     Parse { line: usize, msg: String },
     Inconsistent { line: usize, expected: usize, got: usize },
     Empty,
+    /// Binary-label normalization found labels outside a recognizable
+    /// two-class encoding (message lists the distinct values seen).
+    Labels(String),
 }
 
 impl std::fmt::Display for LoadError {
@@ -42,6 +45,7 @@ impl std::fmt::Display for LoadError {
                 write!(f, "line {line}: expected {expected} fields, got {got}")
             }
             LoadError::Empty => write!(f, "no data rows"),
+            LoadError::Labels(msg) => write!(f, "labels: {msg}"),
         }
     }
 }
@@ -192,6 +196,49 @@ pub fn load_csv(path: &str, label_col: Option<usize>) -> Result<LoadedDataset, L
     parse_csv(&text, label_col)
 }
 
+/// Normalize binary classification labels to the `{-1, +1}` encoding the
+/// logistic loss expects, in place:
+/// - already `{-1, +1}` (or a single one of them): left untouched;
+/// - `{0, 1}` (or a single one of them): mapped `0 → -1`, `1 → +1` — the
+///   common SVMLight/OpenML download encoding;
+/// - anything else (a third distinct value, or two values that are
+///   neither encoding): [`LoadError::Labels`] naming the distinct values
+///   seen, so the caller learns *what* was in the file instead of getting
+///   a validation failure deep inside the GLM driver.
+pub fn normalize_binary_labels(labels: &mut [f64]) -> Result<(), LoadError> {
+    let mut distinct: Vec<f64> = Vec::new();
+    for &v in labels.iter() {
+        if !distinct.iter().any(|&u| u == v) {
+            distinct.push(v);
+            if distinct.len() > 2 {
+                distinct.sort_by(f64::total_cmp);
+                return Err(LoadError::Labels(format!(
+                    "expected two classes, found {} distinct values (first three: {:?})",
+                    distinct.len(),
+                    &distinct[..3]
+                )));
+            }
+        }
+    }
+    if distinct.is_empty() {
+        return Err(LoadError::Empty);
+    }
+    let is_subset_of = |allowed: &[f64]| distinct.iter().all(|v| allowed.contains(v));
+    if is_subset_of(&[-1.0, 1.0]) {
+        return Ok(());
+    }
+    if is_subset_of(&[0.0, 1.0]) {
+        for v in labels.iter_mut() {
+            *v = if *v == 0.0 { -1.0 } else { 1.0 };
+        }
+        return Ok(());
+    }
+    distinct.sort_by(f64::total_cmp);
+    Err(LoadError::Labels(format!(
+        "expected {{-1,+1}} or {{0,1}} classes, found {distinct:?}"
+    )))
+}
+
 /// Standardize features in place: zero mean, unit variance per column
 /// (constant columns are left centered).
 pub fn standardize(a: &mut Matrix) {
@@ -304,6 +351,39 @@ f1,f2,label
         assert!(matches!(parse_svmlight("abc 1:2\n"), Err(LoadError::Parse { line: 1, .. })));
         assert!(matches!(parse_svmlight("1 nocolon\n"), Err(LoadError::Parse { line: 1, .. })));
         assert!(matches!(parse_svmlight("1 x:2.0\n"), Err(LoadError::Parse { line: 1, .. })));
+    }
+
+    #[test]
+    fn binary_labels_normalize_to_plus_minus_one() {
+        // {0,1} → {-1,+1}
+        let mut zero_one = vec![0.0, 1.0, 1.0, 0.0];
+        normalize_binary_labels(&mut zero_one).unwrap();
+        assert_eq!(zero_one, vec![-1.0, 1.0, 1.0, -1.0]);
+        // already signed: untouched
+        let mut signed = vec![-1.0, 1.0, -1.0];
+        normalize_binary_labels(&mut signed).unwrap();
+        assert_eq!(signed, vec![-1.0, 1.0, -1.0]);
+        // single-class degenerate inputs pass through both encodings
+        let mut ones = vec![1.0, 1.0];
+        normalize_binary_labels(&mut ones).unwrap();
+        assert_eq!(ones, vec![1.0, 1.0]);
+        let mut zeros = vec![0.0, 0.0];
+        normalize_binary_labels(&mut zeros).unwrap();
+        assert_eq!(zeros, vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn label_normalization_rejects_nonbinary() {
+        // three distinct classes: clear error naming the values
+        let mut multi = vec![0.0, 1.0, 2.0];
+        match normalize_binary_labels(&mut multi) {
+            Err(LoadError::Labels(msg)) => assert!(msg.contains("distinct"), "{msg}"),
+            other => panic!("expected Labels error, got {other:?}"),
+        }
+        // two classes in an unrecognized encoding
+        let mut weird = vec![3.0, 7.0, 3.0];
+        assert!(matches!(normalize_binary_labels(&mut weird), Err(LoadError::Labels(_))));
+        assert!(matches!(normalize_binary_labels(&mut []), Err(LoadError::Empty)));
     }
 
     #[test]

@@ -7,6 +7,9 @@ pub mod proxies;
 pub mod random_features;
 pub mod synthetic;
 
-pub use loader::{load_csv, load_svmlight, parse_csv, parse_svmlight, LoadedSparseDataset};
+pub use loader::{
+    load_csv, load_svmlight, normalize_binary_labels, parse_csv, parse_svmlight,
+    LoadedSparseDataset,
+};
 pub use proxies::{proxy_spec, ProxyName};
 pub use synthetic::{Dataset, SparseDataset, SparseSyntheticSpec, SyntheticSpec};

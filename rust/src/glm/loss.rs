@@ -1,0 +1,242 @@
+//! GLM loss functions: per-margin value/derivative/curvature plus the
+//! self-concordance constant the damped-Newton phase switch relies on.
+//!
+//! A GLM training objective is `f(x) = Σ_i ℓ(a_iᵀx, y_i) + (ν²/2) xᵀΛx`.
+//! Everything the Newton-sketch driver needs from the loss is pointwise:
+//! `ℓ(z, y)`, `ℓ'(z, y)` and `ℓ''(z, y)` evaluated at the margins
+//! `z = Ax`, so adding a loss is implementing three scalar functions (and
+//! a label validator). The Hessian is then `AᵀD(x)A + ν²Λ` with
+//! `D(x) = diag(ℓ''(z_i, y_i))` — an implicit row-scaled operator, never
+//! a materialized weighted copy of `A` (see `DataOp::RowScaled`).
+
+/// The loss families the `newton_sketch` method accepts. Carried inside
+/// [`MethodSpec::NewtonSketch`](crate::api::MethodSpec), so it derives the
+/// same value-type traits as the spec enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlmLossKind {
+    /// `ℓ(z, y) = ln(1 + exp(-y z))`, labels `y ∈ {-1, +1}`.
+    Logistic,
+    /// `ℓ(z, y) = exp(z) - y z`, counts `y >= 0` (log-link Poisson
+    /// regression, dropping the x-independent `ln(y!)` term).
+    Poisson,
+}
+
+impl GlmLossKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlmLossKind::Logistic => "logistic",
+            GlmLossKind::Poisson => "poisson",
+        }
+    }
+
+    /// Parse a CLI token (`--loss <name>`).
+    pub fn parse(s: &str) -> Option<GlmLossKind> {
+        match s {
+            "logistic" => Some(GlmLossKind::Logistic),
+            "poisson" => Some(GlmLossKind::Poisson),
+            _ => None,
+        }
+    }
+
+    /// The shared trait object for this family.
+    pub fn loss(&self) -> &'static dyn GlmLoss {
+        match self {
+            GlmLossKind::Logistic => &LogisticLoss,
+            GlmLossKind::Poisson => &PoissonLoss,
+        }
+    }
+}
+
+/// A pointwise GLM loss `ℓ(z, y)` with first and second derivatives in
+/// the margin `z`. All three must be numerically stable over the whole
+/// real line — the Newton driver evaluates them at every trial point of
+/// every line search.
+pub trait GlmLoss: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `ℓ(z, y)`.
+    fn value(&self, z: f64, y: f64) -> f64;
+
+    /// `∂ℓ/∂z`.
+    fn dloss(&self, z: f64, y: f64) -> f64;
+
+    /// `∂²ℓ/∂z²` (the Hessian weight `D_ii`; always `>= 0` for a convex
+    /// loss).
+    fn d2loss(&self, z: f64, y: f64) -> f64;
+
+    /// Self-concordance constant `M` with respect to which the damped
+    /// Newton phase analysis holds (both shipped losses are standard
+    /// self-concordant-like with `M = 1` after the usual rescaling; the
+    /// driver only uses it to place the damped/quadratic phase switch).
+    fn self_concordance(&self) -> f64 {
+        1.0
+    }
+
+    /// Check the label vector is in this family's domain. Returns a
+    /// human-readable complaint on failure.
+    fn validate_labels(&self, y: &[f64]) -> Result<(), String>;
+}
+
+/// Numerically stable sigmoid `σ(u) = 1/(1 + e^{-u})`.
+fn sigmoid(u: f64) -> f64 {
+    if u >= 0.0 {
+        1.0 / (1.0 + (-u).exp())
+    } else {
+        let e = u.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Margin clamp for the Poisson exponentials: beyond ±500, `exp` is
+/// already `inf`/`0` in f64; the clamp keeps value/derivative finite so a
+/// wild line-search trial point degrades gracefully instead of poisoning
+/// the objective with `inf - inf`.
+const POISSON_Z_CLAMP: f64 = 500.0;
+
+pub struct LogisticLoss;
+
+impl GlmLoss for LogisticLoss {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    /// `ln(1 + exp(-y z))` via the standard overflow-free split on the
+    /// sign of `t = -y z`: for `t > 0`, `ln(1+e^t) = t + ln(1+e^{-t})`.
+    fn value(&self, z: f64, y: f64) -> f64 {
+        let t = -y * z;
+        if t > 0.0 {
+            t + (-t).exp().ln_1p()
+        } else {
+            t.exp().ln_1p()
+        }
+    }
+
+    /// `-y σ(-y z)`.
+    fn dloss(&self, z: f64, y: f64) -> f64 {
+        -y * sigmoid(-y * z)
+    }
+
+    /// `σ(y z) σ(-y z) = p(1-p) ∈ (0, 1/4]`.
+    fn d2loss(&self, z: f64, y: f64) -> f64 {
+        let p = sigmoid(y * z);
+        p * (1.0 - p)
+    }
+
+    fn validate_labels(&self, y: &[f64]) -> Result<(), String> {
+        for (i, &v) in y.iter().enumerate() {
+            if v != 1.0 && v != -1.0 {
+                return Err(format!(
+                    "logistic labels must be -1/+1; label[{i}] = {v} \
+                     (load 0/1 data through normalize_binary_labels)"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub struct PoissonLoss;
+
+impl GlmLoss for PoissonLoss {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    /// `exp(z) - y z` (negative log-likelihood up to the constant
+    /// `ln(y!)`).
+    fn value(&self, z: f64, y: f64) -> f64 {
+        let zc = z.clamp(-POISSON_Z_CLAMP, POISSON_Z_CLAMP);
+        zc.exp() - y * z
+    }
+
+    /// `exp(z) - y`.
+    fn dloss(&self, z: f64, y: f64) -> f64 {
+        z.clamp(-POISSON_Z_CLAMP, POISSON_Z_CLAMP).exp() - y
+    }
+
+    /// `exp(z)`.
+    fn d2loss(&self, z: f64, _y: f64) -> f64 {
+        z.clamp(-POISSON_Z_CLAMP, POISSON_Z_CLAMP).exp()
+    }
+
+    fn validate_labels(&self, y: &[f64]) -> Result<(), String> {
+        for (i, &v) in y.iter().enumerate() {
+            if !(v >= 0.0) || !v.is_finite() {
+                return Err(format!("poisson labels must be finite and >= 0; label[{i}] = {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_grad_matches, assert_hess_diag_matches};
+
+    #[test]
+    fn names_and_parse_round_trip() {
+        for kind in [GlmLossKind::Logistic, GlmLossKind::Poisson] {
+            assert_eq!(GlmLossKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.loss().name(), kind.name());
+            assert_eq!(kind.loss().self_concordance(), 1.0);
+        }
+        assert_eq!(GlmLossKind::parse("hinge"), None);
+    }
+
+    #[test]
+    fn logistic_derivatives_match_finite_differences() {
+        let loss = GlmLossKind::Logistic.loss();
+        for &y in &[-1.0, 1.0] {
+            for &z in &[-3.0, -0.7, 0.0, 0.4, 2.5] {
+                assert_grad_matches(|u| loss.value(u, y), |u| loss.dloss(u, y), z, 1e-6);
+                assert_hess_diag_matches(|u| loss.dloss(u, y), |u| loss.d2loss(u, y), z, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_derivatives_match_finite_differences() {
+        let loss = GlmLossKind::Poisson.loss();
+        for &y in &[0.0, 1.0, 5.0] {
+            for &z in &[-2.0, -0.3, 0.0, 0.8, 1.9] {
+                assert_grad_matches(|u| loss.value(u, y), |u| loss.dloss(u, y), z, 1e-6);
+                assert_hess_diag_matches(|u| loss.dloss(u, y), |u| loss.d2loss(u, y), z, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_is_stable_at_extreme_margins() {
+        let loss = GlmLossKind::Logistic.loss();
+        // huge correct margin: loss ~ 0, no overflow
+        assert!(loss.value(1e4, 1.0) < 1e-300);
+        // huge wrong margin: loss ~ |z|, still finite
+        let v = loss.value(-1e4, 1.0);
+        assert!(v.is_finite() && (v - 1e4).abs() < 1.0);
+        assert!(loss.d2loss(1e4, 1.0) >= 0.0);
+        assert!(loss.d2loss(-1e4, 1.0) >= 0.0);
+        // curvature peaks at the decision boundary
+        assert!((loss.d2loss(0.0, 1.0) - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn poisson_is_stable_at_extreme_margins() {
+        let loss = GlmLossKind::Poisson.loss();
+        assert!(loss.value(1e4, 3.0).is_finite());
+        assert!(loss.dloss(1e4, 3.0).is_finite());
+        assert!(loss.d2loss(1e4, 3.0).is_finite());
+        assert_eq!(loss.d2loss(-1e4, 3.0), (-POISSON_Z_CLAMP).exp());
+    }
+
+    #[test]
+    fn label_validation_enforces_domains() {
+        let logit = GlmLossKind::Logistic.loss();
+        assert!(logit.validate_labels(&[1.0, -1.0, 1.0]).is_ok());
+        assert!(logit.validate_labels(&[1.0, 0.0]).is_err());
+        let pois = GlmLossKind::Poisson.loss();
+        assert!(pois.validate_labels(&[0.0, 3.0, 7.0]).is_ok());
+        assert!(pois.validate_labels(&[-1.0]).is_err());
+        assert!(pois.validate_labels(&[f64::NAN]).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! GLM training: adaptive Newton sketch over implicit row-scaled
+//! operators (the arXiv:2105.07291 extension of the crate's quadratic
+//! machinery).
+//!
+//! The subsystem has two halves:
+//!
+//! - [`loss`]: the pointwise [`GlmLoss`] trait (value / derivative /
+//!   curvature in the margin, self-concordance constant, label domain)
+//!   with logistic and Poisson instances.
+//! - [`newton`]: the damped outer Newton loop. Each step's local
+//!   quadratic model `(AᵀD(x)A + ν²Λ)Δ = -∇f` is *exactly* a regularized
+//!   least-squares [`Problem`](crate::problem::Problem) over the implicit
+//!   operator `D(x)^{1/2}A` — represented as
+//!   [`DataOp::RowScaled`](crate::linalg::DataOp) so sparse data stays
+//!   CSR and the SJLT apply stays `O(s · nnz)` — solved by one
+//!   [`SolveRequest`](crate::api::SolveRequest) through the ordinary
+//!   registry. The sketch size is owned by the outer loop and carried
+//!   across iterations, growing only on stall.
+//!
+//! Entry point for users: `MethodSpec::NewtonSketch { loss, inner }`
+//! through `api::solve` (CLI: `--method newton-sketch --loss logistic`).
+
+pub mod loss;
+pub mod newton;
+
+pub use loss::{GlmLoss, GlmLossKind, LogisticLoss, PoissonLoss};
+pub use newton::{solve_newton, NewtonRecord};

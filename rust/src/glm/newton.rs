@@ -1,0 +1,293 @@
+//! The adaptive Newton-sketch driver for GLM training (arXiv:2105.07291
+//! applied to this crate's machinery).
+//!
+//! Outer loop: damped Newton on the self-concordant objective
+//! `f(x) = Σ_i ℓ(a_iᵀx, y_i) + (ν²/2) xᵀΛx`. Each step solves the local
+//! quadratic model
+//!
+//! ```text
+//! (AᵀD(x)A + ν²Λ) Δ = -∇f(x),   D(x) = diag(ℓ''(z_i, y_i)),  z = Ax
+//! ```
+//!
+//! which is exactly a regularized least-squares [`Problem`] over the
+//! *implicit* row-scaled operator `D(x)^{1/2}·A` — so the inner solve is
+//! one [`SolveRequest`] routed through the ordinary registry (sketched
+//! PCG by default, but any quadratic method spec works, including
+//! `direct` as the exact-Newton reference).
+//!
+//! Sketch-size carry-over: the outer loop owns the sketch size `m` and
+//! threads it into the inner `PcgFixed` spec, growing it (doubling,
+//! capped at `next_pow2(n)`) only when a step *stalls* — the inner solve
+//! hit its iteration cap or the Newton decrement failed to contract.
+//! Because each iterate's weights `D(x)` change the operator fingerprint,
+//! a cold run forms one sketch per outer iteration; a warm re-run of the
+//! same request replays the same trajectory and serves every formation
+//! from the content-keyed cache (zero new formations).
+
+use crate::api::{MethodSpec, SolveError, SolveOutcome, SolveRequest, SolveStatus, Stop};
+use crate::glm::loss::GlmLossKind;
+use crate::linalg::{next_pow2, DataOp};
+use crate::problem::Problem;
+use crate::solvers::{IterRecord, SolveReport};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Decrement-contraction threshold for the stall test: an accepted step
+/// whose `λ²` is not below `0.9 ×` the previous one counts as a stall and
+/// triggers a sketch-size doubling for the *next* step.
+const STALL_CONTRACTION: f64 = 0.9;
+
+/// Default outer stopping tolerance on `λ²/2` when the request's
+/// `abs_decrement_tol` is unset (0.0).
+const DEFAULT_DECREMENT_TOL: f64 = 1e-9;
+
+/// Iteration cap handed to every inner quadratic solve; an inner solve
+/// that consumes the whole cap is the other stall signal.
+const INNER_MAX_ITERS: usize = 100;
+
+/// Relative tolerance for the inner quadratic solves (each family's
+/// native measure; tight so the Newton direction is accurate).
+const INNER_REL_TOL: f64 = 1e-12;
+
+/// Armijo sufficient-decrease constant for the backtracking line search.
+const ARMIJO_C: f64 = 1e-4;
+
+/// One accepted outer Newton iteration (the GLM analogue of
+/// [`IterRecord`], carried on [`SolveOutcome::newton_trace`]).
+#[derive(Clone, Debug)]
+pub struct NewtonRecord {
+    /// Outer iteration index.
+    pub k: usize,
+    /// Objective `f(x_{k+1})` after the step.
+    pub objective: f64,
+    /// Newton decrement estimate `λ² = -∇fᵀΔ` at `x_k`.
+    pub decrement: f64,
+    /// Iterations the inner quadratic solve spent.
+    pub inner_iters: usize,
+    /// Sketch size the inner solve ran with (0 for unsketched inners).
+    pub m: usize,
+    /// Accepted step length `t` (0.0 when the line search failed).
+    pub step: f64,
+    /// Whether the inner solve formed a fresh sketch (cache miss);
+    /// `false` on a cache hit or an unsketched inner.
+    pub formed_sketch: bool,
+    /// Cumulative wall-clock seconds since the outer solve started.
+    pub secs: f64,
+}
+
+/// Run the damped Newton-sketch loop. `req.problem` supplies the data
+/// operator `A`, the regularization `(Λ, ν)` and the dimensions; its `b`
+/// is ignored (the GLM objective is built from `req.labels`, which must
+/// be present and valid for `loss_kind`). Honors warm start, budget,
+/// observer, and `stop.max_iters` / `stop.abs_decrement_tol` as the outer
+/// criteria.
+pub fn solve_newton(
+    req: &SolveRequest,
+    loss_kind: GlmLossKind,
+    inner: &MethodSpec,
+) -> Result<SolveOutcome, SolveError> {
+    match inner {
+        MethodSpec::NewtonSketch { .. } => {
+            return Err(SolveError::InvalidSpec(
+                "newton_sketch inner method must be a quadratic solver, not newton_sketch".into(),
+            ));
+        }
+        MethodSpec::MultiRhs { .. } | MethodSpec::LambdaSweep { .. } | MethodSpec::CvSweep { .. } => {
+            return Err(SolveError::InvalidSpec(format!(
+                "newton_sketch inner method must be a single-RHS quadratic solver, got {}",
+                inner.name()
+            )));
+        }
+        _ => {}
+    }
+    let prob = &*req.problem;
+    let (n, d) = (prob.n(), prob.d());
+    let y = req
+        .labels
+        .as_ref()
+        .ok_or_else(|| SolveError::InvalidSpec("newton_sketch requires SolveRequest::labels".into()))?;
+    if y.len() != n {
+        return Err(SolveError::InvalidSpec(format!(
+            "newton_sketch labels have {} entries, problem n={n}",
+            y.len()
+        )));
+    }
+    let loss = loss_kind.loss();
+    loss.validate_labels(y).map_err(SolveError::InvalidSpec)?;
+
+    let ctx = req.ctx();
+    let start = Instant::now();
+    let nu2 = prob.nu * prob.nu;
+    let mut x = ctx.x0_vec(d);
+    let mut z = vec![0.0; n];
+    prob.a.matvec_into(&x, &mut z);
+
+    let objective = |z: &[f64], x: &[f64]| -> f64 {
+        let data: f64 = z.iter().zip(y.iter()).map(|(&zi, &yi)| loss.value(zi, yi)).sum();
+        let reg: f64 = x.iter().zip(&prob.lambda).map(|(&xj, &lj)| lj * xj * xj).sum();
+        data + 0.5 * nu2 * reg
+    };
+    let mut f_cur = objective(&z, &x);
+
+    // exact-error tracing scale, when a reference solution was provided
+    let err0 = req.x_star.as_ref().map(|xs| {
+        let e: f64 = x.iter().zip(xs.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+        e.max(f64::MIN_POSITIVE)
+    });
+
+    // the carried sketch size: seeded from the inner spec's m (or the 2d
+    // oblivious default), grown only on stall, never reset
+    let m_cap = next_pow2(n).max(1);
+    let m_controlled = matches!(inner, MethodSpec::PcgFixed { .. } | MethodSpec::Ihs { .. });
+    let mut carried_m = match inner {
+        MethodSpec::PcgFixed { m: Some(m0), .. } | MethodSpec::Ihs { m: Some(m0), .. } => {
+            (*m0).max(1).min(m_cap)
+        }
+        _ => (2 * d).max(1).min(m_cap),
+    };
+    let inner_stop = Stop {
+        max_iters: INNER_MAX_ITERS,
+        rel_tol: INNER_REL_TOL,
+        abs_decrement_tol: 0.0,
+    };
+    let tol = if req.stop.abs_decrement_tol > 0.0 {
+        req.stop.abs_decrement_tol
+    } else {
+        DEFAULT_DECREMENT_TOL
+    };
+
+    let mut status = SolveStatus::Done;
+    let mut newton_trace: Vec<NewtonRecord> = Vec::new();
+    let mut outer_trace: Vec<IterRecord> = Vec::new();
+    let mut sketch_flops = 0.0;
+    let mut factor_flops = 0.0;
+    let mut doublings = 0usize;
+    let mut last_final_m = 0usize;
+    let mut prev_lambda2: Option<f64> = None;
+    let mut g = vec![0.0; d];
+    let mut dl = vec![0.0; n];
+
+    for k in 0..req.stop.max_iters {
+        if let Some(s) = req.budget.exhausted() {
+            status = s;
+            break;
+        }
+        // gradient g = Aᵀ ℓ'(z) + ν² Λ∘x and Hessian weights w = ℓ''(z)
+        for ((t, &zi), &yi) in dl.iter_mut().zip(z.iter()).zip(y.iter()) {
+            *t = loss.dloss(zi, yi);
+        }
+        prob.a.matvec_t_into(&dl, &mut g);
+        for ((gj, &xj), &lj) in g.iter_mut().zip(x.iter()).zip(&prob.lambda) {
+            *gj += nu2 * lj * xj;
+        }
+        let sqrt_w: Vec<f64> =
+            z.iter().zip(y.iter()).map(|(&zi, &yi)| loss.d2loss(zi, yi).max(0.0).sqrt()).collect();
+
+        // inner quadratic model: min_Δ 1/2 Δᵀ(AᵀDA + ν²Λ)Δ + gᵀΔ, i.e. a
+        // Problem over the implicit row-scaled operator with b = -g
+        let weighted = DataOp::row_scaled(prob.a.clone(), sqrt_w);
+        let neg_g: Vec<f64> = g.iter().map(|v| -v).collect();
+        let inner_prob = Problem::general(weighted, neg_g, prob.lambda.clone(), prob.nu);
+        let inner_spec = match inner {
+            MethodSpec::PcgFixed { sketch, .. } => {
+                MethodSpec::PcgFixed { m: Some(carried_m), sketch: *sketch }
+            }
+            MethodSpec::Ihs { sketch, rho, .. } => {
+                MethodSpec::Ihs { m: Some(carried_m), sketch: *sketch, rho: *rho }
+            }
+            other => other.clone(),
+        };
+        let inner_req = SolveRequest::new(Arc::new(inner_prob))
+            .method(inner_spec)
+            .stop(inner_stop)
+            .budget(req.budget.clone())
+            .seed(req.seed);
+        let inner_out = crate::api::solve(&inner_req)?;
+        if inner_out.status.aborted() {
+            status = inner_out.status;
+            break;
+        }
+        let irep = inner_out.report;
+        let delta = &irep.x;
+        sketch_flops += irep.sketch_flops;
+        factor_flops += irep.factor_flops;
+        let formed = irep.sketch_flops > 0.0;
+        last_final_m = irep.final_m;
+        let lambda2: f64 = (-g.iter().zip(delta).map(|(a, b)| a * b).sum::<f64>()).max(0.0);
+
+        // damped phase (Newton decrement large): start from t = 1/(1+λ);
+        // quadratic phase: full step. Backtrack on the true objective —
+        // one A·Δ matvec, then each trial is O(n + d).
+        let lam = lambda2.sqrt();
+        let mut t = if lam > 0.25 { 1.0 / (1.0 + lam) } else { 1.0 };
+        let mut adelta = vec![0.0; n];
+        prob.a.matvec_into(delta, &mut adelta);
+        let mut accepted = false;
+        for _ in 0..40 {
+            let z_try: Vec<f64> = z.iter().zip(&adelta).map(|(a, b)| a + t * b).collect();
+            let x_try: Vec<f64> = x.iter().zip(delta).map(|(a, b)| a + t * b).collect();
+            let f_try = objective(&z_try, &x_try);
+            if f_try <= f_cur - ARMIJO_C * t * lambda2 {
+                x = x_try;
+                z = z_try;
+                f_cur = f_try;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            t = 0.0;
+        }
+
+        let secs = start.elapsed().as_secs_f64();
+        newton_trace.push(NewtonRecord {
+            k,
+            objective: f_cur,
+            decrement: lambda2,
+            inner_iters: irep.iterations,
+            m: irep.final_m,
+            step: t,
+            formed_sketch: formed,
+            secs,
+        });
+        let delta_rel = match (&req.x_star, err0) {
+            (Some(xs), Some(e0)) => {
+                let e: f64 = x.iter().zip(xs.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+                e / e0
+            }
+            _ => f64::NAN,
+        };
+        let rec = IterRecord { t: k, secs, m: irep.final_m, delta_tilde: lambda2, delta_rel };
+        ctx.emit(&rec);
+        outer_trace.push(rec);
+
+        if lambda2 / 2.0 <= tol || !accepted {
+            break;
+        }
+        // stall → grow the carried sketch size for the *next* step
+        let stalled = irep.iterations >= inner_stop.max_iters
+            || prev_lambda2.is_some_and(|p| lambda2 > STALL_CONTRACTION * p);
+        if stalled && m_controlled && carried_m < m_cap {
+            carried_m = (carried_m * 2).min(m_cap);
+            doublings += 1;
+        }
+        prev_lambda2 = Some(lambda2);
+    }
+
+    let iterations = newton_trace.len();
+    let report = SolveReport {
+        method: "newton_sketch".into(),
+        x,
+        iterations,
+        trace: outer_trace,
+        final_m: if last_final_m > 0 { last_final_m } else if m_controlled { carried_m } else { 0 },
+        sketch_doublings: doublings,
+        secs: start.elapsed().as_secs_f64(),
+        sketch_flops,
+        factor_flops,
+    };
+    let mut out = SolveOutcome::single(status, report);
+    out.newton_trace = Some(newton_trace);
+    Ok(out)
+}

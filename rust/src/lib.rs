@@ -18,6 +18,9 @@
 //!   dense, CSR-sparse and implicit column-scaled matrices are
 //!   first-class, so sketches apply at `O(nnz)` where the math allows and
 //!   SVMLight datasets load without densification.
+//! - **L3 glm (`glm`)**: GLM training — a damped Newton-sketch outer loop
+//!   (logistic / Poisson losses) whose per-step quadratic model is an
+//!   implicit row-scaled operator solved through the same registry.
 //! - **L3 (this crate)**: solver coordinator — adaptive controller,
 //!   request batching for multi-RHS (multiclass) problems, routing, metrics.
 //! - **L3 execution (`par`)**: a zero-dependency scoped-thread parallel
@@ -35,6 +38,7 @@ pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod glm;
 pub mod linalg;
 pub mod par;
 pub mod precond;

@@ -15,6 +15,12 @@
 //! - [`DataOp::ColScaled`] — an implicit `inner · diag(scale)` view. This
 //!   is how `A Λ^{-1/2}` is expressed (Woodbury `W_S` formation, the dual
 //!   program) without materializing a rescaled copy of the data.
+//! - [`DataOp::RowScaled`] — an implicit `diag(scale) · inner` view, the
+//!   transpose-side twin. This is how the GLM Newton-step data
+//!   `D(x)^{1/2} A` is expressed (Hessian `AᵀD(x)A`) without densifying a
+//!   weighted copy per outer iteration; sparse data stays CSR and sketch
+//!   application folds the row scale into the sketch side, keeping
+//!   nnz-proportional cost.
 //!
 //! All kernels keep the `par` determinism contract: partitions depend only
 //! on shape/structure, outputs accumulate in the sequential order, results
@@ -37,6 +43,8 @@ pub enum DataOp {
     CsrSparse(Csr),
     /// Implicit `inner · diag(scale)` (scale has length `inner.cols()`).
     ColScaled { inner: Box<DataOp>, scale: Vec<f64> },
+    /// Implicit `diag(scale) · inner` (scale has length `inner.rows()`).
+    RowScaled { inner: Box<DataOp>, scale: Vec<f64> },
 }
 
 impl From<Matrix> for DataOp {
@@ -83,11 +91,17 @@ impl DataOp {
         DataOp::ColScaled { inner: Box::new(inner), scale }
     }
 
+    /// Wrap an operator in a row-scaling view `diag(scale) · op`.
+    pub fn row_scaled(inner: DataOp, scale: Vec<f64>) -> DataOp {
+        assert_eq!(scale.len(), inner.rows(), "row_scaled: scale length must equal rows");
+        DataOp::RowScaled { inner: Box::new(inner), scale }
+    }
+
     pub fn rows(&self) -> usize {
         match self {
             DataOp::Dense(m) => m.rows,
             DataOp::CsrSparse(c) => c.rows,
-            DataOp::ColScaled { inner, .. } => inner.rows(),
+            DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.rows(),
         }
     }
 
@@ -95,7 +109,7 @@ impl DataOp {
         match self {
             DataOp::Dense(m) => m.cols,
             DataOp::CsrSparse(c) => c.cols,
-            DataOp::ColScaled { inner, .. } => inner.cols(),
+            DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.cols(),
         }
     }
 
@@ -105,7 +119,7 @@ impl DataOp {
         match self {
             DataOp::Dense(m) => m.rows * m.cols,
             DataOp::CsrSparse(c) => c.nnz(),
-            DataOp::ColScaled { inner, .. } => inner.nnz(),
+            DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.nnz(),
         }
     }
 
@@ -114,7 +128,7 @@ impl DataOp {
         match self {
             DataOp::Dense(_) => false,
             DataOp::CsrSparse(_) => true,
-            DataOp::ColScaled { inner, .. } => inner.is_sparse(),
+            DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.is_sparse(),
         }
     }
 
@@ -124,6 +138,7 @@ impl DataOp {
             DataOp::Dense(_) => "dense",
             DataOp::CsrSparse(_) => "csr",
             DataOp::ColScaled { .. } => "col-scaled",
+            DataOp::RowScaled { .. } => "row-scaled",
         }
     }
 
@@ -158,6 +173,16 @@ impl DataOp {
                 }
                 m
             }
+            DataOp::RowScaled { inner, scale } => {
+                let mut m = inner.to_dense();
+                for i in 0..m.rows {
+                    let s = scale[i];
+                    for v in m.row_mut(i) {
+                        *v *= s;
+                    }
+                }
+                m
+            }
         }
     }
 
@@ -179,6 +204,12 @@ impl DataOp {
                 let sv: Vec<f64> = v.iter().zip(scale).map(|(a, s)| a * s).collect();
                 inner.matvec_into(&sv, y);
             }
+            DataOp::RowScaled { inner, scale } => {
+                inner.matvec_into(v, y);
+                for (yi, s) in y.iter_mut().zip(scale) {
+                    *yi *= s;
+                }
+            }
         }
     }
 
@@ -192,6 +223,10 @@ impl DataOp {
                 for (v, s) in y.iter_mut().zip(scale) {
                     *v *= s;
                 }
+            }
+            DataOp::RowScaled { inner, scale } => {
+                let sx: Vec<f64> = x.iter().zip(scale).map(|(a, s)| a * s).collect();
+                inner.matvec_t_into(&sx, y);
             }
         }
     }
@@ -225,6 +260,15 @@ impl DataOp {
                 }
                 inner.matmat_into(&sp, out);
             }
+            DataOp::RowScaled { inner, scale } => {
+                inner.matmat_into(p, out);
+                for i in 0..out.rows {
+                    let s = scale[i];
+                    for v in out.row_mut(i) {
+                        *v *= s;
+                    }
+                }
+            }
         }
     }
 
@@ -247,6 +291,39 @@ impl DataOp {
                 }
                 g
             }
+            DataOp::RowScaled { inner, scale } => {
+                // (D A)^T (D A) = A^T D² A: no Gram-side rewrite exists, so
+                // form a scaled clone *in format* (dense stays dense, CSR
+                // stays CSR). This is a cold path — only the direct solver
+                // and Woodbury assembly build Grams.
+                match inner.as_ref() {
+                    DataOp::Dense(m) => {
+                        let mut sm = m.clone();
+                        for i in 0..sm.rows {
+                            let s = scale[i];
+                            for v in sm.row_mut(i) {
+                                *v *= s;
+                            }
+                        }
+                        syrk_t(&sm)
+                    }
+                    DataOp::CsrSparse(c) => {
+                        let mut sc = c.clone();
+                        sc.scale_rows(scale);
+                        sc.gram()
+                    }
+                    nested => {
+                        let mut sm = nested.to_dense();
+                        for i in 0..sm.rows {
+                            let s = scale[i];
+                            for v in sm.row_mut(i) {
+                                *v *= s;
+                            }
+                        }
+                        syrk_t(&sm)
+                    }
+                }
+            }
         }
     }
 
@@ -267,6 +344,20 @@ impl DataOp {
                         dense_row_gram(&DataOp::col_scaled(nested.clone(), scale.clone()).to_dense(), None)
                     }
                 }
+            }
+            DataOp::RowScaled { inner, scale } => {
+                // (D A)(D A)^T = D (A A^T) D: scale rows and columns of the
+                // inner row Gram — no rescaled data copy.
+                let mut w = inner.gram_rows();
+                let n = w.cols;
+                for i in 0..n {
+                    let si = scale[i];
+                    let row = w.row_mut(i);
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v *= si * scale[j];
+                    }
+                }
+                w
             }
         }
     }
@@ -306,6 +397,13 @@ impl DataOp {
                     h = mix64(h, v.to_bits());
                 }
             }
+            DataOp::RowScaled { inner, scale } => {
+                h = mix64(h, 4);
+                h = inner.hash_content(h);
+                for v in scale {
+                    h = mix64(h, v.to_bits());
+                }
+            }
         }
         h
     }
@@ -339,6 +437,11 @@ impl DataOp {
             DataOp::ColScaled { inner, scale } => {
                 DataOp::col_scaled(inner.select_rows(idx), scale.clone())
             }
+            DataOp::RowScaled { inner, scale } => {
+                // gather the per-row scale alongside the rows themselves
+                let sub_scale: Vec<f64> = idx.iter().map(|&i| scale[i]).collect();
+                DataOp::row_scaled(inner.select_rows(idx), sub_scale)
+            }
         }
     }
 
@@ -362,7 +465,24 @@ impl DataOp {
                         }
                     }
                     DataOp::CsrSparse(c) => c.scale_rows(scale),
-                    DataOp::ColScaled { .. } => unreachable!("transposed() never returns a view"),
+                    _ => unreachable!("transposed() never returns a view"),
+                }
+                t
+            }
+            DataOp::RowScaled { inner, scale } => {
+                // (D A)^T = A^T D: row scaling becomes column scaling of
+                // the materialized transpose.
+                let mut t = inner.transposed();
+                match &mut t {
+                    DataOp::Dense(m) => {
+                        for i in 0..m.rows {
+                            for (v, s) in m.row_mut(i).iter_mut().zip(scale) {
+                                *v *= s;
+                            }
+                        }
+                    }
+                    DataOp::CsrSparse(c) => c.scale_cols(scale),
+                    _ => unreachable!("transposed() never returns a view"),
                 }
                 t
             }
@@ -491,6 +611,84 @@ mod tests {
         // transposed collapses to a row-scaled materialization
         let t = view.transposed();
         assert!(t.to_dense().max_abs_diff(&ad.transpose()) < 1e-15);
+    }
+
+    #[test]
+    fn row_scaled_view_is_diag_times_a() {
+        let mut rng = Rng::seed_from(523);
+        let (n, d) = (13, 5);
+        let dense = random_dense(&mut rng, n, d);
+        let scale: Vec<f64> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+        for inner in [DataOp::Dense(dense.clone()), DataOp::CsrSparse(Csr::from_dense(&dense))] {
+            let sparse = inner.is_sparse();
+            let view = DataOp::row_scaled(inner, scale.clone());
+            assert_eq!(view.is_sparse(), sparse);
+            assert_eq!(view.format_name(), "row-scaled");
+            // reference: materialized diag(scale)·A
+            let mut da = dense.clone();
+            for i in 0..n {
+                for j in 0..d {
+                    let v = da.at(i, j) * scale[i];
+                    da.set(i, j, v);
+                }
+            }
+            let v = rng.gaussian_vec(d);
+            let x = rng.gaussian_vec(n);
+            let av = view.matvec(&v);
+            let want = matvec(&da, &v);
+            for i in 0..n {
+                assert!((av[i] - want[i]).abs() < 1e-12);
+            }
+            let atx = view.matvec_t(&x);
+            let want_t = matvec_t(&da, &x);
+            for j in 0..d {
+                assert!((atx[j] - want_t[j]).abs() < 1e-12);
+            }
+            assert!(view.to_dense().max_abs_diff(&da) < 1e-15);
+            let p = random_dense(&mut rng, d, 3);
+            let mut ap = Matrix::zeros(n, 3);
+            view.matmat_into(&p, &mut ap);
+            assert!(ap.max_abs_diff(&matmul(&da, &p)) < 1e-12);
+            // gram (AᵀD²A), gram_rows (D·AAᵀ·D), transposed (AᵀD)
+            assert!(view.gram().max_abs_diff(&crate::linalg::syrk_t(&da)) < 1e-10);
+            assert!(view.gram_rows().max_abs_diff(&matmul(&da, &da.transpose())) < 1e-10);
+            let t = view.transposed();
+            assert!(!matches!(t, DataOp::RowScaled { .. } | DataOp::ColScaled { .. }));
+            assert!(t.to_dense().max_abs_diff(&da.transpose()) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn row_scaled_select_rows_and_fingerprint() {
+        let mut rng = Rng::seed_from(527);
+        let (n, d) = (10, 4);
+        let dense = random_dense(&mut rng, n, d);
+        let scale: Vec<f64> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+        let view = DataOp::row_scaled(DataOp::Dense(dense.clone()), scale.clone());
+        let idx = [6usize, 1, 1, 9];
+        let sub = view.select_rows(&idx);
+        assert_eq!((sub.rows(), sub.cols()), (idx.len(), d));
+        let got = sub.to_dense();
+        for (r, &i) in idx.iter().enumerate() {
+            for j in 0..d {
+                assert!((got.at(r, j) - dense.at(i, j) * scale[i]).abs() < 1e-15);
+            }
+        }
+        // fingerprints: row-scaled ≠ plain ≠ col-scaled with the same bits
+        let square = random_dense(&mut rng, d, d);
+        let s: Vec<f64> = (0..d).map(|j| 1.0 + j as f64).collect();
+        let fp_plain = DataOp::Dense(square.clone()).fingerprint();
+        let fp_row = DataOp::row_scaled(DataOp::Dense(square.clone()), s.clone()).fingerprint();
+        let fp_col = DataOp::col_scaled(DataOp::Dense(square), s).fingerprint();
+        assert_ne!(fp_row.content, fp_plain.content);
+        assert_ne!(fp_row.content, fp_col.content, "row and col scaling must key differently");
+        // and the scale values themselves matter
+        let dense2 = DataOp::Dense(dense);
+        let f1 = DataOp::row_scaled(dense2.clone(), scale.clone()).fingerprint();
+        let mut scale2 = scale.clone();
+        scale2[3] += 1e-9;
+        let f2 = DataOp::row_scaled(dense2, scale2).fingerprint();
+        assert_ne!(f1, f2);
     }
 
     #[test]

@@ -172,6 +172,16 @@ impl Csr {
         }
     }
 
+    /// Scale column `j`'s values by `s[j]` in place (used when a
+    /// transposed row-scaled view must materialize: row scaling of `A`
+    /// becomes column scaling of `A^T`).
+    pub fn scale_cols(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.cols);
+        for (v, ci) in self.values.iter_mut().zip(&self.indices) {
+            *v *= s[*ci as usize];
+        }
+    }
+
     /// Sequential dot of row `i` with dense `x`.
     #[inline]
     fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
@@ -512,6 +522,20 @@ mod tests {
         let base = run(1);
         for t in [2usize, 4] {
             assert_eq!(base, run(t), "csr kernels differ at {t} threads");
+        }
+    }
+
+    #[test]
+    fn scale_cols_matches_dense_reference() {
+        let mut rng = Rng::seed_from(311);
+        let mut c = random_sparse(&mut rng, 9, 6, 3);
+        let dense = c.to_dense();
+        let s: Vec<f64> = (0..6).map(|_| 0.5 + rng.uniform()).collect();
+        c.scale_cols(&s);
+        for i in 0..9 {
+            for j in 0..6 {
+                assert!((c.to_dense().at(i, j) - dense.at(i, j) * s[j]).abs() < 1e-15);
+            }
         }
     }
 

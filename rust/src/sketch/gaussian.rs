@@ -56,6 +56,23 @@ impl GaussianSketch {
         matmul(&self.s, a)
     }
 
+    /// `S · diag(w) · A` for a per-data-row weight vector (the row-scaled
+    /// `DataOp` path): the weight commutes onto the sketch side — columns
+    /// of one scaled copy of `S` (m x n, no copy of the data) — so the
+    /// GEMM fast path still does the work.
+    pub fn apply_weighted(&self, a: &Matrix, w: &[f64]) -> Matrix {
+        assert_eq!(a.rows, self.n(), "apply_weighted: A must have n rows");
+        assert_eq!(w.len(), self.n(), "apply_weighted: weight length must equal n");
+        flops::record(2.0 * (self.m() as f64) * (a.rows as f64) * (a.cols as f64));
+        let mut sw = self.s.clone();
+        for r in 0..sw.rows {
+            for (v, wi) in sw.row_mut(r).iter_mut().zip(w) {
+                *v *= wi;
+            }
+        }
+        matmul(&sw, a)
+    }
+
     /// `S * A` over CSR data: `O(m · nnz(A))` — each output row `r`
     /// accumulates `S[r, i] · A[i, :]` over the stored entries of data row
     /// `i`, in ascending `i` order (blocked by the nnz structure instead of
@@ -63,6 +80,17 @@ impl GaussianSketch {
     /// budget; per-row accumulation is sequential, so the result is
     /// bit-identical at any thread count.
     pub fn apply_csr(&self, a: &Csr) -> Matrix {
+        self.apply_csr_impl(a, None)
+    }
+
+    /// `S · diag(w) · A` over CSR data: the weight multiplies the sketch
+    /// entry per stored data row — still `O(m · nnz(A))`, no rescaled copy.
+    pub fn apply_csr_weighted(&self, a: &Csr, w: &[f64]) -> Matrix {
+        assert_eq!(w.len(), self.n(), "apply_csr_weighted: weight length must equal n");
+        self.apply_csr_impl(a, Some(w))
+    }
+
+    fn apply_csr_impl(&self, a: &Csr, w: Option<&[f64]>) -> Matrix {
         assert_eq!(a.rows, self.n(), "apply: A must have n rows");
         let (m, n, d) = (self.m(), a.rows, a.cols);
         let mut out = Matrix::zeros(m, d);
@@ -81,7 +109,7 @@ impl GaussianSketch {
                     if cis.is_empty() {
                         continue;
                     }
-                    let sv = srow[i];
+                    let sv = srow[i] * w.map_or(1.0, |ws| ws[i]);
                     for (ci, av) in cis.iter().zip(vs) {
                         orow[*ci as usize] += sv * av;
                     }

@@ -157,7 +157,10 @@ impl Sketch {
     /// Compute `S * A` (`A` is n x d, result m x d), dispatching on the
     /// operator format. The CSR kernels never materialize a dense copy of
     /// `A`; a `ColScaled` view sketches the inner operator and re-scales
-    /// the (small, m x d) result — `S·(A·D) = (S·A)·D`.
+    /// the (small, m x d) result — `S·(A·D) = (S·A)·D`; a `RowScaled` view
+    /// folds the row scale into the *sketch* side — `S·(D·A) = (S·D)·A` —
+    /// via the per-family weighted kernels, so sparse data stays CSR and
+    /// the nnz-proportional costs are preserved.
     pub fn apply(&self, a: &DataOp) -> Matrix {
         match a {
             DataOp::Dense(m) => self.apply_dense(m),
@@ -175,6 +178,38 @@ impl Sketch {
                     }
                 }
                 sa
+            }
+            DataOp::RowScaled { inner, scale } => self.apply_row_weighted(inner, scale),
+        }
+    }
+
+    /// `S · diag(w) · A` for an arbitrary operator `A`: the row-scaled
+    /// apply path. Nested views keep commuting — a further row scale
+    /// multiplies into `w`, a column scale moves onto the (small) result.
+    fn apply_row_weighted(&self, a: &DataOp, w: &[f64]) -> Matrix {
+        match a {
+            DataOp::Dense(m) => match self {
+                Sketch::Gaussian(s) => s.apply_weighted(m, w),
+                Sketch::Srht(s) => s.apply_weighted(m, w),
+                Sketch::Sjlt(s) => s.apply_weighted(m, w),
+            },
+            DataOp::CsrSparse(c) => match self {
+                Sketch::Gaussian(s) => s.apply_csr_weighted(c, w),
+                Sketch::Srht(s) => s.apply_csr_weighted(c, w),
+                Sketch::Sjlt(s) => s.apply_csr_weighted(c, w),
+            },
+            DataOp::ColScaled { inner, scale } => {
+                let mut sa = self.apply_row_weighted(inner, w);
+                for r in 0..sa.rows {
+                    for (v, s) in sa.row_mut(r).iter_mut().zip(scale) {
+                        *v *= s;
+                    }
+                }
+                sa
+            }
+            DataOp::RowScaled { inner, scale } => {
+                let combined: Vec<f64> = w.iter().zip(scale).map(|(a, b)| a * b).collect();
+                self.apply_row_weighted(inner, &combined)
             }
         }
     }

@@ -80,6 +80,18 @@ impl SjltSketch {
     /// of accumulate work, and the owner-computes rule keeps the result
     /// bit-identical at any thread count (no scatter races, no atomics).
     pub fn apply(&self, a: &Matrix) -> Matrix {
+        self.apply_impl(a, None)
+    }
+
+    /// `S · diag(w) · A` for a per-data-row weight vector (the row-scaled
+    /// `DataOp` path): column `j` of `S` is scaled by `w[j]` on the fly —
+    /// same cost, no weighted copy of `S` or `A`.
+    pub fn apply_weighted(&self, a: &Matrix, w: &[f64]) -> Matrix {
+        assert_eq!(w.len(), self.n, "apply_weighted: weight length must equal n");
+        self.apply_impl(a, Some(w))
+    }
+
+    fn apply_impl(&self, a: &Matrix, w: Option<&[f64]>) -> Matrix {
         assert_eq!(a.rows, self.n, "apply: A must have n rows");
         let d = a.cols;
         let mut out = Matrix::zeros(self.m, d);
@@ -94,13 +106,14 @@ impl SjltSketch {
             let rows_here = chunk.len() / d;
             for j in 0..self.n {
                 let arow = a.row(j);
+                let wj = w.map_or(1.0, |ws| ws[j]);
                 for k in 0..self.s {
                     let idx = j * self.s + k;
                     let r = self.rows[idx] as usize;
                     if r < r0 || r >= r0 + rows_here {
                         continue;
                     }
-                    let v = self.vals[idx];
+                    let v = self.vals[idx] * wj;
                     let orow = &mut chunk[(r - r0) * d..(r - r0) * d + d];
                     for t in 0..d {
                         orow[t] += v * arow[t];
@@ -118,6 +131,18 @@ impl SjltSketch {
     /// ascending data-row order), so the result matches the dense apply of
     /// the same matrix and is bit-identical at any thread count.
     pub fn apply_csr(&self, a: &Csr) -> Matrix {
+        self.apply_csr_impl(a, None)
+    }
+
+    /// `S · diag(w) · A` over CSR data: the weight folds into the sketch
+    /// value per stored data row, so the cost stays exactly `O(s · nnz(A))`
+    /// and no rescaled CSR copy is ever formed.
+    pub fn apply_csr_weighted(&self, a: &Csr, w: &[f64]) -> Matrix {
+        assert_eq!(w.len(), self.n, "apply_csr_weighted: weight length must equal n");
+        self.apply_csr_impl(a, Some(w))
+    }
+
+    fn apply_csr_impl(&self, a: &Csr, w: Option<&[f64]>) -> Matrix {
         assert_eq!(a.rows, self.n, "apply: A must have n rows");
         let d = a.cols;
         let mut out = Matrix::zeros(self.m, d);
@@ -135,13 +160,14 @@ impl SjltSketch {
                 if cis.is_empty() {
                     continue;
                 }
+                let wj = w.map_or(1.0, |ws| ws[j]);
                 for k in 0..self.s {
                     let idx = j * self.s + k;
                     let r = self.rows[idx] as usize;
                     if r < r0 || r >= r0 + rows_here {
                         continue;
                     }
-                    let v = self.vals[idx];
+                    let v = self.vals[idx] * wj;
                     let orow = &mut chunk[(r - r0) * d..(r - r0) * d + d];
                     for (ci, av) in cis.iter().zip(vs) {
                         orow[*ci as usize] += v * av;

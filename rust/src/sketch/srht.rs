@@ -57,6 +57,20 @@ impl SrhtSketch {
         out
     }
 
+    /// `S · diag(w) · A` for a per-data-row weight vector (the row-scaled
+    /// `DataOp` path): the weight folds into the Rademacher signs
+    /// (`E · diag(w) = diag(signs ∘ w)`), so the FWHT pipeline is unchanged.
+    pub fn apply_weighted(&self, a: &Matrix, w: &[f64]) -> Matrix {
+        assert_eq!(a.rows, self.n, "apply_weighted: A must have n rows");
+        assert_eq!(w.len(), self.n, "apply_weighted: weight length must equal n");
+        flops::record(self.transform_flops(a.cols));
+        let combined: Vec<f64> = self.signs.iter().zip(w).map(|(s, wi)| s * wi).collect();
+        let x = hadamard_signs(a, &combined);
+        let mut out = x.select_rows(&self.rows);
+        out.scale(1.0 / (self.m as f64).sqrt());
+        out
+    }
+
     /// FWHT + subsample cost for a width-`d` apply (nnz-independent: the
     /// Hadamard transform has no sparse shortcut).
     fn transform_flops(&self, d: usize) -> f64 {
@@ -71,6 +85,18 @@ impl SrhtSketch {
     /// scale. Each column's transform is independent and identical to the
     /// dense apply's, so results match it bitwise.
     pub fn apply_csr(&self, a: &Csr) -> Matrix {
+        self.apply_csr_impl(a, None)
+    }
+
+    /// `S · diag(w) · A` over CSR data: the weight folds into the sign
+    /// applied while scattering each stored entry — the per-block FWHT
+    /// schedule (and its cost) is unchanged.
+    pub fn apply_csr_weighted(&self, a: &Csr, w: &[f64]) -> Matrix {
+        assert_eq!(w.len(), self.n, "apply_csr_weighted: weight length must equal n");
+        self.apply_csr_impl(a, Some(w))
+    }
+
+    fn apply_csr_impl(&self, a: &Csr, weights: Option<&[f64]>) -> Matrix {
         assert_eq!(a.rows, self.n, "apply: A must have n rows");
         let d = a.cols;
         let np = self.n_pad;
@@ -90,7 +116,7 @@ impl SrhtSketch {
                 let (ris, vs) = at.row(j);
                 for (ri, v) in ris.iter().zip(vs) {
                     let i = *ri as usize;
-                    block.data[i * w + t] = self.signs[i] * v;
+                    block.data[i * w + t] = self.signs[i] * weights.map_or(1.0, |ws| ws[i]) * v;
                 }
             }
             fwht_rows(&mut block);

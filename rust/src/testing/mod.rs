@@ -94,6 +94,49 @@ where
     }
 }
 
+/// Assert a scalar derivative matches a central finite difference of its
+/// primal at `z`: `|f'(z) - (f(z+h) - f(z-h))/2h| <= rtol · scale`. The
+/// step is `h = max(1e-6, 1e-6·|z|)` — the usual bias/round-off
+/// compromise for f64 central differences, whose truncation error is
+/// `O(h²)`, so `rtol` around `1e-6` is the tight-but-robust choice.
+/// Panics with a diagnostic on mismatch (test-helper semantics, like the
+/// std `assert_*` family). Used by the GLM loss unit tests.
+pub fn assert_grad_matches(
+    f: impl Fn(f64) -> f64,
+    df: impl Fn(f64) -> f64,
+    z: f64,
+    rtol: f64,
+) {
+    let h = 1e-6f64.max(1e-6 * z.abs());
+    let fd = (f(z + h) - f(z - h)) / (2.0 * h);
+    let an = df(z);
+    let scale = an.abs().max(fd.abs()).max(1.0);
+    assert!(
+        (an - fd).abs() <= rtol * scale,
+        "gradient mismatch at z={z}: analytic {an} vs finite-difference {fd} (rtol {rtol})"
+    );
+}
+
+/// Assert a scalar second derivative matches a central finite difference
+/// of the *first* derivative at `z` (differencing `f'` instead of `f`
+/// keeps the FD noise first-order). Panics on mismatch. Used by the GLM
+/// loss unit tests for the Hessian-diagonal weights `ℓ''`.
+pub fn assert_hess_diag_matches(
+    df: impl Fn(f64) -> f64,
+    d2f: impl Fn(f64) -> f64,
+    z: f64,
+    rtol: f64,
+) {
+    let h = 1e-6f64.max(1e-6 * z.abs());
+    let fd = (df(z + h) - df(z - h)) / (2.0 * h);
+    let an = d2f(z);
+    let scale = an.abs().max(fd.abs()).max(1.0);
+    assert!(
+        (an - fd).abs() <= rtol * scale,
+        "curvature mismatch at z={z}: analytic {an} vs finite-difference {fd} (rtol {rtol})"
+    );
+}
+
 /// Assert two floats are close in relative terms.
 pub fn assert_close(a: f64, b: f64, rtol: f64, what: &str) -> Result<(), String> {
     let denom = a.abs().max(b.abs()).max(1e-30);
@@ -135,6 +178,27 @@ mod tests {
             100,
             |_, size| if size >= 10 { Err("too big".into()) } else { Ok(()) },
         );
+    }
+
+    #[test]
+    fn finite_difference_helpers_accept_and_reject() {
+        // x³: f' = 3x², f'' = 6x
+        for &z in &[-2.0, -0.5, 0.0, 1.3] {
+            assert_grad_matches(|x| x * x * x, |x| 3.0 * x * x, z, 1e-6);
+            assert_hess_diag_matches(|x| 3.0 * x * x, |x| 6.0 * x, z, 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient mismatch")]
+    fn wrong_gradient_is_caught() {
+        assert_grad_matches(|x| x * x, |_| 0.0, 1.0, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "curvature mismatch")]
+    fn wrong_curvature_is_caught() {
+        assert_hess_diag_matches(|x| 2.0 * x, |_| 5.0, 1.0, 1e-6);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! End-to-end GLM Newton-sketch acceptance tests: convergence on a
+//! separable-with-noise logistic problem (monotone damped-Newton
+//! objective, decrement below tolerance), agreement with the dense
+//! exact-Newton reference (`inner = Direct`) to 1e-6, sketch-size
+//! carry-over (a warm re-run of the same request serves every per-step
+//! sketch from the content-keyed cache — zero new formations), and the
+//! `MethodSpec::NewtonSketch` round trip through the registry and the
+//! `SolveService`.
+
+use sketchsolve::api::{self, lookup, MethodSpec, SolveError, SolveRequest, SolveStatus, Stop};
+use sketchsolve::coordinator::{JobSpec, RouterPolicy, SolveService};
+use sketchsolve::glm::GlmLossKind;
+use sketchsolve::linalg::Matrix;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use std::sync::Arc;
+
+/// Synthetic separable-with-noise logistic data: labels are the sign of
+/// `Ax_true + 0.5·noise`, so the classes overlap slightly and the ridge
+/// term keeps the optimum finite.
+fn logistic_data(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    let x_true = rng.gaussian_vec(d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let z: f64 = (0..d).map(|j| a.data[i * d + j] * x_true[j]).sum();
+        y[i] = if z + 0.5 * rng.gaussian() >= 0.0 { 1.0 } else { -1.0 };
+    }
+    (a, y)
+}
+
+fn glm_problem(a: Matrix) -> Arc<Problem> {
+    let d = a.cols;
+    // b is ignored by newton_sketch (the objective comes from the labels)
+    Arc::new(Problem::general(a, vec![0.0; d], vec![1.0; d], 1.0))
+}
+
+fn newton_request(prob: Arc<Problem>, y: Vec<f64>, inner: MethodSpec) -> SolveRequest {
+    SolveRequest::new(prob)
+        .method(MethodSpec::NewtonSketch { loss: GlmLossKind::Logistic, inner: Box::new(inner) })
+        .stop(Stop { max_iters: 50, rel_tol: 0.0, abs_decrement_tol: 1e-10 })
+        .labels(y)
+        .seed(41)
+}
+
+#[test]
+fn logistic_newton_sketch_converges_and_matches_exact_newton() {
+    let (n, d) = (400usize, 20usize);
+    let (a, y) = logistic_data(n, d, 555);
+    let prob = glm_problem(a);
+
+    let sketched = newton_request(
+        prob.clone(),
+        y.clone(),
+        MethodSpec::PcgFixed { m: None, sketch: SketchKind::Sjlt { s: 1 } },
+    );
+    let out = api::solve(&sketched).expect("newton-sketch solve runs");
+    assert_eq!(out.status, SolveStatus::Done);
+    assert_eq!(out.report.method, "newton_sketch");
+    let trace = out.newton_trace.as_ref().expect("newton_sketch carries an outer trace");
+    assert!(!trace.is_empty());
+    assert_eq!(out.report.iterations, trace.len());
+
+    // converged: the last computed Newton decrement is below tolerance
+    let last = trace.last().unwrap();
+    assert!(
+        last.decrement / 2.0 <= 1e-10,
+        "final decrement {} did not reach tolerance",
+        last.decrement
+    );
+    // damped Newton on a convex objective: monotone non-increasing
+    for w in trace.windows(2) {
+        assert!(
+            w[1].objective <= w[0].objective,
+            "objective rose between outer iterations {} and {}: {} -> {}",
+            w[0].k,
+            w[1].k,
+            w[0].objective,
+            w[1].objective
+        );
+    }
+
+    // exact-Newton reference: same outer loop, inner solved by dense
+    // Cholesky — the sketched run must land on the same minimizer
+    let exact = newton_request(prob, y, MethodSpec::Direct);
+    let ref_out = api::solve(&exact).expect("exact-Newton reference runs");
+    assert_eq!(ref_out.status, SolveStatus::Done);
+    let max_diff = out
+        .report
+        .x
+        .iter()
+        .zip(&ref_out.report.x)
+        .map(|(s, e)| (s - e).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff <= 1e-6, "sketched vs exact-Newton solution diff {max_diff}");
+}
+
+#[test]
+fn warm_rerun_serves_every_sketch_from_cache() {
+    // distinct data seed from the other tests so this problem's per-step
+    // fingerprints cannot already be in the process-global sketch cache
+    let (n, d) = (400usize, 20usize);
+    let (a, y) = logistic_data(n, d, 777);
+    let prob = glm_problem(a);
+    let req = newton_request(
+        prob,
+        y,
+        MethodSpec::PcgFixed { m: Some(64), sketch: SketchKind::Sjlt { s: 1 } },
+    );
+
+    // cold: each outer iterate's weights change the operator fingerprint,
+    // so every step forms a fresh sketch
+    let cold = api::solve(&req).expect("cold run");
+    assert_eq!(cold.status, SolveStatus::Done);
+    let cold_trace = cold.newton_trace.as_ref().unwrap();
+    let cold_formations = cold_trace.iter().filter(|r| r.formed_sketch).count();
+    assert_eq!(
+        cold_formations,
+        cold_trace.len(),
+        "cold run must form one sketch per outer iteration"
+    );
+
+    // warm: the identical request replays the same trajectory, so every
+    // formation is a cache hit — total formations strictly below the
+    // outer-iteration count (here: zero)
+    let warm = api::solve(&req).expect("warm run");
+    assert_eq!(warm.status, SolveStatus::Done);
+    let warm_trace = warm.newton_trace.as_ref().unwrap();
+    let warm_formations = warm_trace.iter().filter(|r| r.formed_sketch).count();
+    assert_eq!(warm_formations, 0, "warm re-run must serve every sketch from the cache");
+    assert!(warm_formations < warm_trace.len());
+    // cached sketches reproduce the exact cold trajectory
+    assert_eq!(cold.report.x, warm.report.x, "warm run must replay the cold trajectory bitwise");
+    assert_eq!(cold_trace.len(), warm_trace.len());
+}
+
+#[test]
+fn poisson_newton_converges_monotonically() {
+    let (n, d) = (200usize, 10usize);
+    let mut rng = Rng::seed_from(888);
+    let a = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    let x_true: Vec<f64> = rng.gaussian_vec(d).iter().map(|g| 0.3 * g).collect();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let z: f64 = (0..d).map(|j| a.data[i * d + j] * x_true[j]).sum();
+        y[i] = z.clamp(-2.0, 2.0).exp().round();
+    }
+    let prob = glm_problem(a);
+    let req = SolveRequest::new(prob)
+        .method(MethodSpec::NewtonSketch {
+            loss: GlmLossKind::Poisson,
+            inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: SketchKind::Sjlt { s: 1 } }),
+        })
+        .stop(Stop { max_iters: 50, rel_tol: 0.0, abs_decrement_tol: 1e-10 })
+        .labels(y)
+        .seed(43);
+    let out = api::solve(&req).expect("poisson newton-sketch runs");
+    assert_eq!(out.status, SolveStatus::Done);
+    let trace = out.newton_trace.as_ref().unwrap();
+    assert!(trace.last().unwrap().decrement / 2.0 <= 1e-10);
+    for w in trace.windows(2) {
+        assert!(w[1].objective <= w[0].objective);
+    }
+}
+
+#[test]
+fn newton_sketch_round_trips_registry_and_service() {
+    let spec = MethodSpec::NewtonSketch {
+        loss: GlmLossKind::Logistic,
+        inner: Box::new(MethodSpec::PcgFixed { m: Some(64), sketch: SketchKind::Sjlt { s: 1 } }),
+    };
+    assert_eq!(spec.name(), "newton_sketch");
+    let entry = lookup(&spec).expect("newton_sketch is registered");
+    let desc = entry.descriptor();
+    assert_eq!(desc.name, spec.name());
+    assert!(desc.warm_start && desc.traced && !desc.multi_rhs);
+
+    // through the service: explicit method, labels attached — the worker
+    // runs it like any other job and the metrics record the outer iters
+    let (a, y) = logistic_data(300, 12, 999);
+    let prob = glm_problem(a);
+    let req = SolveRequest::new(prob)
+        .method(spec)
+        .stop(Stop { max_iters: 50, rel_tol: 0.0, abs_decrement_tol: 1e-10 })
+        .labels(y)
+        .seed(7);
+    let service = SolveService::start(1, RouterPolicy::default());
+    service.submit(JobSpec::new(1, req));
+    let result = service.next_result().expect("one result");
+    assert_eq!(result.id, 1);
+    let outcome = result.outcome.expect("newton job succeeds");
+    assert_eq!(outcome.status, SolveStatus::Done);
+    let trace = outcome.newton_trace.as_ref().expect("trace survives the service path");
+    assert!(!trace.is_empty());
+    assert_eq!(service.metrics.newton_solves(), 1);
+    assert_eq!(service.metrics.newton_outer_iterations(), trace.len() as u64);
+    assert!(service.metrics.summary().contains("newton: 1 solves"));
+    service.shutdown();
+}
+
+#[test]
+fn newton_sketch_rejects_bad_requests() {
+    let (a, y) = logistic_data(100, 8, 1234);
+    let prob = glm_problem(a);
+    let inner = MethodSpec::PcgFixed { m: None, sketch: SketchKind::Sjlt { s: 1 } };
+    let spec = MethodSpec::NewtonSketch { loss: GlmLossKind::Logistic, inner: Box::new(inner) };
+
+    // missing labels
+    let req = SolveRequest::new(prob.clone()).method(spec.clone()).seed(1);
+    match api::solve(&req) {
+        Err(SolveError::InvalidSpec(msg)) => assert!(msg.contains("labels"), "{msg}"),
+        other => panic!("expected InvalidSpec for missing labels, got {other:?}"),
+    }
+
+    // labels outside the logistic {-1,+1} domain
+    let zero_one: Vec<f64> = y.iter().map(|v| if *v > 0.0 { 1.0 } else { 0.0 }).collect();
+    let req = SolveRequest::new(prob.clone()).method(spec.clone()).labels(zero_one).seed(1);
+    match api::solve(&req) {
+        Err(SolveError::InvalidSpec(msg)) => {
+            assert!(msg.contains("normalize_binary_labels"), "{msg}")
+        }
+        other => panic!("expected InvalidSpec for {{0,1}} labels, got {other:?}"),
+    }
+
+    // a nested newton_sketch inner is refused
+    let nested = MethodSpec::NewtonSketch {
+        loss: GlmLossKind::Logistic,
+        inner: Box::new(spec),
+    };
+    let req = SolveRequest::new(prob).method(nested).labels(y).seed(1);
+    match api::solve(&req) {
+        Err(SolveError::InvalidSpec(msg)) => assert!(msg.contains("quadratic"), "{msg}"),
+        other => panic!("expected InvalidSpec for nested newton_sketch, got {other:?}"),
+    }
+}

@@ -4,7 +4,11 @@
 //! full adaptive-PCG solve — and each format must stay bit-identical
 //! across thread counts (extending the `par_determinism` contract to the
 //! sparse path). A flop-counter check asserts the SJLT's CSR apply does
-//! `O(s·nnz)` work, i.e. it never touches a dense copy of A.
+//! `O(s·nnz)` work, i.e. it never touches a dense copy of A. The same
+//! contracts are asserted for `DataOp::RowScaled` (the implicit `D^{1/2}A`
+//! view the GLM Newton step solves against): dense/CSR parity, agreement
+//! with an explicitly densified `D^{1/2}A`, bitwise thread determinism,
+//! and nnz-proportional SJLT work with a CSR inner.
 
 use sketchsolve::adaptive::{AdaptiveConfig, AdaptivePcg};
 use sketchsolve::data::SparseSyntheticSpec;
@@ -118,6 +122,122 @@ fn sjlt_csr_apply_work_scales_with_nnz_not_nd() {
     // and the results still agree, so no dense copy was consulted
     assert!(sparse_work * 10.0 < dense_work, "sparse {sparse_work} vs dense {dense_work}");
     assert!(sd.max_abs_diff(&ss) < PARITY_TOL);
+}
+
+#[test]
+fn row_scaled_matvec_parity_and_thread_determinism() {
+    // D·A as an implicit operator: the CSR and dense inners must agree to
+    // PARITY_TOL through matvec and matvec_t, and the explicit reference
+    // w ∘ (A·v) pins the semantics (not just cross-format agreement)
+    let (n, d) = (4096usize, 256usize);
+    let (csr, dense) = twins(n, d, 200, 921);
+    let mut rng = Rng::seed_from(922);
+    let w: Vec<f64> = rng.gaussian_vec(n).iter().map(|g| g.abs() + 0.5).collect();
+    let v = rng.gaussian_vec(d);
+    let x = rng.gaussian_vec(n);
+    let plain_dense = DataOp::Dense(dense.clone());
+    let sparse_op = DataOp::row_scaled(DataOp::CsrSparse(csr), w.clone());
+    let dense_op = DataOp::row_scaled(DataOp::Dense(dense), w.clone());
+    assert_eq!((sparse_op.rows(), sparse_op.cols()), (n, d));
+
+    let mv = |op: &DataOp, t: usize| par::with_threads(t, || op.matvec(&v));
+    let mvt = |op: &DataOp, t: usize| par::with_threads(t, || op.matvec_t(&x));
+
+    let ys = mv(&sparse_op, 1);
+    let yd = mv(&dense_op, 1);
+    let reference: Vec<f64> =
+        plain_dense.matvec(&v).iter().zip(&w).map(|(av, wi)| wi * av).collect();
+    for i in 0..n {
+        assert!((ys[i] - yd[i]).abs() < PARITY_TOL, "matvec differs at {i}");
+        assert!((ys[i] - reference[i]).abs() < PARITY_TOL, "matvec != w∘(Av) at {i}");
+    }
+    let gs = mvt(&sparse_op, 1);
+    let gd = mvt(&dense_op, 1);
+    let wx: Vec<f64> = x.iter().zip(&w).map(|(xi, wi)| wi * xi).collect();
+    let reference_t = plain_dense.matvec_t(&wx);
+    for j in 0..d {
+        assert!((gs[j] - gd[j]).abs() < PARITY_TOL, "matvec_t differs at {j}");
+        assert!((gs[j] - reference_t[j]).abs() < PARITY_TOL, "matvec_t != Aᵀ(w∘x) at {j}");
+    }
+    // each format bitwise-stable across thread counts
+    for t in [2usize, 4] {
+        assert_eq!(ys, mv(&sparse_op, t), "row-scaled csr matvec differs at {t} threads");
+        assert_eq!(yd, mv(&dense_op, t), "row-scaled dense matvec differs at {t} threads");
+        assert_eq!(gs, mvt(&sparse_op, t), "row-scaled csr matvec_t differs at {t} threads");
+        assert_eq!(gd, mvt(&dense_op, t), "row-scaled dense matvec_t differs at {t} threads");
+    }
+}
+
+#[test]
+fn row_scaled_sketch_apply_parity_all_families_and_threads() {
+    // S·(D·A) computed by folding the weights into the sketch (the
+    // commutation S·(D·A) = (S·D)·A) must match for both inner formats
+    // and stay bitwise thread-count independent, per sketch family
+    let (n, d, m) = (4096usize, 256usize, 128usize);
+    let (csr, dense) = twins(n, d, 200, 923);
+    let mut rng = Rng::seed_from(924);
+    let w: Vec<f64> = rng.gaussian_vec(n).iter().map(|g| g.abs() + 0.5).collect();
+    let sparse_op = DataOp::row_scaled(DataOp::CsrSparse(csr), w.clone());
+    let dense_op = DataOp::row_scaled(DataOp::Dense(dense.clone()), w.clone());
+    // explicit D^{1/2}A densification — the copy the implicit path avoids —
+    // is the semantic reference for every family
+    let mut scaled = dense;
+    for i in 0..n {
+        for j in 0..d {
+            scaled.data[i * d + j] *= w[i];
+        }
+    }
+    let scaled_op = DataOp::Dense(scaled);
+    for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sjlt { s: 1 }, SketchKind::Sjlt { s: 3 }] {
+        let apply = |op: &DataOp, threads: usize| {
+            par::with_threads(threads, || {
+                let mut rng = Rng::seed_from(925);
+                kind.sample(m, n, &mut rng).apply(op)
+            })
+        };
+        let ss = apply(&sparse_op, 1);
+        let sd = apply(&dense_op, 1);
+        let sref = apply(&scaled_op, 1);
+        assert_eq!((ss.rows, ss.cols), (m, d));
+        assert!(sd.max_abs_diff(&ss) < PARITY_TOL, "{kind:?}: dense vs csr row-scaled apply");
+        assert!(sref.max_abs_diff(&ss) < PARITY_TOL, "{kind:?}: implicit vs densified D^1/2 A");
+        for t in [2usize, 4] {
+            assert_eq!(ss.data, apply(&sparse_op, t).data, "{kind:?}: csr differs at {t} threads");
+            assert_eq!(sd.data, apply(&dense_op, t).data, "{kind:?}: dense differs at {t} threads");
+        }
+    }
+}
+
+#[test]
+fn sjlt_row_scaled_csr_apply_work_stays_nnz_proportional() {
+    // the Newton-sketch hot path: sketching D^{1/2}A held implicitly over a
+    // CSR inner must record exactly the same O(s·nnz) work as sketching A
+    // itself — the weights fold into the sketch, never into the data
+    let (n, d, m, s) = (4096usize, 512usize, 128usize, 2usize);
+    let per_row = 10usize;
+    let (csr, dense) = twins(n, d, per_row, 927);
+    let nnz = csr.nnz();
+    let mut rng = Rng::seed_from(928);
+    let w: Vec<f64> = rng.gaussian_vec(n).iter().map(|g| g.abs() + 0.5).collect();
+    let sk = SketchKind::Sjlt { s }.sample(m, n, &mut rng);
+
+    flops::reset();
+    let ss = sk.apply(&DataOp::row_scaled(DataOp::CsrSparse(csr), w.clone()));
+    let sparse_work = flops::sketch_apply_total();
+    let expected = 2.0 * (s * nnz) as f64;
+    assert_eq!(sparse_work, expected, "SJLT on RowScaled-CSR must record exactly O(s·nnz) work");
+
+    // agreement with the densified product proves no dense copy was formed
+    // on the counted path while still checking the numbers
+    let mut scaled = dense;
+    for i in 0..n {
+        for j in 0..d {
+            scaled.data[i * d + j] *= w[i];
+        }
+    }
+    let sd = sk.apply(&DataOp::Dense(scaled));
+    assert!(sd.max_abs_diff(&ss) < PARITY_TOL);
+    assert!(sparse_work * 10.0 < 2.0 * (s * n * d) as f64);
 }
 
 #[test]
