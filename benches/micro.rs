@@ -6,8 +6,8 @@
 //!
 //! `cargo bench --bench micro -- [--quick] [--threads N] [--out FILE]`
 
-use sketchsolve::bench_harness::runner::bench_median;
-use sketchsolve::linalg::{matmul, syrk_t, Cholesky, Matrix};
+use sketchsolve::bench_harness::runner::{bench_median, black_box};
+use sketchsolve::linalg::{matmul, simd, syrk_t, Cholesky, Csr, DataOp, Matrix};
 use sketchsolve::par;
 use sketchsolve::precond::SketchedPreconditioner;
 use sketchsolve::rng::Rng;
@@ -27,7 +27,12 @@ fn main() {
     }
     let mut rng = Rng::seed_from(0xFEED);
 
-    println!("== L3 substrate micro-benchmarks ==\n");
+    println!("== L3 substrate micro-benchmarks ==");
+    println!(
+        "kernel set: {} (simd feature {})\n",
+        simd::active_kernel(),
+        if simd::feature_enabled() { "on" } else { "off" }
+    );
 
     // GEMM
     for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512)] {
@@ -140,7 +145,10 @@ fn main() {
 /// hardware budget measure oversubscription — interpret `speedup_vs_1t`
 /// against the recorded `hardware_budget`). Written to `BENCH_micro.json`
 /// as `{op, threads, median_s, speedup_vs_1t}` records so regressions in
-/// parallel scaling show up in diffs between PRs.
+/// parallel scaling show up in diffs between PRs. Covers the dense kernels,
+/// the dense sketch applies, and the nnz-proportional sparse kernels (CSR
+/// matvec + SJLT-on-CSR apply); `kernel_set` in the header records whether
+/// the scalar or a SIMD kernel set produced the numbers.
 fn thread_sweep(rng: &mut Rng, reps: usize, flags: &Flags) {
     println!("\n== thread-scaling sweep (hardware budget: {}) ==\n", par::max_threads());
     let (n, d) = (4096usize, 256usize);
@@ -153,25 +161,64 @@ fn thread_sweep(rng: &mut Rng, reps: usize, flags: &Flags) {
             .map(|k| (format!("sketch_{}", k.name()), k.sample(m, n, rng)))
             .collect();
 
+    // sparse data: 16384x512 at 128 nnz/row -> nnz ≈ 2.1M, so 2·nnz clears
+    // the PAR_MIN_FLOPS gate and the thread budget actually partitions
+    let (sn, sd, per_row) = (16384usize, 512usize, 128usize);
+    let csr = random_csr(rng, sn, sd, per_row);
+    let nnz = csr.nnz();
+    let sx = rng.gaussian_vec(sd);
+    let csr_op = DataOp::from(csr.clone());
+    let sjlt_sparse = SketchKind::Sjlt { s: 1 }.sample(m, sn, rng);
+
     // (op label, kernel closure); every closure captures shared references
     // so one data set serves the whole sweep
     let aref = &a;
     let bref = &b;
-    let mut ops: Vec<(String, Box<dyn Fn() -> Matrix + '_>)> = vec![
-        (format!("gemm {n}x{d}x{d}"), Box::new(move || matmul(aref, bref))),
-        (format!("syrk {n}x{d}"), Box::new(move || syrk_t(aref))),
+    let mut ops: Vec<(String, Box<dyn Fn() + '_>)> = vec![
+        (
+            format!("gemm {n}x{d}x{d}"),
+            Box::new(move || {
+                black_box(matmul(aref, bref));
+            }),
+        ),
+        (
+            format!("syrk {n}x{d}"),
+            Box::new(move || {
+                black_box(syrk_t(aref));
+            }),
+        ),
         (
             format!("fwht {n}x{d}"),
             Box::new(move || {
                 let mut x = aref.clone();
                 sketchsolve::linalg::fwht_rows(&mut x);
-                x
+                black_box(x);
             }),
         ),
     ];
     for (name, sk) in &sketches {
-        ops.push((format!("{name} m={m} ({n}x{d})"), Box::new(move || sk.apply_dense(aref))));
+        ops.push((
+            format!("{name} m={m} ({n}x{d})"),
+            Box::new(move || {
+                black_box(sk.apply_dense(aref));
+            }),
+        ));
     }
+    let (csr_ref, sx_ref, op_ref, sjlt_ref) = (&csr, &sx, &csr_op, &sjlt_sparse);
+    ops.push((
+        format!("csr_matvec {sn}x{sd} nnz={nnz}"),
+        Box::new(move || {
+            let mut y = vec![0.0; sn];
+            csr_ref.matvec_into(sx_ref, &mut y);
+            black_box(y);
+        }),
+    ));
+    ops.push((
+        format!("sjlt_csr m={m} ({sn}x{sd} nnz={nnz})"),
+        Box::new(move || {
+            black_box(sjlt_ref.apply(op_ref));
+        }),
+    ));
 
     let threads: Vec<usize> = vec![1, 2, 4, 8];
     let mut records: Vec<JsonValue> = Vec::new();
@@ -198,6 +245,8 @@ fn thread_sweep(rng: &mut Rng, reps: usize, flags: &Flags) {
         ("n", JsonValue::num(n as f64)),
         ("d", JsonValue::num(d as f64)),
         ("m", JsonValue::num(m as f64)),
+        ("sparse_nnz", JsonValue::num(nnz as f64)),
+        ("kernel_set", JsonValue::s(simd::active_kernel())),
         ("hardware_budget", JsonValue::num(par::max_threads() as f64)),
         ("records", JsonValue::Arr(records)),
     ]);
@@ -205,4 +254,15 @@ fn thread_sweep(rng: &mut Rng, reps: usize, flags: &Flags) {
         Ok(()) => println!("\nscaling records written to {out_path}"),
         Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
     }
+}
+
+/// Uniform-pattern random CSR: `per_row` distinct columns per row.
+fn random_csr(rng: &mut Rng, n: usize, d: usize, per_row: usize) -> Csr {
+    let mut trips = Vec::with_capacity(n * per_row);
+    for i in 0..n {
+        for c in rng.sample_without_replacement(per_row.min(d), d) {
+            trips.push((i, c, rng.gaussian()));
+        }
+    }
+    Csr::from_triplets(n, d, &trips)
 }

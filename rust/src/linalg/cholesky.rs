@@ -5,6 +5,7 @@
 //! inner system `W_S` when `m < d` (see `precond`).
 
 use super::matrix::Matrix;
+use super::simd;
 
 /// Lower-triangular Cholesky factor of a symmetric positive definite matrix.
 #[derive(Clone, Debug)]
@@ -100,6 +101,27 @@ impl Cholesky {
                 for i in ke..n {
                     let pi_start = i * n + kb;
                     let mut j = ke;
+                    // quad-j groups: four independent per-column running
+                    // sums, each in strict ascending-p order (the exact
+                    // per-output schedule of the 2-wide code below), so the
+                    // factor stays bit-identical — see simd::dot4_seq
+                    while j + 3 <= i {
+                        let s = {
+                            let data = &l.data;
+                            simd::dot4_seq(
+                                &data[pi_start..pi_start + w],
+                                &data[j * n + kb..j * n + kb + w],
+                                &data[(j + 1) * n + kb..(j + 1) * n + kb + w],
+                                &data[(j + 2) * n + kb..(j + 2) * n + kb + w],
+                                &data[(j + 3) * n + kb..(j + 3) * n + kb + w],
+                            )
+                        };
+                        l.data[i * n + j] -= s[0];
+                        l.data[i * n + j + 1] -= s[1];
+                        l.data[i * n + j + 2] -= s[2];
+                        l.data[i * n + j + 3] -= s[3];
+                        j += 4;
+                    }
                     while j + 1 <= i {
                         let pj0 = j * n + kb;
                         let pj1 = (j + 1) * n + kb;
@@ -138,6 +160,23 @@ impl Cholesky {
                     let i = ke + t;
                     let prow_i = &panel[t * w..(t + 1) * w];
                     let mut j = ke;
+                    // quad-j groups, same per-output sequential-p schedule
+                    // as the serial branch (bit-identical across branches
+                    // and thread counts)
+                    while j + 3 <= i {
+                        let s = simd::dot4_seq(
+                            prow_i,
+                            &panel[(j - ke) * w..(j - ke + 1) * w],
+                            &panel[(j + 1 - ke) * w..(j + 2 - ke) * w],
+                            &panel[(j + 2 - ke) * w..(j + 3 - ke) * w],
+                            &panel[(j + 3 - ke) * w..(j + 4 - ke) * w],
+                        );
+                        row[j] -= s[0];
+                        row[j + 1] -= s[1];
+                        row[j + 2] -= s[2];
+                        row[j + 3] -= s[3];
+                        j += 4;
+                    }
                     while j + 1 <= i {
                         let pj0 = &panel[(j - ke) * w..(j - ke + 1) * w];
                         let pj1 = &panel[(j + 1 - ke) * w..(j + 2 - ke) * w];

@@ -8,6 +8,7 @@
 //! L1 Pallas kernel uses with VMEM row panels).
 
 use super::matrix::Matrix;
+use super::simd;
 use crate::par;
 
 /// Next power of two >= n.
@@ -46,7 +47,9 @@ pub fn fwht_vec(x: &mut [f64]) {
 /// §Perf: radix-4 — two butterfly stages fused per memory pass, halving
 /// the HBM/cache traffic of the log2(n) sweep (the transform is bandwidth
 /// bound; ~1.6x on 16384-row panels). A trailing radix-2 stage handles odd
-/// log2(n).
+/// log2(n). The per-row add/sub sweeps run through
+/// [`simd::butterfly4`]/[`simd::butterfly2`] (vectorized on a
+/// `--features simd` build, bit-identical to scalar).
 ///
 /// Parallelism: the transform is independent per column, so the column axis
 /// is chunked over the thread budget; each worker runs the full butterfly
@@ -103,20 +106,7 @@ unsafe fn fwht_col_stripe(ptr: par::SendPtr<f64>, n: usize, d: usize, j0: usize,
                 let r1 = ptr.slice_mut((i + h) * d + j0, w);
                 let r2 = ptr.slice_mut((i + 2 * h) * d + j0, w);
                 let r3 = ptr.slice_mut((i + 3 * h) * d + j0, w);
-                for t in 0..w {
-                    let a0 = r0[t];
-                    let a1 = r1[t];
-                    let a2 = r2[t];
-                    let a3 = r3[t];
-                    let s01 = a0 + a1;
-                    let d01 = a0 - a1;
-                    let s23 = a2 + a3;
-                    let d23 = a2 - a3;
-                    r0[t] = s01 + s23;
-                    r1[t] = d01 + d23;
-                    r2[t] = s01 - s23;
-                    r3[t] = d01 - d23;
-                }
+                simd::butterfly4(r0, r1, r2, r3);
             }
             base += step;
         }
@@ -130,12 +120,7 @@ unsafe fn fwht_col_stripe(ptr: par::SendPtr<f64>, n: usize, d: usize, j0: usize,
             for i in base..base + h {
                 let top = ptr.slice_mut(i * d + j0, w);
                 let bot = ptr.slice_mut((i + h) * d + j0, w);
-                for t in 0..w {
-                    let x = top[t];
-                    let y = bot[t];
-                    top[t] = x + y;
-                    bot[t] = x - y;
-                }
+                simd::butterfly2(top, bot);
             }
             base += step;
         }

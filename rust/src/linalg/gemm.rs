@@ -12,8 +12,14 @@
 //! the budget is 1 thread or 64. `matvec_t_into` (a reduction across rows)
 //! instead uses fixed-grain chunks combined in ascending order, which is
 //! equally thread-count-independent.
+//!
+//! The innermost axpy streams and row dots go through the
+//! [`super::simd`] primitives: scalar by default, AVX2/NEON on a
+//! `--features simd` build, bit-identical either way (see the lane
+//! contract in `simd.rs`).
 
 use super::matrix::Matrix;
+use super::simd;
 use crate::par;
 
 /// Cache block sizes. Tuned for a single x86 core with 32 KiB L1 / 1 MiB L2:
@@ -114,6 +120,8 @@ fn inner_2row(
     jc: usize,
     nb: usize,
 ) {
+    let c0 = &mut crow0[jc..jc + nb];
+    let c1 = &mut crow1[jc..jc + nb];
     for p in pc..pc + kb {
         let a0 = arow0[p];
         let a1 = arow1[p];
@@ -121,27 +129,20 @@ fn inner_2row(
             continue;
         }
         let brow = &bdata[p * n + jc..p * n + jc + nb];
-        let c0 = &mut crow0[jc..jc + nb];
-        let c1 = &mut crow1[jc..jc + nb];
-        for (t, &bv) in brow.iter().enumerate() {
-            c0[t] += a0 * bv;
-            c1[t] += a1 * bv;
-        }
+        simd::axpy2_acc(a0, a1, brow, c0, c1);
     }
 }
 
 #[inline(always)]
 fn inner_1row(arow: &[f64], bdata: &[f64], crow: &mut [f64], n: usize, pc: usize, kb: usize, jc: usize, nb: usize) {
+    let cseg = &mut crow[jc..jc + nb];
     for p in pc..pc + kb {
         let av = arow[p];
         if av == 0.0 {
             continue;
         }
         let brow = &bdata[p * n + jc..p * n + jc + nb];
-        let cseg = &mut crow[jc..jc + nb];
-        for (t, &bv) in brow.iter().enumerate() {
-            cseg[t] += av * bv;
-        }
+        simd::axpy_acc(av, brow, cseg);
     }
 }
 
@@ -250,17 +251,8 @@ fn inner_4row_tri(
     let c2 = &mut hi2[j_lo..j_lo + width];
     let c3 = &mut hi3[j_lo..j_lo + width];
     for p in pc..pc + kb {
-        let a0 = ar0[p];
-        let a1 = ar1[p];
-        let a2 = ar2[p];
-        let a3 = ar3[p];
         let brow = &b.data[p * n + j_lo..p * n + j_lo + width];
-        for (t, &bv) in brow.iter().enumerate() {
-            c0[t] += a0 * bv;
-            c1[t] += a1 * bv;
-            c2[t] += a2 * bv;
-            c3[t] += a3 * bv;
-        }
+        simd::axpy4_acc([ar0[p], ar1[p], ar2[p], ar3[p]], brow, c0, c1, c2, c3);
     }
 }
 
@@ -300,10 +292,7 @@ fn inner_2row_tri(
             continue;
         }
         let brow = &b.data[p * n + j_lo..p * n + j_lo + width];
-        for (t, &bv) in brow.iter().enumerate() {
-            crow0[t] += a0 * bv;
-            crow1[t] += a1 * bv;
-        }
+        simd::axpy2_acc(a0, a1, brow, crow0, crow1);
     }
 }
 
@@ -334,9 +323,7 @@ fn inner_1row_tri(
             continue;
         }
         let brow = &b.data[p * n + j_lo..p * n + j_lo + width];
-        for (t, &bv) in brow.iter().enumerate() {
-            crow[t] += av * bv;
-        }
+        simd::axpy_acc(av, brow, crow);
     }
 }
 
@@ -364,17 +351,20 @@ pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     };
     if parts == 1 {
         // allocation-free single-chunk path (per-iteration hot loop)
-        for (i, yi) in y.iter_mut().enumerate() {
-            *yi = super::matrix::dot(a.row(i), x);
-        }
+        matvec_rows(a, x, 0, y);
         return;
     }
     let bounds = par::uniform_boundaries(a.rows, parts);
-    par::parallel_chunks_mut(y, 1, &bounds, |row0, chunk| {
-        for (t, yi) in chunk.iter_mut().enumerate() {
-            *yi = super::matrix::dot(a.row(row0 + t), x);
-        }
-    });
+    par::parallel_chunks_mut(y, 1, &bounds, |row0, chunk| matvec_rows(a, x, row0, chunk));
+}
+
+/// The one row-dot loop behind both `matvec_into` paths: fills `out[t]`
+/// with `A[row0 + t, :] · x` via the fixed-lane [`simd::dot`] schedule.
+#[inline]
+fn matvec_rows(a: &Matrix, x: &[f64], row0: usize, out: &mut [f64]) {
+    for (t, yi) in out.iter_mut().enumerate() {
+        *yi = super::matrix::dot(a.row(row0 + t), x);
+    }
 }
 
 /// `y = A^T * x` without forming the transpose.
@@ -404,16 +394,7 @@ pub fn matvec_t_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     // shape, so the chosen association is still thread-count independent.
     if 2.0 * (a.rows as f64) * (a.cols as f64) < PAR_MIN_FLOPS {
         y.iter_mut().for_each(|v| *v = 0.0);
-        for i in 0..a.rows {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let arow = a.row(i);
-            for (yj, &av) in y.iter_mut().zip(arow) {
-                *yj += xi * av;
-            }
-        }
+        acc_at_rows(a, x, 0..a.rows, y);
         return;
     }
     const GRAIN: usize = 256;
@@ -422,16 +403,7 @@ pub fn matvec_t_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
         GRAIN,
         |r| {
             let mut part = vec![0.0; a.cols];
-            for i in r {
-                let xi = x[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let arow = a.row(i);
-                for (pj, &av) in part.iter_mut().zip(arow) {
-                    *pj += xi * av;
-                }
-            }
+            acc_at_rows(a, x, r, &mut part);
             part
         },
         |mut p, q| {
@@ -445,7 +417,21 @@ pub fn matvec_t_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     y.copy_from_slice(&acc);
 }
 
+/// The one `A^T x` accumulate loop behind both `matvec_t_into` paths:
+/// `out += Σ_{i ∈ rows} x[i] * A[i, :]`, rows visited in ascending order.
+#[inline]
+fn acc_at_rows(a: &Matrix, x: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
+    for i in rows {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        simd::axpy_acc(xi, a.row(i), out);
+    }
+}
+
 /// Naive reference matmul used by tests to validate the blocked kernels.
+#[cfg(test)]
 pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows);
     let mut c = Matrix::zeros(a.rows, b.cols);

@@ -156,30 +156,14 @@ pub fn norm2(v: &[f64]) -> f64 {
     dot(v, v).sqrt()
 }
 
-/// Dot product.
+/// Dot product on the fixed 4-virtual-lane schedule (see
+/// [`super::simd`]): measurably faster than a naive sum on 1 core, more
+/// accurate than a single running accumulator, and vectorized on a
+/// `--features simd` build with bit-identical output.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than naive on 1 core
-    // and more accurate than a single running sum.
-    let n = a.len();
-    let mut s0 = 0.0;
-    let mut s1 = 0.0;
-    let mut s2 = 0.0;
-    let mut s3 = 0.0;
-    let chunks = n / 4;
-    for k in 0..chunks {
-        let i = 4 * k;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
+    super::simd::dot(a, b)
 }
 
 /// `y += alpha * x`

@@ -12,11 +12,12 @@ pub mod fwht;
 pub mod gemm;
 pub mod matrix;
 pub mod op;
+pub mod simd;
 pub mod sparse;
 
 pub use cholesky::{Cholesky, CholeskyError};
 pub use fwht::{fwht_rows, fwht_vec, hadamard_rows_normalized, next_pow2};
-pub use gemm::{matmul, matmul_acc, matmul_into, matmul_naive, matvec, matvec_into, matvec_t, matvec_t_into, syrk_t};
+pub use gemm::{matmul, matmul_acc, matmul_into, matvec, matvec_into, matvec_t, matvec_t_into, syrk_t};
 pub use matrix::{axpy, copy, dot, norm2, scal, sub, Matrix};
 pub use op::{dense_row_gram, DataFingerprint, DataOp};
 pub use sparse::Csr;

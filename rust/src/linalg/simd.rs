@@ -1,0 +1,1342 @@
+//! SIMD micro-kernel layer with a deterministic lane contract.
+//!
+//! Every hot inner loop in the crate (GEMM/SYRK axpy streams, FWHT
+//! butterflies, CSR row dots and scatters, the Cholesky trailing-panel dot,
+//! SJLT scatter-accumulate) bottoms out in one of the primitives below. Each
+//! primitive has exactly one *semantic* definition — the scalar body — and
+//! optional vector implementations (AVX2 on x86_64, NEON on aarch64) behind
+//! the `simd` cargo feature that are required to produce **bit-identical**
+//! results to the scalar body.
+//!
+//! # The lane contract
+//!
+//! Bit-identity across ISAs (and across the scalar/SIMD builds) holds because
+//! every primitive fixes a *virtual lane schedule* that is independent of the
+//! register width, and every vector implementation maps lanes onto registers
+//! without changing the order or association of any individual output's
+//! floating-point operations:
+//!
+//! - **Reductions** ([`dot`]) use a fixed virtual width of [`DOT_LANES`] = 4
+//!   independent accumulators: lane `l` sums elements `i ≡ l (mod 4)` over
+//!   the 4-aligned prefix, lanes combine left-associatively
+//!   `((s0+s1)+s2)+s3`, and the remainder folds in sequentially. AVX2 holds
+//!   the 4 lanes in one `ymm`; NEON holds them in two `float64x2`; scalar
+//!   holds them in 4 locals. Identical schedule, identical bits.
+//! - **Element-wise streams** ([`axpy_acc`]/[`axpy2_acc`]/[`axpy4_acc`],
+//!   [`butterfly2`]/[`butterfly4`], [`scatter_axpy`]) touch each output
+//!   address exactly once per call with a fixed expression, so vectorizing
+//!   the loop only reorders *independent* operations — each output's value
+//!   is computed by the same ops in the same order.
+//! - **Sequential reductions** that must keep a single running sum in
+//!   element order ([`dot4_seq`], [`csr_row_dot`], [`csr_pair_dot`]) put
+//!   *outputs* in lanes (one accumulator per output, advanced in strict
+//!   element order) or vectorize only the multiplies and fold the products
+//!   into the scalar sum in element order.
+//! - **No FMA, ever.** Rust scalar code never contracts `a*b + c`, so the
+//!   vector paths use separate multiply and add instructions; a fused
+//!   multiply-add's single rounding would break parity.
+//!
+//! # Dispatch
+//!
+//! `isa()` resolves once per process (cached in an atomic): the `simd`
+//! feature must be compiled in, the `SKETCHSOLVE_SIMD` env var must not be
+//! `0`/`off`/`scalar`, and the CPU must report the capability (AVX2 via
+//! `is_x86_feature_detected!`; NEON is baseline on aarch64). Tests force the
+//! scalar path at runtime with [`with_forced_scalar`] to assert parity
+//! inside a single binary. Without the feature, `isa()` is a constant
+//! `Isa::Scalar` and the compiler sees exactly the pre-existing scalar code.
+
+#![allow(clippy::match_single_binding)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+#[cfg(feature = "simd")]
+use std::sync::atomic::AtomicU8;
+
+/// Fixed virtual lane count of the [`dot`] reduction schedule. This is a
+/// *contract* constant, not a register width: every ISA implements the same
+/// 4-accumulator schedule regardless of its native vector width.
+pub const DOT_LANES: usize = 4;
+
+/// Instruction set selected for the vector primitives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar bodies (the semantic definition of every primitive).
+    Scalar,
+    /// x86_64 AVX2 (4 × f64 per register).
+    Avx2,
+    /// aarch64 NEON (2 × f64 per register).
+    Neon,
+}
+
+impl Isa {
+    /// Human-readable kernel-set name (surfaced by benches and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// Runtime override used by the parity tests: when set, `isa()` reports
+/// `Scalar` even on a SIMD build. Process-global (not thread-local) because
+/// the kernels run on scoped worker threads that must see the same view.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Whether the crate was compiled with `--features simd`.
+pub fn feature_enabled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Cached detection result: 0 = unresolved, 1 = scalar, 2 = avx2, 3 = neon.
+#[cfg(feature = "simd")]
+static DETECTED: AtomicU8 = AtomicU8::new(0);
+
+#[cfg(feature = "simd")]
+fn detect() -> Isa {
+    // Kill switch: SKETCHSOLVE_SIMD=0|off|scalar pins the scalar kernels
+    // even on a SIMD build (ops escape hatch, and a cheap way to A/B).
+    if let Ok(v) = std::env::var("SKETCHSOLVE_SIMD") {
+        let v = v.to_ascii_lowercase();
+        if v == "0" || v == "off" || v == "scalar" {
+            return Isa::Scalar;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline.
+        return Isa::Neon;
+    }
+    #[allow(unreachable_code)]
+    Isa::Scalar
+}
+
+/// The active instruction set. One relaxed atomic load + predicted branch on
+/// the hot path; the first call on a SIMD build performs the (idempotent)
+/// capability detection and caches it.
+#[inline(always)]
+#[allow(clippy::needless_return)]
+pub fn isa() -> Isa {
+    #[cfg(feature = "simd")]
+    {
+        if FORCE_SCALAR.load(Ordering::Relaxed) {
+            return Isa::Scalar;
+        }
+        return match DETECTED.load(Ordering::Relaxed) {
+            1 => Isa::Scalar,
+            2 => Isa::Avx2,
+            3 => Isa::Neon,
+            _ => {
+                let d = detect();
+                let code = match d {
+                    Isa::Scalar => 1,
+                    Isa::Avx2 => 2,
+                    Isa::Neon => 3,
+                };
+                DETECTED.store(code, Ordering::Relaxed);
+                d
+            }
+        };
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// Name of the kernel set the next primitive call will use.
+pub fn active_kernel() -> &'static str {
+    isa().name()
+}
+
+/// Run `f` with the scalar kernels forced on, restoring the previous state
+/// afterwards (also on panic). Process-global: concurrent callers that must
+/// not be forced should serialize against this (the parity tests take a
+/// mutex). The kernels spawn scoped worker threads, which is why this is a
+/// global flag rather than a thread-local.
+pub fn with_forced_scalar<T>(f: impl FnOnce() -> T) -> T {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCE_SCALAR.store(self.0, Ordering::SeqCst);
+        }
+    }
+    let prev = FORCE_SCALAR.swap(true, Ordering::SeqCst);
+    let _restore = Restore(prev);
+    f()
+}
+
+// ======================================================================
+// Public primitives: wrapper dispatch. Each wrapper's `_` arm is the
+// scalar body — the semantic definition. The cfg'd arms are only present
+// on a SIMD build for the matching architecture.
+// ======================================================================
+
+/// `y[t] += alpha * x[t]` (GEMM 1-row stream, CSR matmat, SJLT dense apply,
+/// dense `A^T x` accumulate).
+#[inline(always)]
+pub fn axpy_acc(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::axpy_acc(alpha, x, y) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::axpy_acc(alpha, x, y) },
+        _ => scalar::axpy_acc(alpha, x, y),
+    }
+}
+
+/// Two interleaved axpy streams sharing one `x` load:
+/// `y0[t] += a0 * x[t]; y1[t] += a1 * x[t]` (GEMM 2-row micro step).
+#[inline(always)]
+pub fn axpy2_acc(a0: f64, a1: f64, x: &[f64], y0: &mut [f64], y1: &mut [f64]) {
+    debug_assert_eq!(x.len(), y0.len());
+    debug_assert_eq!(x.len(), y1.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::axpy2_acc(a0, a1, x, y0, y1) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::axpy2_acc(a0, a1, x, y0, y1) },
+        _ => scalar::axpy2_acc(a0, a1, x, y0, y1),
+    }
+}
+
+/// Four interleaved axpy streams sharing one `x` load (SYRK 4-row micro
+/// step): `yk[t] += a[k] * x[t]` for k = 0..4.
+#[inline(always)]
+pub fn axpy4_acc(
+    a: [f64; 4],
+    x: &[f64],
+    y0: &mut [f64],
+    y1: &mut [f64],
+    y2: &mut [f64],
+    y3: &mut [f64],
+) {
+    debug_assert_eq!(x.len(), y0.len());
+    debug_assert_eq!(x.len(), y1.len());
+    debug_assert_eq!(x.len(), y2.len());
+    debug_assert_eq!(x.len(), y3.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::axpy4_acc(a, x, y0, y1, y2, y3) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::axpy4_acc(a, x, y0, y1, y2, y3) },
+        _ => scalar::axpy4_acc(a, x, y0, y1, y2, y3),
+    }
+}
+
+/// Radix-2 FWHT butterfly across a row pair:
+/// `(top[t], bot[t]) = (top[t] + bot[t], top[t] - bot[t])`.
+#[inline(always)]
+pub fn butterfly2(top: &mut [f64], bot: &mut [f64]) {
+    debug_assert_eq!(top.len(), bot.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::butterfly2(top, bot) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::butterfly2(top, bot) },
+        _ => scalar::butterfly2(top, bot),
+    }
+}
+
+/// Radix-4 FWHT butterfly across four rows (two fused stages):
+/// `s01 = r0+r1; d01 = r0-r1; s23 = r2+r3; d23 = r2-r3;`
+/// `r0 = s01+s23; r1 = d01+d23; r2 = s01-s23; r3 = d01-d23`.
+#[inline(always)]
+pub fn butterfly4(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+    debug_assert_eq!(r0.len(), r1.len());
+    debug_assert_eq!(r0.len(), r2.len());
+    debug_assert_eq!(r0.len(), r3.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::butterfly4(r0, r1, r2, r3) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::butterfly4(r0, r1, r2, r3) },
+        _ => scalar::butterfly4(r0, r1, r2, r3),
+    }
+}
+
+/// Dot product on the fixed [`DOT_LANES`]-accumulator schedule (the
+/// crate-wide `dot`, used by dense matvec and the CG/PCG loops).
+#[inline(always)]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::dot(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// Four sequential-order dot products against a shared stream:
+/// `out[k] = Σ_p x[p] * ak[p]`, each accumulated in strict ascending `p`
+/// with a single running sum (the Cholesky trailing-update schedule; NOT the
+/// 4-lane `dot` schedule). Vector versions put the four *outputs* in lanes.
+#[inline(always)]
+pub fn dot4_seq(x: &[f64], a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64]) -> [f64; 4] {
+    debug_assert_eq!(x.len(), a0.len());
+    debug_assert_eq!(x.len(), a1.len());
+    debug_assert_eq!(x.len(), a2.len());
+    debug_assert_eq!(x.len(), a3.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::dot4_seq(x, a0, a1, a2, a3) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::dot4_seq(x, a0, a1, a2, a3) },
+        _ => scalar::dot4_seq(x, a0, a1, a2, a3),
+    }
+}
+
+/// CSR row · dense vector: `Σ_p values[p] * x[indices[p]]`, single running
+/// sum in strict element order. Vector versions compute the products in
+/// lanes (AVX2 gathers `x`) and fold them into the sum in order — the
+/// add chain stays sequential, so gains are modest but parity is exact.
+#[inline(always)]
+pub fn csr_row_dot(indices: &[u32], values: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::csr_row_dot(indices, values, x) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::csr_row_dot(indices, values, x) },
+        _ => scalar::csr_row_dot(indices, values, x),
+    }
+}
+
+/// Indexed scatter-accumulate: `y[indices[p]] += alpha * values[p]` in
+/// strict element order (CSR `A^T x`, CSR Gram, SJLT-on-CSR apply). The
+/// products vectorize; the indexed adds stay scalar and in order, so the
+/// result is bit-identical even with repeated indices.
+#[inline(always)]
+pub fn scatter_axpy(alpha: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(indices.len(), values.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::scatter_axpy(alpha, indices, values, y) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::scatter_axpy(alpha, indices, values, y) },
+        _ => scalar::scatter_axpy(alpha, indices, values, y),
+    }
+}
+
+/// Equal-pattern sparse pair dot (the `gram_rows` fast path for rows with
+/// identical column structure, e.g. the diagonal):
+/// `Σ_p (vi[p] * vj[p]) * weights[indices[p]]` (or unweighted), single
+/// running sum in strict element order.
+#[inline(always)]
+pub fn csr_pair_dot(indices: &[u32], vi: &[f64], vj: &[f64], weights: Option<&[f64]>) -> f64 {
+    debug_assert_eq!(indices.len(), vi.len());
+    debug_assert_eq!(indices.len(), vj.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::csr_pair_dot(indices, vi, vj, weights) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::csr_pair_dot(indices, vi, vj, weights) },
+        _ => scalar::csr_pair_dot(indices, vi, vj, weights),
+    }
+}
+
+// ======================================================================
+// Scalar bodies: the semantic definition of every primitive. These are
+// the exact loops the kernels ran before this layer existed — the scalar
+// build compiles to the same code as before.
+// ======================================================================
+
+pub(crate) mod scalar {
+    #[inline(always)]
+    pub fn axpy_acc(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yv, &xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
+    }
+
+    #[inline(always)]
+    pub fn axpy2_acc(a0: f64, a1: f64, x: &[f64], y0: &mut [f64], y1: &mut [f64]) {
+        for (t, &xv) in x.iter().enumerate() {
+            y0[t] += a0 * xv;
+            y1[t] += a1 * xv;
+        }
+    }
+
+    #[inline(always)]
+    pub fn axpy4_acc(
+        a: [f64; 4],
+        x: &[f64],
+        y0: &mut [f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        y3: &mut [f64],
+    ) {
+        for (t, &xv) in x.iter().enumerate() {
+            y0[t] += a[0] * xv;
+            y1[t] += a[1] * xv;
+            y2[t] += a[2] * xv;
+            y3[t] += a[3] * xv;
+        }
+    }
+
+    #[inline(always)]
+    pub fn butterfly2(top: &mut [f64], bot: &mut [f64]) {
+        for (tv, bv) in top.iter_mut().zip(bot.iter_mut()) {
+            let x = *tv;
+            let y = *bv;
+            *tv = x + y;
+            *bv = x - y;
+        }
+    }
+
+    #[inline(always)]
+    pub fn butterfly4(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+        for t in 0..r0.len() {
+            let a0 = r0[t];
+            let a1 = r1[t];
+            let a2 = r2[t];
+            let a3 = r3[t];
+            let s01 = a0 + a1;
+            let d01 = a0 - a1;
+            let s23 = a2 + a3;
+            let d23 = a2 - a3;
+            r0[t] = s01 + s23;
+            r1[t] = d01 + d23;
+            r2[t] = s01 - s23;
+            r3[t] = d01 - d23;
+        }
+    }
+
+    /// The fixed 4-virtual-lane reduction schedule (see module docs).
+    #[inline(always)]
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let mut s0 = 0.0;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        let mut s3 = 0.0;
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = 4 * k;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[inline(always)]
+    pub fn dot4_seq(x: &[f64], a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64]) -> [f64; 4] {
+        let mut s = [0.0f64; 4];
+        for (p, &xv) in x.iter().enumerate() {
+            s[0] += xv * a0[p];
+            s[1] += xv * a1[p];
+            s[2] += xv * a2[p];
+            s[3] += xv * a3[p];
+        }
+        s
+    }
+
+    #[inline(always)]
+    pub fn csr_row_dot(indices: &[u32], values: &[f64], x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (ci, v) in indices.iter().zip(values) {
+            s += v * x[*ci as usize];
+        }
+        s
+    }
+
+    #[inline(always)]
+    pub fn scatter_axpy(alpha: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
+        for (ci, v) in indices.iter().zip(values) {
+            y[*ci as usize] += alpha * v;
+        }
+    }
+
+    #[inline(always)]
+    pub fn csr_pair_dot(indices: &[u32], vi: &[f64], vj: &[f64], weights: Option<&[f64]>) -> f64 {
+        let mut s = 0.0;
+        match weights {
+            Some(ws) => {
+                for (p, ci) in indices.iter().enumerate() {
+                    let prod = vi[p] * vj[p];
+                    s += prod * ws[*ci as usize];
+                }
+            }
+            None => {
+                for p in 0..indices.len() {
+                    s += vi[p] * vj[p];
+                }
+            }
+        }
+        s
+    }
+}
+
+// ======================================================================
+// AVX2 bodies (x86_64, `simd` feature). All arithmetic is unfused
+// (separate vmulpd/vaddpd — never vfmadd) to match scalar rounding.
+// ======================================================================
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available. `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_acc(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let av = _mm256_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_pd(xp.add(i));
+            let yv = _mm256_loadu_pd(yp.add(i));
+            _mm256_storeu_pd(yp.add(i), _mm256_add_pd(yv, _mm256_mul_pd(av, xv)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; all slices same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy2_acc(a0: f64, a1: f64, x: &[f64], y0: &mut [f64], y1: &mut [f64]) {
+        let n = x.len();
+        let a0v = _mm256_set1_pd(a0);
+        let a1v = _mm256_set1_pd(a1);
+        let xp = x.as_ptr();
+        let y0p = y0.as_mut_ptr();
+        let y1p = y1.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_pd(xp.add(i));
+            let v0 = _mm256_loadu_pd(y0p.add(i));
+            let v1 = _mm256_loadu_pd(y1p.add(i));
+            _mm256_storeu_pd(y0p.add(i), _mm256_add_pd(v0, _mm256_mul_pd(a0v, xv)));
+            _mm256_storeu_pd(y1p.add(i), _mm256_add_pd(v1, _mm256_mul_pd(a1v, xv)));
+            i += 4;
+        }
+        while i < n {
+            y0[i] += a0 * x[i];
+            y1[i] += a1 * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; all slices same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4_acc(
+        a: [f64; 4],
+        x: &[f64],
+        y0: &mut [f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        y3: &mut [f64],
+    ) {
+        let n = x.len();
+        let a0v = _mm256_set1_pd(a[0]);
+        let a1v = _mm256_set1_pd(a[1]);
+        let a2v = _mm256_set1_pd(a[2]);
+        let a3v = _mm256_set1_pd(a[3]);
+        let xp = x.as_ptr();
+        let (y0p, y1p, y2p, y3p) =
+            (y0.as_mut_ptr(), y1.as_mut_ptr(), y2.as_mut_ptr(), y3.as_mut_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_pd(xp.add(i));
+            let v0 = _mm256_loadu_pd(y0p.add(i));
+            _mm256_storeu_pd(y0p.add(i), _mm256_add_pd(v0, _mm256_mul_pd(a0v, xv)));
+            let v1 = _mm256_loadu_pd(y1p.add(i));
+            _mm256_storeu_pd(y1p.add(i), _mm256_add_pd(v1, _mm256_mul_pd(a1v, xv)));
+            let v2 = _mm256_loadu_pd(y2p.add(i));
+            _mm256_storeu_pd(y2p.add(i), _mm256_add_pd(v2, _mm256_mul_pd(a2v, xv)));
+            let v3 = _mm256_loadu_pd(y3p.add(i));
+            _mm256_storeu_pd(y3p.add(i), _mm256_add_pd(v3, _mm256_mul_pd(a3v, xv)));
+            i += 4;
+        }
+        while i < n {
+            y0[i] += a[0] * x[i];
+            y1[i] += a[1] * x[i];
+            y2[i] += a[2] * x[i];
+            y3[i] += a[3] * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; slices same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly2(top: &mut [f64], bot: &mut [f64]) {
+        let n = top.len();
+        let tp = top.as_mut_ptr();
+        let bp = bot.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(tp.add(i));
+            let y = _mm256_loadu_pd(bp.add(i));
+            _mm256_storeu_pd(tp.add(i), _mm256_add_pd(x, y));
+            _mm256_storeu_pd(bp.add(i), _mm256_sub_pd(x, y));
+            i += 4;
+        }
+        while i < n {
+            let x = top[i];
+            let y = bot[i];
+            top[i] = x + y;
+            bot[i] = x - y;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; slices same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly4(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+        let n = r0.len();
+        let (p0, p1, p2, p3) =
+            (r0.as_mut_ptr(), r1.as_mut_ptr(), r2.as_mut_ptr(), r3.as_mut_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let a0 = _mm256_loadu_pd(p0.add(i));
+            let a1 = _mm256_loadu_pd(p1.add(i));
+            let a2 = _mm256_loadu_pd(p2.add(i));
+            let a3 = _mm256_loadu_pd(p3.add(i));
+            let s01 = _mm256_add_pd(a0, a1);
+            let d01 = _mm256_sub_pd(a0, a1);
+            let s23 = _mm256_add_pd(a2, a3);
+            let d23 = _mm256_sub_pd(a2, a3);
+            _mm256_storeu_pd(p0.add(i), _mm256_add_pd(s01, s23));
+            _mm256_storeu_pd(p1.add(i), _mm256_add_pd(d01, d23));
+            _mm256_storeu_pd(p2.add(i), _mm256_sub_pd(s01, s23));
+            _mm256_storeu_pd(p3.add(i), _mm256_sub_pd(d01, d23));
+            i += 4;
+        }
+        while i < n {
+            let a0 = r0[i];
+            let a1 = r1[i];
+            let a2 = r2[i];
+            let a3 = r3[i];
+            let s01 = a0 + a1;
+            let d01 = a0 - a1;
+            let s23 = a2 + a3;
+            let d23 = a2 - a3;
+            r0[i] = s01 + s23;
+            r1[i] = d01 + d23;
+            r2[i] = s01 - s23;
+            r3[i] = d01 - d23;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        // One ymm holds the four virtual lanes: lane l accumulates elements
+        // i % 4 == l, exactly the scalar s0..s3 schedule.
+        let mut acc = _mm256_setzero_pd();
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = 4 * k;
+            let av = _mm256_loadu_pd(ap.add(i));
+            let bv = _mm256_loadu_pd(bp.add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        // left-associative lane combine, matching the scalar s0+s1+s2+s3
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; all slices same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_seq(x: &[f64], a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64]) -> [f64; 4] {
+        let n = x.len();
+        // acc lane k == the k-th output's single sequential accumulator.
+        let mut acc = _mm256_setzero_pd();
+        let (p0, p1, p2, p3) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
+        let chunks = n / 4;
+        for kc in 0..chunks {
+            let p = 4 * kc;
+            // 4x4 in-register transpose: rows rk = ak[p..p+4] -> columns
+            // ck = [a0[p+k], a1[p+k], a2[p+k], a3[p+k]]
+            let r0 = _mm256_loadu_pd(p0.add(p));
+            let r1 = _mm256_loadu_pd(p1.add(p));
+            let r2 = _mm256_loadu_pd(p2.add(p));
+            let r3 = _mm256_loadu_pd(p3.add(p));
+            let t0 = _mm256_unpacklo_pd(r0, r1); // [a0_0 a1_0 a0_2 a1_2]
+            let t1 = _mm256_unpackhi_pd(r0, r1); // [a0_1 a1_1 a0_3 a1_3]
+            let t2 = _mm256_unpacklo_pd(r2, r3);
+            let t3 = _mm256_unpackhi_pd(r2, r3);
+            let c0 = _mm256_permute2f128_pd::<0x20>(t0, t2);
+            let c1 = _mm256_permute2f128_pd::<0x20>(t1, t3);
+            let c2 = _mm256_permute2f128_pd::<0x31>(t0, t2);
+            let c3 = _mm256_permute2f128_pd::<0x31>(t1, t3);
+            // strict ascending-p accumulation per lane (one add per p)
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(x[p]), c0));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(x[p + 1]), c1));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(x[p + 2]), c2));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(x[p + 3]), c3));
+        }
+        let mut s = [0.0f64; 4];
+        _mm256_storeu_pd(s.as_mut_ptr(), acc);
+        for p in 4 * chunks..n {
+            let xv = x[p];
+            s[0] += xv * a0[p];
+            s[1] += xv * a1[p];
+            s[2] += xv * a2[p];
+            s[3] += xv * a3[p];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `indices.len() == values.len()`
+    /// and every index is in bounds for `x`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn csr_row_dot(indices: &[u32], values: &[f64], x: &[f64]) -> f64 {
+        // i32 gather sign-extends the offsets; indices >= 2^31 would go
+        // negative. The data layer caps d below 2^32, so only guard the
+        // pathological half-range.
+        if x.len() > i32::MAX as usize {
+            return super::scalar::csr_row_dot(indices, values, x);
+        }
+        let n = indices.len();
+        let xp = x.as_ptr();
+        let vp = values.as_ptr();
+        let ip = indices.as_ptr();
+        let mut s = 0.0f64;
+        let mut lanes = [0.0f64; 4];
+        let mut p = 0;
+        while p + 4 <= n {
+            let idx = _mm_loadu_si128(ip.add(p) as *const __m128i);
+            let xs = _mm256_i32gather_pd::<8>(xp, idx);
+            let vs = _mm256_loadu_pd(vp.add(p));
+            _mm256_storeu_pd(lanes.as_mut_ptr(), _mm256_mul_pd(vs, xs));
+            // products fold into the single sum in strict element order
+            s += lanes[0];
+            s += lanes[1];
+            s += lanes[2];
+            s += lanes[3];
+            p += 4;
+        }
+        while p < n {
+            s += values[p] * x[indices[p] as usize];
+            p += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `indices.len() == values.len()`
+    /// and every index is in bounds for `y`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_axpy(alpha: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
+        let n = indices.len();
+        let av = _mm256_set1_pd(alpha);
+        let vp = values.as_ptr();
+        let mut prods = [0.0f64; 4];
+        let mut p = 0;
+        while p + 4 <= n {
+            let vs = _mm256_loadu_pd(vp.add(p));
+            _mm256_storeu_pd(prods.as_mut_ptr(), _mm256_mul_pd(av, vs));
+            // indexed adds stay scalar and in element order (safe even with
+            // repeated indices)
+            y[indices[p] as usize] += prods[0];
+            y[indices[p + 1] as usize] += prods[1];
+            y[indices[p + 2] as usize] += prods[2];
+            y[indices[p + 3] as usize] += prods[3];
+            p += 4;
+        }
+        while p < n {
+            y[indices[p] as usize] += alpha * values[p];
+            p += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; slices same length and every
+    /// index in bounds for `weights` when present.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn csr_pair_dot(
+        indices: &[u32],
+        vi: &[f64],
+        vj: &[f64],
+        weights: Option<&[f64]>,
+    ) -> f64 {
+        let n = indices.len();
+        let pi = vi.as_ptr();
+        let pj = vj.as_ptr();
+        let mut s = 0.0f64;
+        let mut lanes = [0.0f64; 4];
+        match weights {
+            Some(ws) => {
+                if ws.len() > i32::MAX as usize {
+                    return super::scalar::csr_pair_dot(indices, vi, vj, weights);
+                }
+                let wp = ws.as_ptr();
+                let ip = indices.as_ptr();
+                let mut p = 0;
+                while p + 4 <= n {
+                    let prod = _mm256_mul_pd(_mm256_loadu_pd(pi.add(p)), _mm256_loadu_pd(pj.add(p)));
+                    let idx = _mm_loadu_si128(ip.add(p) as *const __m128i);
+                    let wv = _mm256_i32gather_pd::<8>(wp, idx);
+                    _mm256_storeu_pd(lanes.as_mut_ptr(), _mm256_mul_pd(prod, wv));
+                    s += lanes[0];
+                    s += lanes[1];
+                    s += lanes[2];
+                    s += lanes[3];
+                    p += 4;
+                }
+                while p < n {
+                    let prod = vi[p] * vj[p];
+                    s += prod * ws[indices[p] as usize];
+                    p += 1;
+                }
+            }
+            None => {
+                let mut p = 0;
+                while p + 4 <= n {
+                    let prod = _mm256_mul_pd(_mm256_loadu_pd(pi.add(p)), _mm256_loadu_pd(pj.add(p)));
+                    _mm256_storeu_pd(lanes.as_mut_ptr(), prod);
+                    s += lanes[0];
+                    s += lanes[1];
+                    s += lanes[2];
+                    s += lanes[3];
+                    p += 4;
+                }
+                while p < n {
+                    s += vi[p] * vj[p];
+                    p += 1;
+                }
+            }
+        }
+        s
+    }
+}
+
+// ======================================================================
+// NEON bodies (aarch64, `simd` feature). Two float64x2 registers stand in
+// for each 4-wide virtual vector; unfused mul + add throughout.
+// ======================================================================
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must ensure NEON is available (aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_acc(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let av = vdupq_n_f64(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            let xv = vld1q_f64(xp.add(i));
+            let yv = vld1q_f64(yp.add(i));
+            vst1q_f64(yp.add(i), vaddq_f64(yv, vmulq_f64(av, xv)));
+            i += 2;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; all slices same length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy2_acc(a0: f64, a1: f64, x: &[f64], y0: &mut [f64], y1: &mut [f64]) {
+        let n = x.len();
+        let a0v = vdupq_n_f64(a0);
+        let a1v = vdupq_n_f64(a1);
+        let xp = x.as_ptr();
+        let y0p = y0.as_mut_ptr();
+        let y1p = y1.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            let xv = vld1q_f64(xp.add(i));
+            let v0 = vld1q_f64(y0p.add(i));
+            let v1 = vld1q_f64(y1p.add(i));
+            vst1q_f64(y0p.add(i), vaddq_f64(v0, vmulq_f64(a0v, xv)));
+            vst1q_f64(y1p.add(i), vaddq_f64(v1, vmulq_f64(a1v, xv)));
+            i += 2;
+        }
+        while i < n {
+            y0[i] += a0 * x[i];
+            y1[i] += a1 * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; all slices same length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy4_acc(
+        a: [f64; 4],
+        x: &[f64],
+        y0: &mut [f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        y3: &mut [f64],
+    ) {
+        let n = x.len();
+        let a0v = vdupq_n_f64(a[0]);
+        let a1v = vdupq_n_f64(a[1]);
+        let a2v = vdupq_n_f64(a[2]);
+        let a3v = vdupq_n_f64(a[3]);
+        let xp = x.as_ptr();
+        let (y0p, y1p, y2p, y3p) =
+            (y0.as_mut_ptr(), y1.as_mut_ptr(), y2.as_mut_ptr(), y3.as_mut_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            let xv = vld1q_f64(xp.add(i));
+            let v0 = vld1q_f64(y0p.add(i));
+            vst1q_f64(y0p.add(i), vaddq_f64(v0, vmulq_f64(a0v, xv)));
+            let v1 = vld1q_f64(y1p.add(i));
+            vst1q_f64(y1p.add(i), vaddq_f64(v1, vmulq_f64(a1v, xv)));
+            let v2 = vld1q_f64(y2p.add(i));
+            vst1q_f64(y2p.add(i), vaddq_f64(v2, vmulq_f64(a2v, xv)));
+            let v3 = vld1q_f64(y3p.add(i));
+            vst1q_f64(y3p.add(i), vaddq_f64(v3, vmulq_f64(a3v, xv)));
+            i += 2;
+        }
+        while i < n {
+            y0[i] += a[0] * x[i];
+            y1[i] += a[1] * x[i];
+            y2[i] += a[2] * x[i];
+            y3[i] += a[3] * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; slices same length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn butterfly2(top: &mut [f64], bot: &mut [f64]) {
+        let n = top.len();
+        let tp = top.as_mut_ptr();
+        let bp = bot.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            let x = vld1q_f64(tp.add(i));
+            let y = vld1q_f64(bp.add(i));
+            vst1q_f64(tp.add(i), vaddq_f64(x, y));
+            vst1q_f64(bp.add(i), vsubq_f64(x, y));
+            i += 2;
+        }
+        while i < n {
+            let x = top[i];
+            let y = bot[i];
+            top[i] = x + y;
+            bot[i] = x - y;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; slices same length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn butterfly4(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+        let n = r0.len();
+        let (p0, p1, p2, p3) =
+            (r0.as_mut_ptr(), r1.as_mut_ptr(), r2.as_mut_ptr(), r3.as_mut_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            let a0 = vld1q_f64(p0.add(i));
+            let a1 = vld1q_f64(p1.add(i));
+            let a2 = vld1q_f64(p2.add(i));
+            let a3 = vld1q_f64(p3.add(i));
+            let s01 = vaddq_f64(a0, a1);
+            let d01 = vsubq_f64(a0, a1);
+            let s23 = vaddq_f64(a2, a3);
+            let d23 = vsubq_f64(a2, a3);
+            vst1q_f64(p0.add(i), vaddq_f64(s01, s23));
+            vst1q_f64(p1.add(i), vaddq_f64(d01, d23));
+            vst1q_f64(p2.add(i), vsubq_f64(s01, s23));
+            vst1q_f64(p3.add(i), vsubq_f64(d01, d23));
+            i += 2;
+        }
+        while i < n {
+            let a0 = r0[i];
+            let a1 = r1[i];
+            let a2 = r2[i];
+            let a3 = r3[i];
+            let s01 = a0 + a1;
+            let d01 = a0 - a1;
+            let s23 = a2 + a3;
+            let d23 = a2 - a3;
+            r0[i] = s01 + s23;
+            r1[i] = d01 + d23;
+            r2[i] = s01 - s23;
+            r3[i] = d01 - d23;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        // Two registers hold the four virtual lanes: acc01 = [s0, s1],
+        // acc23 = [s2, s3] — the same schedule as the scalar s0..s3.
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = 4 * k;
+            let a01 = vld1q_f64(ap.add(i));
+            let b01 = vld1q_f64(bp.add(i));
+            acc01 = vaddq_f64(acc01, vmulq_f64(a01, b01));
+            let a23 = vld1q_f64(ap.add(i + 2));
+            let b23 = vld1q_f64(bp.add(i + 2));
+            acc23 = vaddq_f64(acc23, vmulq_f64(a23, b23));
+        }
+        let s0 = vgetq_lane_f64::<0>(acc01);
+        let s1 = vgetq_lane_f64::<1>(acc01);
+        let s2 = vgetq_lane_f64::<0>(acc23);
+        let s3 = vgetq_lane_f64::<1>(acc23);
+        let mut s = s0 + s1 + s2 + s3;
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; all slices same length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot4_seq(x: &[f64], a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64]) -> [f64; 4] {
+        let n = x.len();
+        // acc01 = [out0, out1], acc23 = [out2, out3]: outputs live in lanes,
+        // each advanced once per p in strict ascending order.
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let (p0, p1, p2, p3) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
+        for p in 0..n {
+            let xv = vdupq_n_f64(x[p]);
+            let c01 = vcombine_f64(vld1_f64(p0.add(p)), vld1_f64(p1.add(p)));
+            let c23 = vcombine_f64(vld1_f64(p2.add(p)), vld1_f64(p3.add(p)));
+            acc01 = vaddq_f64(acc01, vmulq_f64(xv, c01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(xv, c23));
+        }
+        [
+            vgetq_lane_f64::<0>(acc01),
+            vgetq_lane_f64::<1>(acc01),
+            vgetq_lane_f64::<0>(acc23),
+            vgetq_lane_f64::<1>(acc23),
+        ]
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; `indices.len() == values.len()`
+    /// and every index in bounds for `x`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn csr_row_dot(indices: &[u32], values: &[f64], x: &[f64]) -> f64 {
+        let n = indices.len();
+        let xp = x.as_ptr();
+        let vp = values.as_ptr();
+        let mut s = 0.0f64;
+        let mut p = 0;
+        while p + 2 <= n {
+            let xs = vcombine_f64(
+                vld1_f64(xp.add(indices[p] as usize)),
+                vld1_f64(xp.add(indices[p + 1] as usize)),
+            );
+            let vs = vld1q_f64(vp.add(p));
+            let prod = vmulq_f64(vs, xs);
+            s += vgetq_lane_f64::<0>(prod);
+            s += vgetq_lane_f64::<1>(prod);
+            p += 2;
+        }
+        while p < n {
+            s += values[p] * x[indices[p] as usize];
+            p += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; `indices.len() == values.len()`
+    /// and every index in bounds for `y`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scatter_axpy(alpha: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
+        let n = indices.len();
+        let av = vdupq_n_f64(alpha);
+        let vp = values.as_ptr();
+        let mut p = 0;
+        while p + 2 <= n {
+            let prod = vmulq_f64(av, vld1q_f64(vp.add(p)));
+            y[indices[p] as usize] += vgetq_lane_f64::<0>(prod);
+            y[indices[p + 1] as usize] += vgetq_lane_f64::<1>(prod);
+            p += 2;
+        }
+        while p < n {
+            y[indices[p] as usize] += alpha * values[p];
+            p += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available; slices same length and every
+    /// index in bounds for `weights` when present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn csr_pair_dot(
+        indices: &[u32],
+        vi: &[f64],
+        vj: &[f64],
+        weights: Option<&[f64]>,
+    ) -> f64 {
+        let n = indices.len();
+        let pi = vi.as_ptr();
+        let pj = vj.as_ptr();
+        let mut s = 0.0f64;
+        match weights {
+            Some(ws) => {
+                let wp = ws.as_ptr();
+                let mut p = 0;
+                while p + 2 <= n {
+                    let prod = vmulq_f64(vld1q_f64(pi.add(p)), vld1q_f64(pj.add(p)));
+                    let wv = vcombine_f64(
+                        vld1_f64(wp.add(indices[p] as usize)),
+                        vld1_f64(wp.add(indices[p + 1] as usize)),
+                    );
+                    let w = vmulq_f64(prod, wv);
+                    s += vgetq_lane_f64::<0>(w);
+                    s += vgetq_lane_f64::<1>(w);
+                    p += 2;
+                }
+                while p < n {
+                    let prod = vi[p] * vj[p];
+                    s += prod * ws[indices[p] as usize];
+                    p += 1;
+                }
+            }
+            None => {
+                let mut p = 0;
+                while p + 2 <= n {
+                    let prod = vmulq_f64(vld1q_f64(pi.add(p)), vld1q_f64(pj.add(p)));
+                    s += vgetq_lane_f64::<0>(prod);
+                    s += vgetq_lane_f64::<1>(prod);
+                    p += 2;
+                }
+                while p < n {
+                    s += vi[p] * vj[p];
+                    p += 1;
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// `FORCE_SCALAR` is process-global and the test harness is
+    /// multi-threaded: overlapping forced windows would restore out of
+    /// order, so every test here (forcing or observing `isa()`) serializes.
+    static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn serialized() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Remainder-heavy lengths: multiples of 4, of 2 only, and odd.
+    const LENS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 15, 16, 33, 63, 64, 100, 129];
+
+    fn vecs(rng: &mut Rng, n: usize, k: usize) -> Vec<Vec<f64>> {
+        (0..k).map(|_| (0..n).map(|_| rng.gaussian()).collect()).collect()
+    }
+
+    /// Assert that the dispatched primitive matches the forced-scalar run
+    /// bitwise. On a scalar build this is trivially true; on a SIMD build it
+    /// exercises the vector bodies against the scalar contract.
+    #[test]
+    fn primitives_match_scalar_bitwise_at_remainder_lengths() {
+        let _g = serialized();
+        let mut rng = Rng::seed_from(401);
+        for &n in LENS {
+            let v = vecs(&mut rng, n, 7);
+            let (x, a0, a1, a2, a3) = (&v[0], &v[1], &v[2], &v[3], &v[4]);
+            let alpha = 0.37;
+
+            // axpy family
+            let mut y = v[5].clone();
+            axpy_acc(alpha, x, &mut y);
+            let mut yr = v[5].clone();
+            with_forced_scalar(|| axpy_acc(alpha, x, &mut yr));
+            assert_eq!(y, yr, "axpy_acc n={n}");
+
+            let (mut y0, mut y1) = (v[5].clone(), v[6].clone());
+            axpy2_acc(0.3, -1.7, x, &mut y0, &mut y1);
+            let (mut z0, mut z1) = (v[5].clone(), v[6].clone());
+            with_forced_scalar(|| axpy2_acc(0.3, -1.7, x, &mut z0, &mut z1));
+            assert_eq!((y0, y1), (z0, z1), "axpy2_acc n={n}");
+
+            let mut ys = [a0.clone(), a1.clone(), a2.clone(), a3.clone()];
+            {
+                let [u0, u1, u2, u3] = &mut ys;
+                axpy4_acc([1.1, -0.2, 3.0, 0.5], x, u0, u1, u2, u3);
+            }
+            let mut zs = [a0.clone(), a1.clone(), a2.clone(), a3.clone()];
+            {
+                let [u0, u1, u2, u3] = &mut zs;
+                with_forced_scalar(|| axpy4_acc([1.1, -0.2, 3.0, 0.5], x, u0, u1, u2, u3));
+            }
+            assert_eq!(ys, zs, "axpy4_acc n={n}");
+
+            // butterflies
+            let (mut t, mut b) = (a0.clone(), a1.clone());
+            butterfly2(&mut t, &mut b);
+            let (mut tr, mut br) = (a0.clone(), a1.clone());
+            with_forced_scalar(|| butterfly2(&mut tr, &mut br));
+            assert_eq!((t, b), (tr, br), "butterfly2 n={n}");
+
+            let mut rs = [a0.clone(), a1.clone(), a2.clone(), a3.clone()];
+            {
+                let [u0, u1, u2, u3] = &mut rs;
+                butterfly4(u0, u1, u2, u3);
+            }
+            let mut qs = [a0.clone(), a1.clone(), a2.clone(), a3.clone()];
+            {
+                let [u0, u1, u2, u3] = &mut qs;
+                with_forced_scalar(|| butterfly4(u0, u1, u2, u3));
+            }
+            assert_eq!(rs, qs, "butterfly4 n={n}");
+
+            // reductions
+            let d = dot(a0, a1);
+            let dr = with_forced_scalar(|| dot(a0, a1));
+            assert_eq!(d.to_bits(), dr.to_bits(), "dot n={n}");
+
+            let q = dot4_seq(x, a0, a1, a2, a3);
+            let qr = with_forced_scalar(|| dot4_seq(x, a0, a1, a2, a3));
+            assert_eq!(q, qr, "dot4_seq n={n}");
+        }
+    }
+
+    #[test]
+    fn csr_primitives_match_scalar_bitwise() {
+        let _g = serialized();
+        let mut rng = Rng::seed_from(403);
+        let xlen = 257;
+        let x: Vec<f64> = (0..xlen).map(|_| rng.gaussian()).collect();
+        let w: Vec<f64> = (0..xlen).map(|_| 0.5 + rng.uniform()).collect();
+        for &n in LENS {
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(xlen) as u32).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let vj: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+
+            let d = csr_row_dot(&idx, &vals, &x);
+            let dr = with_forced_scalar(|| csr_row_dot(&idx, &vals, &x));
+            assert_eq!(d.to_bits(), dr.to_bits(), "csr_row_dot n={n}");
+
+            let mut y = x.clone();
+            scatter_axpy(0.73, &idx, &vals, &mut y);
+            let mut yr = x.clone();
+            with_forced_scalar(|| scatter_axpy(0.73, &idx, &vals, &mut yr));
+            assert_eq!(y, yr, "scatter_axpy n={n}");
+
+            for weights in [None, Some(&w[..])] {
+                let p = csr_pair_dot(&idx, &vals, &vj, weights);
+                let pr = with_forced_scalar(|| csr_pair_dot(&idx, &vals, &vj, weights));
+                assert_eq!(p.to_bits(), pr.to_bits(), "csr_pair_dot n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_documented_schedule() {
+        // dot() must implement exactly the 4-virtual-lane schedule, not any
+        // other association.
+        let a: Vec<f64> = (0..11).map(|i| (i as f64) * 0.1 + 1.0).collect();
+        let b: Vec<f64> = (0..11).map(|i| 2.0 - (i as f64) * 0.05).collect();
+        let mut s0 = 0.0;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        let mut s3 = 0.0;
+        for k in 0..2 {
+            let i = 4 * k;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut expect = s0 + s1 + s2 + s3;
+        for i in 8..11 {
+            expect += a[i] * b[i];
+        }
+        assert_eq!(dot(&a, &b).to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn forced_scalar_restores_on_exit() {
+        let _g = serialized();
+        let before = isa();
+        with_forced_scalar(|| assert_eq!(isa(), Isa::Scalar));
+        assert_eq!(isa(), before);
+    }
+
+    #[test]
+    fn isa_name_and_feature_flag_are_consistent() {
+        let _g = serialized();
+        let k = active_kernel();
+        assert!(["scalar", "avx2", "neon"].contains(&k));
+        if !feature_enabled() {
+            assert_eq!(k, "scalar");
+        }
+    }
+}

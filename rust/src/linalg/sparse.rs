@@ -10,6 +10,7 @@
 //! thread count.
 
 use super::matrix::Matrix;
+use super::simd;
 use crate::par;
 use crate::par::PAR_MIN_FLOPS;
 
@@ -182,15 +183,12 @@ impl Csr {
         }
     }
 
-    /// Sequential dot of row `i` with dense `x`.
+    /// Sequential dot of row `i` with dense `x` (single running sum in
+    /// element order, via [`simd::csr_row_dot`]).
     #[inline]
     fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
         let (cis, vs) = self.row(i);
-        let mut s = 0.0;
-        for (ci, v) in cis.iter().zip(vs) {
-            s += v * x[*ci as usize];
-        }
-        s
+        simd::csr_row_dot(cis, vs, x)
     }
 
     /// `y = A x`. Rows are partitioned over the thread budget with
@@ -231,16 +229,7 @@ impl Csr {
         }
         if 2.0 * self.nnz() as f64 < PAR_MIN_FLOPS {
             y.iter_mut().for_each(|v| *v = 0.0);
-            for i in 0..self.rows {
-                let xi = x[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let (cis, vs) = self.row(i);
-                for (ci, v) in cis.iter().zip(vs) {
-                    y[*ci as usize] += xi * v;
-                }
-            }
+            self.acc_rows_t(x, 0..self.rows, y);
             return;
         }
         const GRAIN: usize = 256;
@@ -249,16 +238,7 @@ impl Csr {
             GRAIN,
             |r| {
                 let mut part = vec![0.0; self.cols];
-                for i in r {
-                    let xi = x[i];
-                    if xi == 0.0 {
-                        continue;
-                    }
-                    let (cis, vs) = self.row(i);
-                    for (ci, v) in cis.iter().zip(vs) {
-                        part[*ci as usize] += xi * v;
-                    }
-                }
+                self.acc_rows_t(x, r, &mut part);
                 part
             },
             |mut p, q| {
@@ -270,6 +250,21 @@ impl Csr {
         )
         .expect("csr matvec_t: nonempty reduction");
         y.copy_from_slice(&acc);
+    }
+
+    /// The one `A^T x` scatter loop behind both `matvec_t_into` paths:
+    /// `out[ci] += x[i] * v` over the given row range, rows in ascending
+    /// order, entries in stored (ascending-column) order.
+    #[inline]
+    fn acc_rows_t(&self, x: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
+        for i in rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let (cis, vs) = self.row(i);
+            simd::scatter_axpy(xi, cis, vs, out);
+        }
     }
 
     /// `C = A P` for a dense `cols x c` block `P` (overwrites `C`,
@@ -295,10 +290,7 @@ impl Csr {
                 orow.iter_mut().for_each(|v| *v = 0.0);
                 let (cis, vs) = self.row(r0 + li);
                 for (ci, v) in cis.iter().zip(vs) {
-                    let prow = p.row(*ci as usize);
-                    for (o, pv) in orow.iter_mut().zip(prow) {
-                        *o += v * pv;
-                    }
+                    simd::axpy_acc(*v, p.row(*ci as usize), orow);
                 }
             }
         });
@@ -335,9 +327,7 @@ impl Csr {
                 let (ris, rvs) = at.row(j0 + lj);
                 for (ri, rv) in ris.iter().zip(rvs) {
                     let (cis, cvs) = self.row(*ri as usize);
-                    for (ci, cv) in cis.iter().zip(cvs) {
-                        grow[*ci as usize] += rv * cv;
-                    }
+                    simd::scatter_axpy(*rv, cis, cvs, grow);
                 }
             }
         });
@@ -380,6 +370,13 @@ impl Csr {
     fn sparse_row_dot(&self, i: usize, j: usize, weights: Option<&[f64]>) -> f64 {
         let (ci, vi) = self.row(i);
         let (cj, vj) = self.row(j);
+        // Equal-pattern fast path (always hit on the diagonal): the merge
+        // degenerates to a straight pairwise sweep, which vectorizes. Same
+        // per-element expressions in the same order as the merge below, so
+        // the value is bit-identical.
+        if ci == cj {
+            return simd::csr_pair_dot(ci, vi, vj, weights);
+        }
         let (mut p, mut q) = (0usize, 0usize);
         let mut s = 0.0;
         while p < ci.len() && q < cj.len() {

@@ -5,6 +5,7 @@
 //! is `O(s · nnz(A))`, independent of the sketch size m. The paper uses
 //! s = 1 by default; the general `s >= 1` (OSNAP) is supported.
 
+use crate::linalg::simd;
 use crate::linalg::{Csr, Matrix};
 use crate::par;
 use crate::rng::Rng;
@@ -115,9 +116,7 @@ impl SjltSketch {
                     }
                     let v = self.vals[idx] * wj;
                     let orow = &mut chunk[(r - r0) * d..(r - r0) * d + d];
-                    for t in 0..d {
-                        orow[t] += v * arow[t];
-                    }
+                    simd::axpy_acc(v, arow, orow);
                 }
             }
         });
@@ -169,9 +168,7 @@ impl SjltSketch {
                     }
                     let v = self.vals[idx] * wj;
                     let orow = &mut chunk[(r - r0) * d..(r - r0) * d + d];
-                    for (ci, av) in cis.iter().zip(vs) {
-                        orow[*ci as usize] += v * av;
-                    }
+                    simd::scatter_axpy(v, cis, vs, orow);
                 }
             }
         });

@@ -93,3 +93,172 @@ fn block_pcg_is_identical_across_thread_counts() {
         }
     }
 }
+
+/// Kernel-level scalar/SIMD parity suite (PR 6). Every micro-kernel must
+/// produce **bitwise-identical** results whether it dispatches to the
+/// scalar bodies or to the AVX2/NEON ones (the lane contract in
+/// `linalg::simd`), at 1/2/4 threads, including shapes that are not
+/// multiples of the 4-wide virtual lane (remainder lanes). On a scalar
+/// build the forced-scalar reference equals the dispatched run by
+/// construction, so the suite is a tautology there and a real parity check
+/// under `--features simd`.
+mod kernel_parity {
+    use sketchsolve::linalg::{
+        fwht_rows, matmul, matvec, matvec_t, simd, syrk_t, Cholesky, Csr, Matrix,
+    };
+    use sketchsolve::par;
+    use sketchsolve::rng::Rng;
+    use sketchsolve::sketch::SjltSketch;
+    use std::sync::Mutex;
+
+    /// `with_forced_scalar` flips a process-global flag and `cargo test`
+    /// runs tests concurrently, so every parity test serializes here to
+    /// keep the forced-scalar window exclusive (poison-tolerant: a failed
+    /// parity test must not abort the rest of the suite).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn assert_parity<T: PartialEq + std::fmt::Debug>(name: &str, f: impl Fn() -> T) {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let reference = simd::with_forced_scalar(|| par::with_threads(1, &f));
+        for t in [1usize, 2, 4] {
+            let got = par::with_threads(t, &f);
+            assert_eq!(
+                reference, got,
+                "{name}: dispatched kernel set ({}) differs from scalar at {t} threads",
+                simd::active_kernel()
+            );
+        }
+    }
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, rng.gaussian_vec(r * c))
+    }
+
+    fn random_csr(rng: &mut Rng, n: usize, d: usize, per_row: usize) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for c in rng.sample_without_replacement(per_row.min(d), d) {
+                trips.push((i, c, rng.gaussian()));
+            }
+        }
+        Csr::from_triplets(n, d, &trips)
+    }
+
+    #[test]
+    fn gemm_kernels_parity() {
+        let mut rng = Rng::seed_from(501);
+        // (600,200,150) clears PAR_MIN_FLOPS so the partition engages;
+        // (130,67,33) and (37,53,29) hit every remainder-lane tail
+        for &(m, k, n) in &[(600usize, 200usize, 150usize), (130, 67, 33), (37, 53, 29)] {
+            let a = rand_matrix(&mut rng, m, k);
+            let b = rand_matrix(&mut rng, k, n);
+            assert_parity(&format!("matmul {m}x{k}x{n}"), || matmul(&a, &b).data);
+            assert_parity(&format!("matmul_acc {m}x{k}x{n}"), || {
+                let mut c = rand_matrix(&mut Rng::seed_from(77), m, n);
+                sketchsolve::linalg::matmul_acc(&a, &b, &mut c);
+                c.data
+            });
+        }
+    }
+
+    #[test]
+    fn syrk_parity() {
+        let mut rng = Rng::seed_from(503);
+        for &(k, d) in &[(600usize, 200usize), (130, 67)] {
+            let a = rand_matrix(&mut rng, k, d);
+            assert_parity(&format!("syrk {k}x{d}"), || syrk_t(&a).data);
+        }
+    }
+
+    #[test]
+    fn matvec_parity() {
+        let mut rng = Rng::seed_from(505);
+        for &(m, k) in &[(600usize, 200usize), (37, 53)] {
+            let a = rand_matrix(&mut rng, m, k);
+            let x = rng.gaussian_vec(k);
+            let z = rng.gaussian_vec(m);
+            assert_parity(&format!("matvec {m}x{k}"), || matvec(&a, &x));
+            assert_parity(&format!("matvec_t {m}x{k}"), || matvec_t(&a, &z));
+        }
+    }
+
+    #[test]
+    fn fwht_parity() {
+        let mut rng = Rng::seed_from(507);
+        // d = 48 clears the parallel gate at n = 2048; d = 37 exercises the
+        // butterfly remainder lanes (37 = 4·9 + 1)
+        for &(n, d) in &[(2048usize, 48usize), (64, 37)] {
+            let a = rand_matrix(&mut rng, n, d);
+            assert_parity(&format!("fwht {n}x{d}"), || {
+                let mut x = a.clone();
+                fwht_rows(&mut x);
+                x.data
+            });
+        }
+    }
+
+    #[test]
+    fn cholesky_parity() {
+        let mut rng = Rng::seed_from(509);
+        // 321 = 5 panels of 64 + 1: trailing updates clear the parallel
+        // gate early, and the odd size hits the quad/pair/single remainder
+        // column groups
+        let n = 321;
+        let a = rand_matrix(&mut rng, n + 3, n);
+        let mut g = syrk_t(&a);
+        for i in 0..n {
+            g.data[i * n + i] += 1.0;
+        }
+        assert_parity("cholesky 321", || Cholesky::factor(&g).unwrap().l.data);
+    }
+
+    #[test]
+    fn csr_kernels_parity() {
+        let mut rng = Rng::seed_from(511);
+        // big: nnz ≈ 1M so 2·nnz clears the gate; small: remainder tails
+        for &(n, d, per_row) in &[(8192usize, 256usize, 128usize), (37, 19, 5)] {
+            let c = random_csr(&mut rng, n, d, per_row);
+            let x = rng.gaussian_vec(d);
+            let z = rng.gaussian_vec(n);
+            let p = rand_matrix(&mut rng, d, 8);
+            assert_parity(&format!("csr_matvec {n}x{d}"), || {
+                let mut y = vec![0.0; n];
+                c.matvec_into(&x, &mut y);
+                y
+            });
+            assert_parity(&format!("csr_matvec_t {n}x{d}"), || {
+                let mut y = vec![0.0; d];
+                c.matvec_t_into(&z, &mut y);
+                y
+            });
+            assert_parity(&format!("csr_matmat {n}x{d}"), || {
+                let mut o = Matrix::zeros(n, 8);
+                c.matmat_into(&p, &mut o);
+                o.data
+            });
+            assert_parity(&format!("csr_gram {n}x{d}"), || c.gram().data);
+        }
+    }
+
+    #[test]
+    fn csr_gram_rows_parity() {
+        let mut rng = Rng::seed_from(513);
+        let c = random_csr(&mut rng, 300, 64, 8);
+        let w: Vec<f64> = (0..64).map(|_| 0.5 + rng.uniform()).collect();
+        assert_parity("csr_gram_rows unweighted", || c.gram_rows(None).data);
+        assert_parity("csr_gram_rows weighted", || c.gram_rows(Some(&w)).data);
+    }
+
+    #[test]
+    fn sjlt_apply_parity() {
+        let mut rng = Rng::seed_from(515);
+        // d = 255 leaves a 3-lane remainder on every accumulated row;
+        // 2·s·n·d clears the parallel gate
+        let (m, n, d) = (64usize, 4096usize, 255usize);
+        let a = rand_matrix(&mut rng, n, d);
+        let csr = random_csr(&mut rng, n, d, 200);
+        let sk = SjltSketch::sample(m, n, 2, &mut rng);
+        assert_parity("sjlt_apply dense", || sk.apply(&a).data);
+        assert_parity("sjlt_apply csr", || sk.apply_csr(&csr).data);
+    }
+}

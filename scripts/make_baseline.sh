@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Arm the micro-bench regression gate: run the thread-sweep micro bench on
+# THIS machine and write its medians to benchmarks/BENCH_micro.baseline.json,
+# the file scripts/compare_bench.py (and the ci.yml build-test job) diffs
+# against. The gate stays dormant until this baseline is committed — bench
+# medians only transfer between identical machines, so record the baseline
+# on the runner that will enforce it.
+#
+# Usage: scripts/make_baseline.sh [--simd] [--full]
+#   --simd   bench the --features simd build (kernel_set avx2/neon where
+#            supported); the baseline then gates the SIMD bench leg
+#   --full   full repetition counts instead of the default --quick pass
+#            (slower, tighter medians)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FEATURES=()
+QUICK=(--quick)
+for arg in "$@"; do
+  case "$arg" in
+    --simd) FEATURES=(--features simd) ;;
+    --full) QUICK=() ;;
+    *)
+      echo "unknown flag: $arg (expected --simd and/or --full)" >&2
+      exit 2
+      ;;
+  esac
+done
+
+OUT="$PWD/benchmarks/BENCH_micro.baseline.json"
+mkdir -p benchmarks
+
+echo "== cargo bench --bench micro -p sketchsolve ${FEATURES[*]:-} =="
+# the bench process runs with its cwd at the package root (rust/), so the
+# output path must be absolute
+cargo bench --bench micro -p sketchsolve "${FEATURES[@]}" -- \
+  "${QUICK[@]}" --out "$OUT"
+
+echo
+echo "baseline written to benchmarks/BENCH_micro.baseline.json"
+echo "kernel_set: $(python3 -c "import json; print(json.load(open('$OUT')).get('kernel_set'))")"
+echo
+echo "to arm the CI regression gate, commit it:"
+echo "  git add benchmarks/BENCH_micro.baseline.json"
+echo "  git commit -m 'Record micro-bench baseline'"
+echo
+echo "to check a working tree against it locally:"
+echo "  cargo bench --bench micro -p sketchsolve ${FEATURES[*]:-} -- --quick --out \$PWD/BENCH_micro.json"
+echo "  python3 scripts/compare_bench.py"

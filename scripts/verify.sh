@@ -1,12 +1,25 @@
 #!/usr/bin/env bash
 # Local mirror of the tier-1 verification (and the ci.yml build-test job).
-# Usage: scripts/verify.sh [--quick]
+# Usage: scripts/verify.sh [--quick] [--simd]
 #   --quick   skip the release build (debug test run only)
+#   --simd    additionally build + test the --features simd kernel set
+#             (mirrors the ci.yml simd job; the parity suite in
+#             tests/par_determinism.rs checks SIMD against scalar bitwise)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 QUICK=0
-[[ "${1:-}" == "--quick" ]] && QUICK=1
+SIMD=0
+for arg in "$@"; do
+  case "$arg" in
+    --quick) QUICK=1 ;;
+    --simd) SIMD=1 ;;
+    *)
+      echo "unknown flag: $arg (expected --quick and/or --simd)" >&2
+      exit 2
+      ;;
+  esac
+done
 
 if [[ "$QUICK" == "0" ]]; then
   echo "== cargo build --release =="
@@ -15,6 +28,15 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [[ "$SIMD" == "1" ]]; then
+  if [[ "$QUICK" == "0" ]]; then
+    echo "== cargo build --release -p sketchsolve --features simd =="
+    cargo build --release -p sketchsolve --features simd
+  fi
+  echo "== cargo test -q -p sketchsolve --features simd =="
+  cargo test -q -p sketchsolve --features simd
+fi
 
 # advisory: the bench targets must at least compile
 echo "== cargo bench --no-run =="
