@@ -1,0 +1,131 @@
+//! Sketch-and-precondition LSQR benchmark: f64 vs mixed-precision f32
+//! factorization vs PCG on the normal equations, same data, same seeds,
+//! swept over thread counts. Emits `BENCH_lsqr.json` in the same
+//! `{op, threads, median_s, speedup_vs_1t}` record schema as
+//! `BENCH_micro.json`, so `scripts/compare_bench.py` tracks regressions
+//! once a baseline lands from a trusted runner.
+//!
+//! The problem is the acceptance-test profile: tall dense `G·diag(σ)`
+//! with log-spaced σ giving κ(A) = 1e6, labels `y = A·x_true`. At this
+//! conditioning the LSQR paths certify 1e-10 (energy) while PCG burns a
+//! fixed iteration budget against its `u·κ(H)` stall — the wall-clock
+//! contrast, not just the matvec count, is what this bench records.
+//!
+//! `cargo bench --bench lsqr -- [--quick] [--threads N] [--out FILE]`
+
+use sketchsolve::api::{self, MethodSpec, Precision, SolveRequest, Stop};
+use sketchsolve::bench_harness::runner::bench_median;
+use sketchsolve::linalg::Matrix;
+use sketchsolve::par;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::util::{Flags, JsonValue};
+use std::sync::Arc;
+
+fn main() {
+    let flags = Flags::parse();
+    let quick = flags.has("quick");
+    let reps = if quick { 3 } else { 5 };
+    if let Some(t) = flags.threads() {
+        par::set_max_threads(t);
+    }
+    let (n, d) = if quick { (2048usize, 64usize) } else { (4096usize, 128usize) };
+    let seed = 0x15F1u64;
+
+    // κ(A) = 1e6 via log-spaced column scales (the acceptance profile)
+    let mut rng = Rng::seed_from(0xABCD);
+    let scale = 1.0 / (n as f64).sqrt();
+    let mut a = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            let sigma = 1e-6f64.powf(j as f64 / (d - 1) as f64);
+            a.set(i, j, rng.gaussian() * sigma * scale);
+        }
+    }
+    let x_true = rng.gaussian_vec(d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        y[i] = (0..d).map(|j| a.data[i * d + j] * x_true[j]).sum();
+    }
+    let prob = Arc::new(Problem::ridge_from_labels(a, &y, 3e-6));
+
+    println!("== sketch-and-precondition LSQR (n={n} d={d} kappa=1e6) ==\n");
+
+    let solve_with = |method: MethodSpec, stop: Stop| {
+        let req = SolveRequest::new(prob.clone())
+            .method(method)
+            .stop(stop)
+            .labels(y.clone())
+            .seed(seed);
+        let out = api::solve(&req).expect("solve runs");
+        out.report.iterations
+    };
+
+    let lsqr_stop = Stop { max_iters: 400, rel_tol: 1e-10, abs_decrement_tol: 0.0 };
+    // PCG gets the iteration budget the acceptance test caps it at: at
+    // this κ it cannot certify 1e-8, so a fixed budget is the fair price
+    let pcg_stop = Stop { max_iters: 300, rel_tol: 0.0, abs_decrement_tol: 0.0 };
+    let sk = SketchKind::Sjlt { s: 1 };
+    let cases: Vec<(&str, MethodSpec, Stop)> = vec![
+        (
+            "sketch_lsqr_f64",
+            MethodSpec::SketchLsqr { m: Some(4 * d), precision: Precision::F64 },
+            lsqr_stop,
+        ),
+        (
+            "sketch_lsqr_f32",
+            MethodSpec::SketchLsqr { m: Some(4 * d), precision: Precision::F32 },
+            lsqr_stop,
+        ),
+        ("pcg_normal_eqs", MethodSpec::PcgFixed { m: Some(4 * d), sketch: sk }, pcg_stop),
+    ];
+
+    let threads: Vec<usize> = vec![1, 2, 4];
+    let mut records: Vec<JsonValue> = Vec::new();
+    for (label, method, stop) in cases {
+        let mut base_median = 0.0f64;
+        for &t in &threads {
+            let st = par::with_threads(t, || {
+                bench_median(&format!("{label} t={t}"), 1, reps, || {
+                    solve_with(method.clone(), stop)
+                })
+            });
+            if t == 1 {
+                base_median = st.median_s;
+            }
+            let speedup = if st.median_s > 0.0 { base_median / st.median_s } else { f64::NAN };
+            println!("{}   {:.2}x vs 1t", st.line(), speedup);
+            records.push(JsonValue::obj(vec![
+                ("op", JsonValue::s(label)),
+                ("threads", JsonValue::num(t as f64)),
+                ("median_s", JsonValue::num(st.median_s)),
+                ("speedup_vs_1t", JsonValue::num(speedup)),
+            ]));
+        }
+    }
+
+    let lc = sketchsolve::coordinator::Metrics::lsqr_counters();
+    let cs = sketchsolve::coordinator::Metrics::sketch_cache_counters();
+    println!(
+        "\nlsqr counters after run: f32_factors={} refine_steps={}",
+        lc.f32_factorizations, lc.refinement_steps
+    );
+    println!(
+        "sketch_cache after run: hits={} misses={} evictions={} bytes={}",
+        cs.hits, cs.misses, cs.evictions, cs.bytes
+    );
+
+    let out_path = flags.get_or("out", "BENCH_lsqr.json");
+    let doc = JsonValue::obj(vec![
+        ("bench", JsonValue::s("sketch_lsqr")),
+        ("n", JsonValue::num(n as f64)),
+        ("d", JsonValue::num(d as f64)),
+        ("hardware_budget", JsonValue::num(par::max_threads() as f64)),
+        ("records", JsonValue::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("lsqr records written to {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

@@ -5,7 +5,7 @@
 //! fixed-sketch preconditioned methods, the paper's adaptive controllers,
 //! and the multi-RHS (multiclass) pilot/follower pipeline. The router
 //! returns one, the CLI parses one, the service queues one — there is no
-//! second routing vocabulary (`coordinator::Route` is a deprecated alias).
+//! second routing vocabulary (the old `coordinator::Route` alias is gone).
 
 use crate::glm::GlmLossKind;
 use crate::sketch::SketchKind;
@@ -13,6 +13,34 @@ use crate::sketch::SketchKind;
 /// Default step-size parameter ρ for the fixed-sketch IHS / Polyak-IHS
 /// variants (the paper's §4.1 experiments use ρ = 1/8).
 pub const DEFAULT_FIXED_RHO: f64 = 0.125;
+
+/// Factorization precision for the methods that support a mixed-precision
+/// path (today: [`MethodSpec::SketchLsqr`]). `F32` factorizes the sketched
+/// stack in single precision and wraps the solve in f64 iterative
+/// refinement; the iterations — and the determinism contract — always run
+/// in f64, so `F32` changes speed, never the answer (to solver tolerance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    F64,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "single" => Some(Precision::F32),
+            "f64" | "double" => Some(Precision::F64),
+            _ => None,
+        }
+    }
+}
 
 /// A fully specified solve method. Sizes left as `None` are resolved
 /// against the problem at solve time (see the variant docs).
@@ -68,6 +96,15 @@ pub enum MethodSpec {
     /// otherwise `solve` returns the typed `Unsupported` error. `m: None`
     /// walks the available artifact bucket ladder adaptively.
     XlaPcg { m: Option<usize> },
+    /// Sketch-and-precondition LSQR (`solvers::lsqr`): QR of the sketched
+    /// stack `[SA; ν√Λ]` preconditions Golub–Kahan LSQR on the augmented
+    /// least-squares operator, with the sketch-and-solve solution as warm
+    /// start. `m: None` resolves to `4d` (QR wants a taller embedding than
+    /// the Cholesky-based preconditioners). `precision` selects the
+    /// factorization kernels; f32 is wrapped in f64 iterative refinement.
+    /// The method of choice for tall, ill-conditioned dense problems where
+    /// PCG on the normal equations stalls at `u·κ(H)`.
+    SketchLsqr { m: Option<usize>, precision: Precision },
     /// GLM training by adaptive Newton sketch (arXiv:2105.07291): a damped
     /// outer Newton loop on `Σ ℓ(a_iᵀx, y_i) + (ν²/2)xᵀΛx` whose per-step
     /// quadratic model `(AᵀD(x)A + ν²Λ)Δ = -∇f` is solved by `inner` over
@@ -102,6 +139,7 @@ impl MethodSpec {
             MethodSpec::LambdaSweep { .. } => "lambda_sweep",
             MethodSpec::CvSweep { .. } => "cv_sweep",
             MethodSpec::XlaPcg { .. } => "xla_pcg",
+            MethodSpec::SketchLsqr { .. } => "sketch_lsqr",
             MethodSpec::NewtonSketch { .. } => "newton_sketch",
         }
     }
@@ -128,6 +166,10 @@ impl MethodSpec {
                 MethodSpec::AdaptivePolyak { sketch, rho: rho.unwrap_or(DEFAULT_FIXED_RHO) }
             }
             "xla_pcg" | "xlapcg" => MethodSpec::XlaPcg { m },
+            // precision defaults to f64; the CLI overrides it from --precision
+            "sketch_lsqr" | "sketch-lsqr" => {
+                MethodSpec::SketchLsqr { m, precision: Precision::F64 }
+            }
             // loss defaults to logistic; the CLI overrides it from --loss
             "newton_sketch" | "newton-sketch" => MethodSpec::NewtonSketch {
                 loss: GlmLossKind::Logistic,
@@ -165,6 +207,7 @@ mod tests {
             MethodSpec::AdaptiveIhs { sketch: sk },
             MethodSpec::AdaptivePolyak { sketch: sk, rho: DEFAULT_FIXED_RHO },
             MethodSpec::XlaPcg { m: None },
+            MethodSpec::SketchLsqr { m: None, precision: Precision::F64 },
             MethodSpec::NewtonSketch {
                 loss: GlmLossKind::Logistic,
                 inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
@@ -197,6 +240,18 @@ mod tests {
         };
         assert_eq!(MethodSpec::parse_with("newton-sketch", sk, Some(64), None), Some(want.clone()));
         assert_eq!(MethodSpec::parse_with("newton_sketch", sk, Some(64), None), Some(want));
+    }
+
+    #[test]
+    fn sketch_lsqr_aliases_and_precision() {
+        let sk = SketchKind::Sjlt { s: 1 };
+        let want = MethodSpec::SketchLsqr { m: Some(256), precision: Precision::F64 };
+        assert_eq!(MethodSpec::parse_with("sketch-lsqr", sk, Some(256), None), Some(want.clone()));
+        assert_eq!(MethodSpec::parse_with("sketch_lsqr", sk, Some(256), None), Some(want));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("double"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::F32.name(), "f32");
     }
 
     #[test]

@@ -28,7 +28,7 @@ mod registry;
 mod request;
 mod sweep;
 
-pub use method::{MethodSpec, DEFAULT_FIXED_RHO};
+pub use method::{MethodSpec, Precision, DEFAULT_FIXED_RHO};
 pub use outcome::{SolveError, SolveOutcome, SolveStatus};
 pub use registry::{lookup, registry, solve, MethodDescriptor, Solver};
 pub use request::{Budget, ProgressFn, ProgressObserver, SolveCtx, SolveRequest, Stop};

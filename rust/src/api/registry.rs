@@ -55,9 +55,10 @@ struct MultiRhsEntry;
 struct LambdaSweepEntry;
 struct CvSweepEntry;
 struct XlaPcgEntry;
+struct SketchLsqrEntry;
 struct NewtonSketchEntry;
 
-static REGISTRY: [&dyn Solver; 12] = [
+static REGISTRY: [&dyn Solver; 13] = [
     &DirectEntry,
     &CgEntry,
     &PcgFixedEntry,
@@ -69,6 +70,7 @@ static REGISTRY: [&dyn Solver; 12] = [
     &LambdaSweepEntry,
     &CvSweepEntry,
     &XlaPcgEntry,
+    &SketchLsqrEntry,
     &NewtonSketchEntry,
 ];
 
@@ -545,6 +547,53 @@ impl Solver for CvSweepEntry {
     }
 }
 
+impl Solver for SketchLsqrEntry {
+    fn descriptor(&self) -> MethodDescriptor {
+        MethodDescriptor {
+            name: "sketch_lsqr",
+            summary: "sketch-and-precondition LSQR (QR of [SA; nu*sqrt(Lambda)], f32|f64 factor)",
+            warm_start: true,
+            traced: true,
+            multi_rhs: false,
+        }
+    }
+
+    fn handles(&self, spec: &MethodSpec) -> bool {
+        matches!(spec, MethodSpec::SketchLsqr { .. })
+    }
+
+    /// Delegates to [`solvers::solve_sketch_lsqr`]
+    /// (`crate::solvers::solve_sketch_lsqr`). Raw labels on the request
+    /// tighten the augmented RHS when their length matches `n`; otherwise
+    /// the label-free form (`Āᵀȳ = b`, still exact) is used, so Newton
+    /// inner solves — whose "labels" belong to the outer GLM, not the
+    /// quadratic model — remain correct.
+    fn run(&self, spec: &MethodSpec, req: &SolveRequest) -> Result<SolveOutcome, SolveError> {
+        let (m, precision) = match spec {
+            MethodSpec::SketchLsqr { m, precision } => (*m, *precision),
+            _ => unreachable!("handles() gates the spec"),
+        };
+        let prob = &*req.problem;
+        // QR preconditioning wants a taller embedding than the
+        // Cholesky-based routes: default m = 4d, capped like the others.
+        let cap = crate::linalg::next_pow2(prob.n());
+        let m = m.unwrap_or(4 * prob.d()).max(1).min(cap);
+        let opts = crate::solvers::LsqrOptions {
+            m,
+            sketch: SketchKind::Sjlt { s: 1 },
+            precision,
+            sketch_warm_start: true,
+            seed: req.seed,
+        };
+        let ctx = req.ctx();
+        let labels =
+            req.labels.as_ref().filter(|y| y.len() == prob.n()).map(|y| y.as_slice());
+        let (rep, status) = crate::solvers::solve_sketch_lsqr(prob, &opts, labels, &ctx)
+            .map_err(|e| SolveError::Numerical(e.to_string()))?;
+        Ok(SolveOutcome::single(status, rep))
+    }
+}
+
 impl Solver for NewtonSketchEntry {
     fn descriptor(&self) -> MethodDescriptor {
         MethodDescriptor {
@@ -672,6 +721,7 @@ mod tests {
                 inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
             },
             MethodSpec::XlaPcg { m: None },
+            MethodSpec::SketchLsqr { m: None, precision: crate::api::Precision::F64 },
             MethodSpec::NewtonSketch {
                 loss: crate::glm::GlmLossKind::Logistic,
                 inner: Box::new(MethodSpec::PcgFixed { m: None, sketch: sk }),
@@ -685,7 +735,7 @@ mod tests {
             let entry = lookup(&spec).unwrap_or_else(|| panic!("{spec:?} has no entry"));
             assert_eq!(entry.descriptor().name, spec.name(), "{spec:?}");
         }
-        assert_eq!(registry().len(), 12);
+        assert_eq!(registry().len(), 13);
     }
 
     #[test]

@@ -57,6 +57,10 @@ enum InnerKind {
     Fixed { m: Option<usize>, sketch: SketchKind, rho: Option<f64> },
     /// Adaptive PCG pilots at the smallest ν to discover m.
     Adaptive { sketch: SketchKind },
+    /// Sketch-and-precondition LSQR: `SA` is ν-independent, so the walk
+    /// re-runs only QR + iterations per point (the sketch cache dedups the
+    /// formation exactly like the Cholesky routes).
+    Lsqr { m: Option<usize>, precision: crate::api::Precision },
 }
 
 fn classify_inner(inner: &MethodSpec) -> Result<InnerKind, SolveError> {
@@ -69,8 +73,11 @@ fn classify_inner(inner: &MethodSpec) -> Result<InnerKind, SolveError> {
             Ok(InnerKind::Fixed { m: *m, sketch: *sketch, rho: Some(*rho) })
         }
         MethodSpec::AdaptivePcg { sketch } => Ok(InnerKind::Adaptive { sketch: *sketch }),
+        MethodSpec::SketchLsqr { m, precision } => {
+            Ok(InnerKind::Lsqr { m: *m, precision: *precision })
+        }
         other => Err(SolveError::InvalidSpec(format!(
-            "sweep inner method must be pcg, ihs, or adaptive_pcg, got {}",
+            "sweep inner method must be pcg, ihs, adaptive_pcg, or sketch_lsqr, got {}",
             other.name()
         ))),
     }
@@ -138,6 +145,53 @@ pub(crate) fn run_sweep(
     let mut x_chain: Option<Vec<f64>> = req.x0.clone();
     let mut wp = prob.clone();
 
+    // LSQR walks its own loop: no SketchedPreconditioner assembly — each
+    // point re-factors [SA; ν√Λ] (QR) over the cache-shared SA.
+    if let InnerKind::Lsqr { m, precision } = kind {
+        let cap = crate::linalg::next_pow2(n);
+        let m = m.unwrap_or(4 * d).max(1).min(cap);
+        let opts = crate::solvers::LsqrOptions {
+            m,
+            sketch: SketchKind::Sjlt { s: 1 },
+            precision,
+            sketch_warm_start: true,
+            seed: req.seed,
+        };
+        // labels apply only when they describe *this* operator's rows
+        // (CV folds pass full-data labels alongside a row-subset problem)
+        let labels = req.labels.as_ref().filter(|y| y.len() == n).map(|y| y.as_slice());
+        for &gi in &order {
+            if status.aborted() {
+                let x = x_chain.clone().unwrap_or_else(|| vec![0.0; d]);
+                reports[gi] = Some(skipped_report(grid[gi], x));
+                continue;
+            }
+            wp.nu = grid[gi];
+            let ctx = SolveCtx {
+                stop: req.stop,
+                budget: &req.budget,
+                x0: x_chain.as_deref(),
+                x_star: None,
+                observer: req.observer.as_deref(),
+            };
+            let (mut rep, st) = crate::solvers::solve_sketch_lsqr(&wp, &opts, labels, &ctx)
+                .map_err(|e| SolveError::Numerical(e.to_string()))?;
+            rep.method = format!("{}[nu={}]", rep.method, wp.nu);
+            if warm_start {
+                x_chain = Some(rep.x.clone());
+            }
+            if st.aborted() {
+                status = st;
+            }
+            reports[gi] = Some(rep);
+        }
+        let reports = reports
+            .into_iter()
+            .map(|r| r.expect("every grid point gets a report or a stub"))
+            .collect();
+        return Ok(SweepOutputs { status, reports, start_index, m });
+    }
+
     let (sketch, m, rho) = match kind {
         InnerKind::Fixed { m, sketch, rho } => {
             let cap = crate::linalg::next_pow2(n);
@@ -168,6 +222,7 @@ pub(crate) fn run_sweep(
             }
             (sketch, m, None)
         }
+        InnerKind::Lsqr { .. } => unreachable!("handled by the dedicated walk above"),
     };
 
     // key computed once: every point shares (content, family, seed, m)
@@ -328,6 +383,11 @@ mod tests {
         let sk = SketchKind::Sjlt { s: 1 };
         assert!(classify_inner(&MethodSpec::PcgFixed { m: None, sketch: sk }).is_ok());
         assert!(classify_inner(&MethodSpec::AdaptivePcg { sketch: sk }).is_ok());
+        assert!(classify_inner(&MethodSpec::SketchLsqr {
+            m: None,
+            precision: crate::api::Precision::F64
+        })
+        .is_ok());
         assert!(classify_inner(&MethodSpec::Ihs { m: None, sketch: sk, rho: 2.0 }).is_err());
         assert!(classify_inner(&MethodSpec::Direct).is_err());
     }

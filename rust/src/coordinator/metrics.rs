@@ -1,6 +1,46 @@
 //! Service metrics: lock-free counters + trace export.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Process-global mixed-precision LSQR counters. Like the sketch cache,
+/// these live at process scope (not per-service) because the solver is
+/// reachable both through services and direct `api::solve` calls, and the
+/// CLI / CI smoke checks read them after a one-shot solve.
+static LSQR_F32_FACTORIZATIONS: AtomicU64 = AtomicU64::new(0);
+static LSQR_F32_FACTOR_NS: AtomicU64 = AtomicU64::new(0);
+static LSQR_REFINEMENT_STEPS: AtomicU64 = AtomicU64::new(0);
+/// 0 = no LSQR solve recorded yet, 1 = last solve did not meet the
+/// gradient criterion, 2 = it did (last-solve-wins, unlike the cumulative
+/// counters above).
+static LSQR_REFINEMENT_CONVERGED: AtomicU8 = AtomicU8::new(0);
+
+/// Record one f32 QR factorization and its wall-clock cost.
+pub(crate) fn record_lsqr_f32_factorization(ns: u64) {
+    LSQR_F32_FACTORIZATIONS.fetch_add(1, Ordering::Relaxed);
+    LSQR_F32_FACTOR_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Record the refinement outcome of one LSQR solve: how many correction
+/// passes ran beyond the first, and whether the true-gradient criterion
+/// was met.
+pub(crate) fn record_lsqr_refinement(steps: u64, converged: bool) {
+    LSQR_REFINEMENT_STEPS.fetch_add(steps, Ordering::Relaxed);
+    LSQR_REFINEMENT_CONVERGED.store(if converged { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Snapshot of the mixed-precision LSQR counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LsqrCounters {
+    /// Cumulative f32 QR factorizations performed.
+    pub f32_factorizations: u64,
+    /// Cumulative nanoseconds spent inside those factorizations.
+    pub f32_factor_ns: u64,
+    /// Cumulative refinement (correction) passes beyond each solve's first.
+    pub refinement_steps: u64,
+    /// Whether the most recent LSQR solve met its gradient criterion
+    /// (`None` until the first solve records).
+    pub refinement_converged: Option<bool>,
+}
 
 /// Aggregate counters for a running service. All methods are thread-safe.
 #[derive(Debug, Default)]
@@ -85,14 +125,31 @@ impl Metrics {
         crate::sketch::cache::global().stats()
     }
 
+    /// Counters of the mixed-precision LSQR path — process-global for the
+    /// same reason as [`Metrics::sketch_cache_counters`].
+    pub fn lsqr_counters() -> LsqrCounters {
+        LsqrCounters {
+            f32_factorizations: LSQR_F32_FACTORIZATIONS.load(Ordering::Relaxed),
+            f32_factor_ns: LSQR_F32_FACTOR_NS.load(Ordering::Relaxed),
+            refinement_steps: LSQR_REFINEMENT_STEPS.load(Ordering::Relaxed),
+            refinement_converged: match LSQR_REFINEMENT_CONVERGED.load(Ordering::Relaxed) {
+                0 => None,
+                1 => Some(false),
+                _ => Some(true),
+            },
+        }
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let (s, c, f) = self.job_counts();
         let cache = Metrics::sketch_cache_counters();
+        let lsqr = Metrics::lsqr_counters();
         format!(
             "jobs {s} submitted / {c} done / {f} failed; {} iters, {} doublings, {:.3}s solving; \
              newton: {} solves / {} outer iters; \
-             sketch_cache: hits={} misses={} evictions={} bytes={}",
+             sketch_cache: hits={} misses={} evictions={} bytes={}; \
+             lsqr: f32_factors={} refine_steps={}",
             self.total_iterations(),
             self.total_doublings(),
             self.solve_seconds(),
@@ -101,7 +158,9 @@ impl Metrics {
             cache.hits,
             cache.misses,
             cache.evictions,
-            cache.bytes
+            cache.bytes,
+            lsqr.f32_factorizations,
+            lsqr.refinement_steps
         )
     }
 }
@@ -128,6 +187,21 @@ mod tests {
         assert!(m.summary().contains("2 submitted"));
         assert!(m.summary().contains("newton: 1 solves / 7 outer iters"));
         assert!(m.summary().contains("sketch_cache: hits="));
+    }
+
+    #[test]
+    fn lsqr_counters_accumulate() {
+        // The counters are process-global and other tests in this binary
+        // may record concurrently, so assert monotone deltas, not totals.
+        let before = Metrics::lsqr_counters();
+        record_lsqr_f32_factorization(1_000);
+        record_lsqr_refinement(2, true);
+        let after = Metrics::lsqr_counters();
+        assert!(after.f32_factorizations >= before.f32_factorizations + 1);
+        assert!(after.f32_factor_ns >= before.f32_factor_ns + 1_000);
+        assert!(after.refinement_steps >= before.refinement_steps + 2);
+        assert!(after.refinement_converged.is_some());
+        assert!(Metrics::new().summary().contains("lsqr: f32_factors="));
     }
 
     #[test]

@@ -24,5 +24,5 @@ pub mod service;
 
 pub use batcher::MultiRhsSolver;
 pub use metrics::Metrics;
-pub use router::{route, route_glm, Route, RouterPolicy};
+pub use router::{route, route_glm, RouterPolicy};
 pub use service::{JobSpec, JobStatus, SolveService, RECENT_STATUS_CAP};

@@ -4,20 +4,22 @@
 //! - tiny problems → direct factorization (no sketching overhead can win);
 //! - well-conditioned problems (large ν relative to the top singular
 //!   value) → plain CG, with an iteration cap from the condition estimate;
+//! - tall, ill-conditioned *dense* problems → sketch-and-precondition
+//!   LSQR ([`MethodSpec::SketchLsqr`]): the QR-preconditioned
+//!   least-squares iteration attains accuracies PCG on the normal
+//!   equations cannot (its attainable error floor scales with `u·κ(H)`,
+//!   i.e. `u·κ(A)²`);
 //! - otherwise → adaptive PCG, the paper's headline method — or, when the
 //!   policy asks for an oblivious deployment, the fixed `m = 2d` PCG
 //!   baseline ([`MethodSpec::pcg_2d`]).
 //!
 //! The router speaks the api vocabulary directly: there is no separate
-//! `Route` enum anymore ([`Route`] is a deprecated alias of
-//! [`MethodSpec`]).
+//! `Route` enum (the deprecated `Route` alias of [`MethodSpec`] was
+//! removed once its last users migrated).
 
-use crate::api::MethodSpec;
+use crate::api::{MethodSpec, Precision};
 use crate::problem::Problem;
 use crate::sketch::SketchKind;
-
-/// Deprecated alias: routing decisions *are* method specs now.
-pub type Route = MethodSpec;
 
 /// Tunable routing thresholds.
 #[derive(Debug, Clone)]
@@ -96,6 +98,16 @@ pub fn route(prob: &Problem, policy: &RouterPolicy) -> MethodSpec {
     if policy.oblivious_2d {
         return MethodSpec::pcg_2d(policy.sketch);
     }
+    // Tall ill-conditioned dense data: the condition proxy already ruled
+    // out CG (cond > cg_cond_max), and with n ≫ d the m = 4d QR stack is
+    // cheap relative to the data — route to sketch-and-precondition LSQR,
+    // whose attainable accuracy scales with u·κ(A), not u·κ(A)². Sparse
+    // data stays on the Cholesky-preconditioned routes (LSQR works there
+    // too, but the dense (m+d)×d QR forfeits the nnz-proportional wins
+    // the adaptive controller preserves).
+    if !prob.a.is_sparse() && prob.n() >= 16 * d {
+        return MethodSpec::SketchLsqr { m: None, precision: Precision::F64 };
+    }
     MethodSpec::AdaptivePcg { sketch: policy.sketch }
 }
 
@@ -157,6 +169,30 @@ mod tests {
         let p = Problem::ridge(a, vec![1.0; 128], 1e-6);
         let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
         assert!(matches!(route(&p, &policy), MethodSpec::AdaptivePcg { .. }));
+    }
+
+    #[test]
+    fn tall_ill_conditioned_dense_goes_sketch_lsqr() {
+        use crate::api::Precision;
+        // n = 64d, condition proxy ≈ (1 + ν²)/ν² ≫ cg_cond_max
+        let mut a = Matrix::zeros(4096, 64);
+        for j in 0..64 {
+            a.set(j, j, 0.8f64.powi(j as i32));
+        }
+        let p = Problem::ridge(a, vec![1.0; 64], 1e-6);
+        let policy = RouterPolicy { direct_d_max: 16, direct_nd_max: 1 << 10, ..Default::default() };
+        assert_eq!(
+            route(&p, &policy),
+            MethodSpec::SketchLsqr { m: None, precision: Precision::F64 }
+        );
+        // same shape and spectrum, CSR storage: stays on the adaptive path
+        use crate::linalg::Csr;
+        let mut trips = Vec::new();
+        for j in 0..64 {
+            trips.push((j, j, 0.8f64.powi(j as i32)));
+        }
+        let sp = Problem::ridge(Csr::from_triplets(4096, 64, &trips), vec![1.0; 64], 1e-6);
+        assert!(matches!(route(&sp, &policy), MethodSpec::AdaptivePcg { .. }));
     }
 
     #[test]

@@ -138,11 +138,16 @@ pub fn solve_newton(
     // the carried sketch size: seeded from the inner spec's m (or the 2d
     // oblivious default), grown only on stall, never reset
     let m_cap = next_pow2(n).max(1);
-    let m_controlled = matches!(inner, MethodSpec::PcgFixed { .. } | MethodSpec::Ihs { .. });
+    let m_controlled = matches!(
+        inner,
+        MethodSpec::PcgFixed { .. } | MethodSpec::Ihs { .. } | MethodSpec::SketchLsqr { .. }
+    );
     let mut carried_m = match inner {
-        MethodSpec::PcgFixed { m: Some(m0), .. } | MethodSpec::Ihs { m: Some(m0), .. } => {
-            (*m0).max(1).min(m_cap)
-        }
+        MethodSpec::PcgFixed { m: Some(m0), .. }
+        | MethodSpec::Ihs { m: Some(m0), .. }
+        | MethodSpec::SketchLsqr { m: Some(m0), .. } => (*m0).max(1).min(m_cap),
+        // LSQR's QR preconditioner wants the taller 4d default
+        MethodSpec::SketchLsqr { m: None, .. } => (4 * d).max(1).min(m_cap),
         _ => (2 * d).max(1).min(m_cap),
     };
     let inner_stop = Stop {
@@ -194,6 +199,9 @@ pub fn solve_newton(
             }
             MethodSpec::Ihs { sketch, rho, .. } => {
                 MethodSpec::Ihs { m: Some(carried_m), sketch: *sketch, rho: *rho }
+            }
+            MethodSpec::SketchLsqr { precision, .. } => {
+                MethodSpec::SketchLsqr { m: Some(carried_m), precision: *precision }
             }
             other => other.clone(),
         };

@@ -146,6 +146,45 @@ fn inner_1row(arow: &[f64], bdata: &[f64], crow: &mut [f64], n: usize, pc: usize
     }
 }
 
+/// `C = A * B^T` without forming the transpose: both operands are walked
+/// along their contiguous row-major rows, so every inner product is one
+/// fixed-lane [`simd::dot`] over two contiguous slices. This is the blocked
+/// QR trailing-update shape (`X = M · Vᵀ` with both `M` and `V` stored
+/// row-major along the reduction axis). Row-partitioned over [`crate::par`]
+/// with the usual bit-identical-at-any-thread-count guarantee.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt: inner dims mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let parts = if 2.0 * (m as f64) * (k as f64) * (n as f64) < PAR_MIN_FLOPS {
+        1
+    } else {
+        par::parts_for(m, 8)
+    };
+    if parts == 1 {
+        nt_rows(a, b, 0, &mut c.data);
+        return c;
+    }
+    let bounds = par::uniform_boundaries(m, parts);
+    par::parallel_chunks_mut(&mut c.data, n, &bounds, |row0, chunk| nt_rows(a, b, row0, chunk));
+    c
+}
+
+/// One row-chunk of `C = A * B^T`: `chunk` holds C rows
+/// `row0..row0 + chunk.len()/b.rows`.
+fn nt_rows(a: &Matrix, b: &Matrix, row0: usize, chunk: &mut [f64]) {
+    let n = b.rows;
+    for (t, crow) in chunk.chunks_mut(n).enumerate() {
+        let arow = a.row(row0 + t);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = super::matrix::dot(arow, b.row(j));
+        }
+    }
+}
+
 /// `C = A^T * A` symmetric rank-k update (Gram matrix), exploiting symmetry:
 /// computes the upper triangle then mirrors. This is the H_S formation
 /// hot-spot (`(SA)^T (SA)`).
@@ -465,6 +504,27 @@ mod tests {
             let c1 = matmul(&a, &b);
             let c2 = matmul_naive(&a, &b);
             assert!(c1.max_abs_diff(&c2) < 1e-9, "mismatch at {}x{}x{}", m, k, n);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::seed_from(19);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (70, 300, 140)] {
+            let a = rand_matrix(&mut rng, m, k);
+            let bt = rand_matrix(&mut rng, n, k); // B^T stored directly
+            let c1 = matmul_nt(&a, &bt);
+            let c2 = matmul(&a, &bt.transpose());
+            assert!(c1.max_abs_diff(&c2) < 1e-9, "mismatch at {}x{}x{}", m, k, n);
+        }
+        // thread-count determinism above the parallel gate
+        let mut rng = Rng::seed_from(23);
+        let a = rand_matrix(&mut rng, 500, 300);
+        let bt = rand_matrix(&mut rng, 120, 300);
+        let base = crate::par::with_threads(1, || matmul_nt(&a, &bt));
+        for t in [2usize, 4] {
+            let got = crate::par::with_threads(t, || matmul_nt(&a, &bt));
+            assert_eq!(base.data, got.data, "matmul_nt differs at {t} threads");
         }
     }
 

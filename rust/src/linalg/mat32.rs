@@ -1,0 +1,339 @@
+//! Single-precision (f32) dense matrix type and kernels for the
+//! mixed-precision factorization path.
+//!
+//! The sketch-and-precondition pipeline (see `solvers::lsqr`) tolerates a
+//! low-precision preconditioner: the QR of the sketched matrix `SA` only
+//! needs to capture the spectrum of `A` to within the sketch distortion
+//! `ε`, so factoring in f32 loses nothing that f64 iterative refinement
+//! cannot recover. Running the factorization in f32 doubles the SIMD width
+//! (8 lanes per AVX2 `ymm`, 4 per NEON `float32x4`) and halves memory
+//! traffic.
+//!
+//! Everything here obeys the same fixed-virtual-lane determinism contract
+//! as the f64 kernels (`linalg::simd`): reductions run the
+//! [`simd::DOT_LANES_F32`]-accumulator schedule, element-wise streams touch
+//! each output once, parallel partitions depend only on shapes — so results
+//! are bit-identical across thread counts and across scalar/SIMD builds.
+//! Determinism is **per-precision**: the f32 path is reproducible against
+//! itself, not against the f64 path (different rounding at every step).
+
+use super::matrix::Matrix;
+use super::simd;
+use crate::par;
+use crate::par::PAR_MIN_FLOPS;
+
+/// Row-major dense f32 matrix — the single-precision twin of
+/// [`Matrix`](super::matrix::Matrix), restricted to what the
+/// mixed-precision factorization needs.
+#[derive(Clone, Debug)]
+pub struct Matrix32 {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major storage: element (i, j) lives at `data[i * cols + j]`.
+    pub data: Vec<f32>,
+}
+
+impl Matrix32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix32 { rows, cols, data }
+    }
+
+    /// Downcast an f64 matrix (the only way data enters the f32 path; the
+    /// sketch itself is always formed in f64 so the cache stays
+    /// precision-agnostic).
+    pub fn from_f64(m: &Matrix) -> Self {
+        Matrix32 {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Upcast back to f64 (used for the R factor handed to the f64 LSQR
+    /// iterations).
+    pub fn to_f64(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|&v| v as f64).collect())
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// `C = A * B` in f32: row-partitioned axpy-stream GEMM (the
+/// [`simd::axpy_acc_f32`] element-wise contract makes each output row a
+/// fixed sequential accumulation, so the result is bit-identical at every
+/// thread count).
+pub fn matmul32(a: &Matrix32, b: &Matrix32) -> Matrix32 {
+    assert_eq!(a.cols, b.rows, "matmul32: inner dims mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix32::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let parts = if 2.0 * (m as f64) * (k as f64) * (n as f64) < PAR_MIN_FLOPS {
+        1
+    } else {
+        par::parts_for(m, 8)
+    };
+    if parts == 1 {
+        gemm32_rows(a, b, 0, &mut c.data);
+        return c;
+    }
+    let bounds = par::uniform_boundaries(m, parts);
+    par::parallel_chunks_mut(&mut c.data, n, &bounds, |row0, chunk| {
+        gemm32_rows(a, b, row0, chunk)
+    });
+    c
+}
+
+/// One row-chunk of `C = A * B`: row t accumulates `Σ_p a[t, p] * B[p, :]`
+/// in strict ascending `p`.
+fn gemm32_rows(a: &Matrix32, b: &Matrix32, row0: usize, chunk: &mut [f32]) {
+    let n = b.cols;
+    for (t, crow) in chunk.chunks_mut(n).enumerate() {
+        let arow = a.row(row0 + t);
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            simd::axpy_acc_f32(av, b.row(p), crow);
+        }
+    }
+}
+
+/// `C = A * B^T` in f32: both operands walked along contiguous rows, every
+/// inner product one fixed-lane [`simd::dot_f32`] (the f32 QR
+/// trailing-update shape).
+pub fn matmul_nt32(a: &Matrix32, b: &Matrix32) -> Matrix32 {
+    assert_eq!(a.cols, b.cols, "matmul_nt32: inner dims mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix32::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let parts = if 2.0 * (m as f64) * (k as f64) * (n as f64) < PAR_MIN_FLOPS {
+        1
+    } else {
+        par::parts_for(m, 8)
+    };
+    if parts == 1 {
+        nt32_rows(a, b, 0, &mut c.data);
+        return c;
+    }
+    let bounds = par::uniform_boundaries(m, parts);
+    par::parallel_chunks_mut(&mut c.data, n, &bounds, |row0, chunk| nt32_rows(a, b, row0, chunk));
+    c
+}
+
+fn nt32_rows(a: &Matrix32, b: &Matrix32, row0: usize, chunk: &mut [f32]) {
+    let n = b.rows;
+    for (t, crow) in chunk.chunks_mut(n).enumerate() {
+        let arow = a.row(row0 + t);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = simd::dot_f32(arow, b.row(j));
+        }
+    }
+}
+
+/// Error from the f32 Cholesky factorization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cholesky32Error {
+    /// A pivot was non-positive (in f32 arithmetic) at the given index.
+    NotPositiveDefinite { index: usize, pivot: f32 },
+}
+
+/// Single-precision Cholesky `A = L·Lᵀ` — the f32 variant of
+/// [`linalg::cholesky::Cholesky`](super::cholesky::Cholesky) for
+/// mixed-precision preconditioner assembly. Left-looking row-dot form: all
+/// inner products are [`simd::dot_f32`] over contiguous row prefixes, so
+/// the factorization is deterministic under the same contract as the f64
+/// path. Serial — the d×d factor is small next to the sketch apply.
+pub struct Cholesky32 {
+    pub l: Matrix32,
+}
+
+impl Cholesky32 {
+    pub fn factor(a: &Matrix32) -> Result<Self, Cholesky32Error> {
+        assert_eq!(a.rows, a.cols, "Cholesky32: square matrix required");
+        let d = a.rows;
+        let mut l = Matrix32::zeros(d, d);
+        for j in 0..d {
+            let pivot = {
+                let lj = l.row(j);
+                a.at(j, j) - simd::dot_f32(&lj[..j], &lj[..j])
+            };
+            if pivot <= 0.0 || !pivot.is_finite() {
+                return Err(Cholesky32Error::NotPositiveDefinite { index: j, pivot });
+            }
+            let ljj = pivot.sqrt();
+            l.set(j, j, ljj);
+            for i in j + 1..d {
+                let s = {
+                    let (rows_lo, rows_hi) = l.data.split_at(i * d);
+                    let lj = &rows_lo[j * d..j * d + j];
+                    let li = &rows_hi[..j];
+                    a.at(i, j) - simd::dot_f32(li, lj)
+                };
+                l.set(i, j, s / ljj);
+            }
+        }
+        Ok(Cholesky32 { l })
+    }
+
+    /// Solve `L·Lᵀ x = b` in place (forward then backward substitution).
+    pub fn solve_in_place(&self, x: &mut [f32]) {
+        let d = self.l.rows;
+        assert_eq!(x.len(), d);
+        for i in 0..d {
+            let li = self.l.row(i);
+            let s = x[i] - simd::dot_f32(&li[..i], &x[..i]);
+            x[i] = s / li[i];
+        }
+        for i in (0..d).rev() {
+            let mut s = x[i];
+            for j in i + 1..d {
+                s -= self.l.at(j, i) * x[j];
+            }
+            x[i] = s / self.l.at(i, i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand32(rng: &mut Rng, r: usize, c: usize) -> Matrix32 {
+        Matrix32::from_vec(r, c, (0..r * c).map(|_| rng.gaussian() as f32).collect())
+    }
+
+    fn naive32(a: &Matrix32, b: &Matrix32) -> Matrix32 {
+        let mut c = Matrix32::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f32;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul32_matches_f64_to_single_precision() {
+        let mut rng = Rng::seed_from(29);
+        for &(m, k, n) in &[(3, 5, 2), (17, 33, 9), (64, 100, 48)] {
+            let a = rand32(&mut rng, m, k);
+            let b = rand32(&mut rng, k, n);
+            let c = matmul32(&a, &b);
+            let cref = crate::linalg::gemm::matmul(&a.to_f64(), &b.to_f64());
+            for i in 0..m {
+                for j in 0..n {
+                    let scale = 1.0 + cref.at(i, j).abs();
+                    assert!(
+                        (c.at(i, j) as f64 - cref.at(i, j)).abs() / scale < 1e-4,
+                        "matmul32 off at ({i},{j}): {} vs {}",
+                        c.at(i, j),
+                        cref.at(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt32_matches_explicit_product() {
+        let mut rng = Rng::seed_from(31);
+        let a = rand32(&mut rng, 13, 21);
+        let bt = rand32(&mut rng, 8, 21);
+        let c = matmul_nt32(&a, &bt);
+        // reference: naive A * (Bᵀ) built explicitly
+        let mut b = Matrix32::zeros(21, 8);
+        for i in 0..8 {
+            for j in 0..21 {
+                b.set(j, i, bt.at(i, j));
+            }
+        }
+        let cref = naive32(&a, &b);
+        for i in 0..13 {
+            for j in 0..8 {
+                // same dot schedule, different traversal — allow f32 roundoff
+                assert!((c.at(i, j) - cref.at(i, j)).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gemm_is_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::seed_from(37);
+        let a = rand32(&mut rng, 400, 300);
+        let b = rand32(&mut rng, 300, 120);
+        let bt = rand32(&mut rng, 90, 300);
+        let base = crate::par::with_threads(1, || (matmul32(&a, &b), matmul_nt32(&a, &bt)));
+        for t in [2usize, 4] {
+            let got = crate::par::with_threads(t, || (matmul32(&a, &b), matmul_nt32(&a, &bt)));
+            assert_eq!(base.0.data, got.0.data, "matmul32 differs at {t} threads");
+            assert_eq!(base.1.data, got.1.data, "matmul_nt32 differs at {t} threads");
+        }
+    }
+
+    #[test]
+    fn cholesky32_matches_f64_to_single_precision() {
+        let mut rng = Rng::seed_from(41);
+        let d = 24;
+        // SPD: G = BᵀB + I
+        let b = rand32(&mut rng, 40, d);
+        let bf = b.to_f64();
+        let mut g64 = crate::linalg::gemm::syrk_t(&bf);
+        for i in 0..d {
+            g64.set(i, i, g64.at(i, i) + 1.0);
+        }
+        let g32 = Matrix32::from_f64(&g64);
+        let ch32 = Cholesky32::factor(&g32).expect("SPD");
+        let ch64 = crate::linalg::Cholesky::factor(&g64).expect("SPD");
+        for i in 0..d {
+            for j in 0..=i {
+                let scale = 1.0 + ch64.l.at(i, j).abs();
+                assert!(
+                    (ch32.l.at(i, j) as f64 - ch64.l.at(i, j)).abs() / scale < 1e-3,
+                    "L off at ({i},{j})"
+                );
+            }
+        }
+        // solve round-trip: x recovered to f32 accuracy
+        let x_true: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let mut rhs = vec![0.0f32; d];
+        for i in 0..d {
+            rhs[i] = simd::dot_f32(g32.row(i), &x_true);
+        }
+        ch32.solve_in_place(&mut rhs);
+        for i in 0..d {
+            assert!((rhs[i] - x_true[i]).abs() < 1e-2, "solve off at {i}");
+        }
+    }
+}

@@ -3,21 +3,27 @@
 //! Everything the solvers need, built from scratch for this offline image:
 //! row-major dense matrices, CSR sparse matrices, the [`DataOp`] operator
 //! layer that lets the rest of the stack stay format-agnostic, blocked
-//! GEMM/SYRK, Cholesky + triangular solves, the fast Walsh–Hadamard
-//! transform, and symmetric eigenvalue tools.
+//! GEMM/SYRK, Cholesky + triangular solves, blocked Householder QR, the
+//! fast Walsh–Hadamard transform, symmetric eigenvalue tools, and the f32
+//! twins ([`Matrix32`] + GEMM/QR/Cholesky) for the mixed-precision
+//! factorization path.
 
 pub mod cholesky;
 pub mod eig;
 pub mod fwht;
 pub mod gemm;
+pub mod mat32;
 pub mod matrix;
 pub mod op;
+pub mod qr;
 pub mod simd;
 pub mod sparse;
 
 pub use cholesky::{Cholesky, CholeskyError};
 pub use fwht::{fwht_rows, fwht_vec, hadamard_rows_normalized, next_pow2};
-pub use gemm::{matmul, matmul_acc, matmul_into, matvec, matvec_into, matvec_t, matvec_t_into, syrk_t};
+pub use gemm::{matmul, matmul_acc, matmul_into, matmul_nt, matvec, matvec_into, matvec_t, matvec_t_into, syrk_t};
+pub use mat32::{matmul32, matmul_nt32, Cholesky32, Cholesky32Error, Matrix32};
 pub use matrix::{axpy, copy, dot, norm2, scal, sub, Matrix};
 pub use op::{dense_row_gram, DataFingerprint, DataOp};
+pub use qr::{QrError, QrFactor, QrFactor32};
 pub use sparse::Csr;

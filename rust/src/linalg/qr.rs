@@ -1,0 +1,582 @@
+//! Blocked Householder QR for the sketch-and-precondition pipeline.
+//!
+//! Factors a tall `k × d` matrix `B` (here: the stacked sketch
+//! `[S·A; ν·Λ^{1/2}]`) as `B = Q·R` with `R` upper triangular. Only `R`
+//! and the ability to apply `Qᵀ` to a vector are exposed — exactly what
+//! right-preconditioned LSQR and the sketch-and-solve warm start need.
+//!
+//! # Layout: transposed storage
+//!
+//! The factorization operates on `Wt = Bᵀ` (`d × k`, row-major), so column
+//! `j` of `B` — the thing Householder reflectors live in — is the
+//! *contiguous* row `j` of `Wt`. Every reflector dot and update is then one
+//! [`simd::dot`]/[`simd::axpy_acc`] over contiguous slices, reusing the
+//! fixed-virtual-lane micro-kernels, and the blocked trailing update
+//! becomes two row-major GEMMs ([`gemm::matmul_nt`] + [`gemm::matmul`])
+//! that are parallel via [`crate::par`] and bit-identical at any thread
+//! count.
+//!
+//! # Blocking: compact WY
+//!
+//! Panels of [`NB`] columns are factored unblocked; the panel's reflectors
+//! `V` and upper-triangular `T` (with `Q = H_1···H_nb = I − V·T·Vᵀ`) are
+//! accumulated, and the trailing columns are updated in one blocked
+//! `M ← M − ((M·V)·T)·Vᵀ` sweep. Same flop count as LAPACK's `geqrt`
+//! shape.
+//!
+//! The f32 twin ([`QrFactor32`]) runs the identical schedule on
+//! [`Matrix32`] with the 8-virtual-lane f32 kernels, and upcasts `R` to
+//! f64 for the triangular solves inside the f64 refinement loop.
+
+use super::gemm::{matmul, matmul_nt};
+use super::mat32::{matmul32, matmul_nt32, Matrix32};
+use super::matrix::Matrix;
+use super::simd;
+
+/// Panel width for the compact-WY blocking.
+const NB: usize = 32;
+
+/// Error from the QR factorization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QrError {
+    /// The factored matrix is (numerically) rank deficient: `R[j,j]` came
+    /// out zero or non-finite at the given column.
+    RankDeficient { index: usize },
+}
+
+impl std::fmt::Display for QrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QrError::RankDeficient { index } => {
+                write!(f, "QR: rank-deficient at column {index}")
+            }
+        }
+    }
+}
+
+/// Householder QR factor of a tall `k × d` matrix (f64).
+pub struct QrFactor {
+    /// `d × k` transposed storage: row `j` holds `R[0..=j, j]` in its first
+    /// `j + 1` positions and the reflector tail `v_j[1..]` after them.
+    wt: Matrix,
+    tau: Vec<f64>,
+    /// Materialized `d × d` upper-triangular `R` (contiguous rows make the
+    /// triangular solves simd-friendly).
+    r: Matrix,
+}
+
+impl QrFactor {
+    /// Factor `b` (`k × d`, `k ≥ d`). Returns an error if `R` is singular.
+    pub fn factor(b: &Matrix) -> Result<QrFactor, QrError> {
+        let (k, d) = (b.rows, b.cols);
+        assert!(k >= d, "QrFactor: need rows >= cols, got {k} x {d}");
+        assert!(d > 0, "QrFactor: empty matrix");
+        let mut wt = b.transpose(); // d × k
+        let mut tau = vec![0.0f64; d];
+        let mut j0 = 0;
+        while j0 < d {
+            let nb = NB.min(d - j0);
+            // 1. unblocked panel: factor columns j0..j0+nb, applying each
+            //    reflector to the rest of the panel immediately
+            for j in j0..j0 + nb {
+                tau[j] = house(&mut wt, j, k);
+                for rr in j + 1..j0 + nb {
+                    apply_reflector(&mut wt, j, rr, k, tau[j]);
+                }
+            }
+            let pe = j0 + nb;
+            if pe < d {
+                // 2. explicit panel reflectors Vt (nb × (k - j0)): row p is
+                //    v_{j0+p} laid out from global position j0 (zeros before
+                //    its unit pivot keep the GEMM rectangular)
+                let mw = k - j0;
+                let mut vt = Matrix::zeros(nb, mw);
+                for p in 0..nb {
+                    let gj = j0 + p;
+                    let vrow = vt.row_mut(p);
+                    vrow[gj - j0] = 1.0;
+                    vrow[gj - j0 + 1..].copy_from_slice(&wt.row(gj)[gj + 1..k]);
+                }
+                // 3. forward-accumulated T: T[p,p] = τ_p,
+                //    T[0..p, p] = −τ_p · T[0..p, 0..p] · (Vᵀ v_p)
+                let tmat = build_t(&vt, &tau[j0..j0 + nb]);
+                // 4. blocked trailing update: M ← M − ((M·V)·T)·Vᵀ
+                //    (M = trailing columns of B as rows of Wt)
+                let mut m = Matrix::zeros(d - pe, mw);
+                for rr in pe..d {
+                    m.row_mut(rr - pe).copy_from_slice(&wt.row(rr)[j0..k]);
+                }
+                let x = matmul_nt(&m, &vt); // (d-pe) × nb = M·V
+                let y = matmul(&x, &tmat); // × T
+                let p = matmul(&y, &vt); // × Vᵀ
+                for rr in pe..d {
+                    let dst = &mut wt.row_mut(rr)[j0..k];
+                    for (dv, pv) in dst.iter_mut().zip(p.row(rr - pe)) {
+                        *dv -= pv;
+                    }
+                }
+            }
+            j0 = pe;
+        }
+        // materialize R and check for rank deficiency
+        let mut r = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                r.set(i, j, wt.at(j, i));
+            }
+            let rii = r.at(i, i);
+            if rii == 0.0 || !rii.is_finite() {
+                return Err(QrError::RankDeficient { index: i });
+            }
+        }
+        Ok(QrFactor { wt, tau, r })
+    }
+
+    /// Number of rows of the factored matrix.
+    pub fn rows(&self) -> usize {
+        self.wt.cols
+    }
+
+    /// Number of columns (= order of `R`).
+    pub fn cols(&self) -> usize {
+        self.wt.rows
+    }
+
+    /// The `d × d` upper-triangular factor.
+    pub fn r(&self) -> &Matrix {
+        &self.r
+    }
+
+    /// `y ← Qᵀ y` (length `k`), applying the reflectors in ascending order.
+    pub fn qt_apply(&self, y: &mut [f64]) {
+        let k = self.wt.cols;
+        assert_eq!(y.len(), k);
+        for j in 0..self.wt.rows {
+            let t = self.tau[j];
+            if t == 0.0 {
+                continue;
+            }
+            let vtail = &self.wt.row(j)[j + 1..k];
+            let w = y[j] + simd::dot(vtail, &y[j + 1..k]);
+            let tw = t * w;
+            y[j] -= tw;
+            simd::axpy_acc(-tw, vtail, &mut y[j + 1..k]);
+        }
+    }
+
+    /// `x ← R⁻¹ x` (back substitution over contiguous rows of `R`).
+    pub fn r_solve(&self, x: &mut [f64]) {
+        r_solve_upper(&self.r, x);
+    }
+
+    /// `x ← R⁻ᵀ x` (forward substitution).
+    pub fn rt_solve(&self, x: &mut [f64]) {
+        rt_solve_upper(&self.r, x);
+    }
+}
+
+/// Back substitution `x ← R⁻¹ x` for a dense upper-triangular `R`.
+pub(crate) fn r_solve_upper(r: &Matrix, x: &mut [f64]) {
+    let d = r.rows;
+    assert_eq!(x.len(), d);
+    for i in (0..d).rev() {
+        let row = r.row(i);
+        let s = x[i] - simd::dot(&row[i + 1..], &x[i + 1..]);
+        x[i] = s / row[i];
+    }
+}
+
+/// Forward substitution `x ← R⁻ᵀ x` (lower-triangular solve against `Rᵀ`,
+/// walking columns of `R`; scalar — `d²` is negligible next to the sketch).
+pub(crate) fn rt_solve_upper(r: &Matrix, x: &mut [f64]) {
+    let d = r.rows;
+    assert_eq!(x.len(), d);
+    for i in 0..d {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= r.at(j, i) * x[j];
+        }
+        x[i] = s / r.at(i, i);
+    }
+}
+
+/// Compute the Householder reflector for column `j` (row `j` of `wt` in
+/// positions `j..k`): writes `β = R[j,j]` at position `j`, the normalized
+/// reflector tail after it, and returns `τ`. LAPACK `larfg` convention:
+/// `v = [1, x[1..]/(α − β)]`, `τ = (β − α)/β`, `β = −sign(α)·‖x‖`.
+fn house(wt: &mut Matrix, j: usize, k: usize) -> f64 {
+    let w = wt.row_mut(j);
+    let alpha = w[j];
+    let tail = &w[j + 1..k];
+    let tail_norm2 = simd::dot(tail, tail);
+    if tail_norm2 == 0.0 {
+        return 0.0; // H = I; R[j,j] = alpha stays in place
+    }
+    let normx = (alpha * alpha + tail_norm2).sqrt();
+    let beta = if alpha >= 0.0 { -normx } else { normx };
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    for v in &mut w[j + 1..k] {
+        *v *= scale;
+    }
+    w[j] = beta;
+    tau
+}
+
+/// Apply reflector `j` to column `rr` of the panel (`rr > j`):
+/// `c ← c − τ·v·(vᵀc)` on global positions `j..k`.
+fn apply_reflector(wt: &mut Matrix, j: usize, rr: usize, k: usize, tau: f64) {
+    if tau == 0.0 {
+        return;
+    }
+    let cols = wt.cols;
+    let (lo, hi) = wt.data.split_at_mut(rr * cols);
+    let vtail = &lo[j * cols + j + 1..j * cols + k];
+    let crow = &mut hi[..k];
+    let w = crow[j] + simd::dot(vtail, &crow[j + 1..k]);
+    let tw = tau * w;
+    crow[j] -= tw;
+    simd::axpy_acc(-tw, vtail, &mut crow[j + 1..k]);
+}
+
+/// Forward accumulation of the compact-WY `T` for one panel.
+fn build_t(vt: &Matrix, tau: &[f64]) -> Matrix {
+    let nb = tau.len();
+    let mut t = Matrix::zeros(nb, nb);
+    for p in 0..nb {
+        t.set(p, p, tau[p]);
+        if p > 0 {
+            // wv = V[:, 0..p]ᵀ v_p — contiguous row dots in transposed storage
+            let mut wv = vec![0.0f64; p];
+            for q in 0..p {
+                wv[q] = simd::dot(vt.row(q), vt.row(p));
+            }
+            // z = T[0..p, 0..p] · wv (upper triangular)
+            for q in 0..p {
+                let mut s = 0.0;
+                for u in q..p {
+                    s += t.at(q, u) * wv[u];
+                }
+                t.set(q, p, -tau[p] * s);
+            }
+        }
+    }
+    t
+}
+
+// ======================================================================
+// f32 twin: identical schedule on Matrix32 with the 8-virtual-lane f32
+// kernels. R is upcast to f64 on exit — the f64 refinement loop only ever
+// sees the (approximate) f64 triangular factor.
+// ======================================================================
+
+/// Householder QR factor computed entirely in f32 (mixed-precision mode).
+pub struct QrFactor32 {
+    wt: Matrix32,
+    tau: Vec<f32>,
+    /// `R` upcast to f64 for the triangular solves in the f64 LSQR loop.
+    r: Matrix,
+}
+
+impl QrFactor32 {
+    /// Factor `b` (`k × d` in f32, `k ≥ d`).
+    pub fn factor(b: &Matrix32) -> Result<QrFactor32, QrError> {
+        let (k, d) = (b.rows, b.cols);
+        assert!(k >= d, "QrFactor32: need rows >= cols, got {k} x {d}");
+        assert!(d > 0, "QrFactor32: empty matrix");
+        // transpose into d × k
+        let mut wt = Matrix32::zeros(d, k);
+        for i in 0..k {
+            let brow = b.row(i);
+            for j in 0..d {
+                wt.set(j, i, brow[j]);
+            }
+        }
+        let mut tau = vec![0.0f32; d];
+        let mut j0 = 0;
+        while j0 < d {
+            let nb = NB.min(d - j0);
+            for j in j0..j0 + nb {
+                tau[j] = house32(&mut wt, j, k);
+                for rr in j + 1..j0 + nb {
+                    apply_reflector32(&mut wt, j, rr, k, tau[j]);
+                }
+            }
+            let pe = j0 + nb;
+            if pe < d {
+                let mw = k - j0;
+                let mut vt = Matrix32::zeros(nb, mw);
+                for p in 0..nb {
+                    let gj = j0 + p;
+                    let vrow = vt.row_mut(p);
+                    vrow[gj - j0] = 1.0;
+                    vrow[gj - j0 + 1..].copy_from_slice(&wt.row(gj)[gj + 1..k]);
+                }
+                let tmat = build_t32(&vt, &tau[j0..j0 + nb]);
+                let mut m = Matrix32::zeros(d - pe, mw);
+                for rr in pe..d {
+                    m.row_mut(rr - pe).copy_from_slice(&wt.row(rr)[j0..k]);
+                }
+                let x = matmul_nt32(&m, &vt);
+                let y = matmul32(&x, &tmat);
+                let p = matmul32(&y, &vt);
+                for rr in pe..d {
+                    let dst = &mut wt.row_mut(rr)[j0..k];
+                    for (dv, pv) in dst.iter_mut().zip(p.row(rr - pe)) {
+                        *dv -= pv;
+                    }
+                }
+            }
+            j0 = pe;
+        }
+        let mut r = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                r.set(i, j, wt.at(j, i) as f64);
+            }
+            let rii = r.at(i, i);
+            if rii == 0.0 || !rii.is_finite() {
+                return Err(QrError::RankDeficient { index: i });
+            }
+        }
+        Ok(QrFactor32 { wt, tau, r })
+    }
+
+    /// The upper-triangular factor, upcast to f64.
+    pub fn r(&self) -> &Matrix {
+        &self.r
+    }
+
+    /// `y ← Qᵀ y` in f32 (length `k`; used only for the sketch-and-solve
+    /// warm start, where f32 accuracy is ample).
+    pub fn qt_apply(&self, y: &mut [f32]) {
+        let k = self.wt.cols;
+        assert_eq!(y.len(), k);
+        for j in 0..self.wt.rows {
+            let t = self.tau[j];
+            if t == 0.0 {
+                continue;
+            }
+            let vtail = &self.wt.row(j)[j + 1..k];
+            let w = y[j] + simd::dot_f32(vtail, &y[j + 1..k]);
+            let tw = t * w;
+            y[j] -= tw;
+            simd::axpy_acc_f32(-tw, vtail, &mut y[j + 1..k]);
+        }
+    }
+
+    /// `x ← R⁻¹ x` against the upcast f64 `R`.
+    pub fn r_solve(&self, x: &mut [f64]) {
+        r_solve_upper(&self.r, x);
+    }
+
+    /// `x ← R⁻ᵀ x` against the upcast f64 `R`.
+    pub fn rt_solve(&self, x: &mut [f64]) {
+        rt_solve_upper(&self.r, x);
+    }
+}
+
+fn house32(wt: &mut Matrix32, j: usize, k: usize) -> f32 {
+    let w = wt.row_mut(j);
+    let alpha = w[j];
+    let tail = &w[j + 1..k];
+    let tail_norm2 = simd::dot_f32(tail, tail);
+    if tail_norm2 == 0.0 {
+        return 0.0;
+    }
+    let normx = (alpha * alpha + tail_norm2).sqrt();
+    let beta = if alpha >= 0.0 { -normx } else { normx };
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    for v in &mut w[j + 1..k] {
+        *v *= scale;
+    }
+    w[j] = beta;
+    tau
+}
+
+fn apply_reflector32(wt: &mut Matrix32, j: usize, rr: usize, k: usize, tau: f32) {
+    if tau == 0.0 {
+        return;
+    }
+    let cols = wt.cols;
+    let (lo, hi) = wt.data.split_at_mut(rr * cols);
+    let vtail = &lo[j * cols + j + 1..j * cols + k];
+    let crow = &mut hi[..k];
+    let w = crow[j] + simd::dot_f32(vtail, &crow[j + 1..k]);
+    let tw = tau * w;
+    crow[j] -= tw;
+    simd::axpy_acc_f32(-tw, vtail, &mut crow[j + 1..k]);
+}
+
+fn build_t32(vt: &Matrix32, tau: &[f32]) -> Matrix32 {
+    let nb = tau.len();
+    let mut t = Matrix32::zeros(nb, nb);
+    for p in 0..nb {
+        t.set(p, p, tau[p]);
+        if p > 0 {
+            let mut wv = vec![0.0f32; p];
+            for q in 0..p {
+                wv[q] = simd::dot_f32(vt.row(q), vt.row(p));
+            }
+            for q in 0..p {
+                let mut s = 0.0f32;
+                for u in q..p {
+                    s += t.at(q, u) * wv[u];
+                }
+                t.set(q, p, -tau[p] * s);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::syrk_t;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.gaussian()).collect())
+    }
+
+    /// `RᵀR = BᵀB` is the invariant the preconditioner actually relies on.
+    fn assert_gram_match(b: &Matrix, r: &Matrix, tol: f64) {
+        let d = b.cols;
+        let g = syrk_t(b);
+        let rt_r = matmul(&r.transpose(), r);
+        let scale = g.fro_norm().max(1.0);
+        for i in 0..d {
+            for j in 0..d {
+                assert!(
+                    (g.at(i, j) - rt_r.at(i, j)).abs() / scale < tol,
+                    "Gram mismatch at ({i},{j}): {} vs {}",
+                    g.at(i, j),
+                    rt_r.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reproduces_gram_and_is_triangular() {
+        let mut rng = Rng::seed_from(101);
+        // crosses the NB=32 panel boundary (d = 70) and includes tiny cases
+        for &(k, d) in &[(1usize, 1usize), (5, 3), (40, 17), (100, 70), (130, 64)] {
+            let b = rand_matrix(&mut rng, k, d);
+            let f = QrFactor::factor(&b).expect("full rank whp");
+            let r = f.r();
+            for i in 0..d {
+                for j in 0..i {
+                    assert_eq!(r.at(i, j), 0.0, "R not upper triangular");
+                }
+            }
+            assert_gram_match(&b, r, 1e-10);
+        }
+    }
+
+    #[test]
+    fn qt_apply_preserves_norm_and_maps_columns_to_r() {
+        let mut rng = Rng::seed_from(103);
+        let (k, d) = (60, 37);
+        let b = rand_matrix(&mut rng, k, d);
+        let f = QrFactor::factor(&b).expect("full rank");
+        // Qᵀ·(column j of B) = [R[:, j]; 0]
+        for j in [0usize, 1, d / 2, d - 1] {
+            let mut y: Vec<f64> = (0..k).map(|i| b.at(i, j)).collect();
+            f.qt_apply(&mut y);
+            for i in 0..d {
+                assert!((y[i] - f.r().at(i, j)).abs() < 1e-10, "Qᵀb col {j} row {i}");
+            }
+            for &v in &y[d..] {
+                assert!(v.abs() < 1e-9, "nonzero below R in col {j}");
+            }
+        }
+        // orthogonality: ‖Qᵀy‖ = ‖y‖
+        let y0: Vec<f64> = (0..k).map(|_| rng.gaussian()).collect();
+        let n0 = crate::linalg::norm2(&y0);
+        let mut y = y0.clone();
+        f.qt_apply(&mut y);
+        assert!((crate::linalg::norm2(&y) - n0).abs() / n0 < 1e-12);
+    }
+
+    #[test]
+    fn r_solves_invert_each_other() {
+        let mut rng = Rng::seed_from(107);
+        let b = rand_matrix(&mut rng, 50, 20);
+        let f = QrFactor::factor(&b).expect("full rank");
+        let x0: Vec<f64> = (0..20).map(|_| rng.gaussian()).collect();
+        // R⁻¹(R x) = x
+        let mut rx = vec![0.0; 20];
+        for i in 0..20 {
+            rx[i] = simd::dot(&f.r().row(i)[i..], &x0[i..]);
+        }
+        f.r_solve(&mut rx);
+        for i in 0..20 {
+            assert!((rx[i] - x0[i]).abs() < 1e-10);
+        }
+        // Rᵀ(R⁻ᵀ x) = x
+        let mut y = x0.clone();
+        f.rt_solve(&mut y);
+        let mut rty = vec![0.0; 20];
+        for i in 0..20 {
+            let mut s = 0.0;
+            for j in 0..=i {
+                s += f.r().at(j, i) * y[j];
+            }
+            rty[i] = s;
+        }
+        for i in 0..20 {
+            assert!((rty[i] - x0[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_is_reported() {
+        let mut b = Matrix::zeros(10, 3);
+        for i in 0..10 {
+            b.set(i, 0, (i + 1) as f64);
+            // column 1 is identically zero; column 2 arbitrary
+            b.set(i, 2, 1.0 / (i + 1) as f64);
+        }
+        match QrFactor::factor(&b) {
+            Err(QrError::RankDeficient { index }) => assert_eq!(index, 1),
+            Ok(_) => panic!("expected rank deficiency"),
+        }
+    }
+
+    #[test]
+    fn factor_is_bitwise_deterministic_across_threads() {
+        let mut rng = Rng::seed_from(109);
+        // big enough that the trailing-update GEMMs cross the parallel gate
+        let b = rand_matrix(&mut rng, 2000, 96);
+        let base = crate::par::with_threads(1, || QrFactor::factor(&b).unwrap());
+        for t in [2usize, 4] {
+            let got = crate::par::with_threads(t, || QrFactor::factor(&b).unwrap());
+            assert_eq!(base.r.data, got.r.data, "R differs at {t} threads");
+            assert_eq!(base.wt.data, got.wt.data, "Wt differs at {t} threads");
+            assert_eq!(base.tau, got.tau, "tau differs at {t} threads");
+        }
+    }
+
+    #[test]
+    fn f32_factor_tracks_f64_to_single_precision() {
+        let mut rng = Rng::seed_from(113);
+        let (k, d) = (120, 40);
+        let b = rand_matrix(&mut rng, k, d);
+        let f64f = QrFactor::factor(&b).expect("full rank");
+        let f32f = QrFactor32::factor(&Matrix32::from_f64(&b)).expect("full rank");
+        let scale = f64f.r().fro_norm();
+        for i in 0..d {
+            for j in i..d {
+                assert!(
+                    (f64f.r().at(i, j) - f32f.r().at(i, j)).abs() / scale < 1e-3,
+                    "R32 off at ({i},{j}): {} vs {}",
+                    f32f.r().at(i, j),
+                    f64f.r().at(i, j)
+                );
+            }
+        }
+    }
+}

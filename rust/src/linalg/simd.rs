@@ -58,6 +58,14 @@ use std::sync::atomic::AtomicU8;
 /// 4-accumulator schedule regardless of its native vector width.
 pub const DOT_LANES: usize = 4;
 
+/// Fixed virtual lane count of the [`dot_f32`] reduction schedule — twice
+/// the f64 width, because f32 packs twice as many elements per register
+/// (8 per AVX2 `ymm`, 4 per NEON `float32x4`). Same contract as
+/// [`DOT_LANES`]: a schedule constant, not a register width. Determinism is
+/// per-precision — the f32 schedule is bit-identical across ISAs and thread
+/// counts, but its results are *not* comparable bitwise to the f64 path.
+pub const DOT_LANES_F32: usize = 8;
+
 /// Instruction set selected for the vector primitives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Isa {
@@ -290,6 +298,41 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     }
 }
 
+/// f32 dot product on the fixed [`DOT_LANES_F32`]-accumulator schedule
+/// (the mixed-precision QR/Cholesky panel dot): lane `l` sums elements
+/// `i ≡ l (mod 8)` over the 8-aligned prefix, lanes combine
+/// left-associatively, remainder folds in sequentially.
+#[inline(always)]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::dot_f32(a, b) },
+        _ => scalar::dot_f32(a, b),
+    }
+}
+
+/// `y[t] += alpha * x[t]` in f32 (mixed-precision GEMM row stream and the
+/// QR reflector update). Element-wise: each output is touched once with a
+/// fixed expression, so the vector bodies are bit-identical by construction.
+#[inline(always)]
+pub fn axpy_acc_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match isa() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: isa() returned Avx2 only after runtime AVX2 detection.
+        Isa::Avx2 => unsafe { avx2::axpy_acc_f32(alpha, x, y) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::axpy_acc_f32(alpha, x, y) },
+        _ => scalar::axpy_acc_f32(alpha, x, y),
+    }
+}
+
 /// Four sequential-order dot products against a shared stream:
 /// `out[k] = Σ_p x[p] * ak[p]`, each accumulated in strict ascending `p`
 /// with a single running sum (the Cholesky trailing-update schedule; NOT the
@@ -454,6 +497,44 @@ pub(crate) mod scalar {
             s += a[i] * b[i];
         }
         s
+    }
+
+    /// The fixed 8-virtual-lane f32 reduction schedule (see module docs).
+    #[inline(always)]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut s0 = 0.0f32;
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        let mut s3 = 0.0f32;
+        let mut s4 = 0.0f32;
+        let mut s5 = 0.0f32;
+        let mut s6 = 0.0f32;
+        let mut s7 = 0.0f32;
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = 8 * k;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+            s4 += a[i + 4] * b[i + 4];
+            s5 += a[i + 5] * b[i + 5];
+            s6 += a[i + 6] * b[i + 6];
+            s7 += a[i + 7] * b[i + 7];
+        }
+        let mut s = s0 + s1 + s2 + s3 + s4 + s5 + s6 + s7;
+        for i in 8 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[inline(always)]
+    pub fn axpy_acc_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yv, &xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
     }
 
     #[inline(always)]
@@ -690,6 +771,55 @@ mod avx2 {
             s += a[i] * b[i];
         }
         s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        // One ymm holds the eight virtual lanes: lane l accumulates elements
+        // i % 8 == l, exactly the scalar s0..s7 schedule.
+        let mut acc = _mm256_setzero_ps();
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = 8 * k;
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        // left-associative lane combine, matching the scalar s0+..+s7
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3] + lanes[4] + lanes[5] + lanes[6]
+            + lanes[7];
+        for i in 8 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available. `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_acc_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(xp.add(i));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
     }
 
     /// # Safety
@@ -1054,6 +1184,66 @@ mod neon {
     }
 
     /// # Safety
+    /// Caller must ensure NEON is available; `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        // Two float32x4 registers hold the eight virtual lanes:
+        // acc03 = [s0..s3], acc47 = [s4..s7] — the scalar s0..s7 schedule.
+        let mut acc03 = vdupq_n_f32(0.0);
+        let mut acc47 = vdupq_n_f32(0.0);
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = 8 * k;
+            let a03 = vld1q_f32(ap.add(i));
+            let b03 = vld1q_f32(bp.add(i));
+            acc03 = vaddq_f32(acc03, vmulq_f32(a03, b03));
+            let a47 = vld1q_f32(ap.add(i + 4));
+            let b47 = vld1q_f32(bp.add(i + 4));
+            acc47 = vaddq_f32(acc47, vmulq_f32(a47, b47));
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc03),
+            vgetq_lane_f32::<1>(acc03),
+            vgetq_lane_f32::<2>(acc03),
+            vgetq_lane_f32::<3>(acc03),
+            vgetq_lane_f32::<0>(acc47),
+            vgetq_lane_f32::<1>(acc47),
+            vgetq_lane_f32::<2>(acc47),
+            vgetq_lane_f32::<3>(acc47),
+        ];
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3] + lanes[4] + lanes[5] + lanes[6]
+            + lanes[7];
+        for i in 8 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available. `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_acc_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = vdupq_n_f32(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = vld1q_f32(xp.add(i));
+            let yv = vld1q_f32(yp.add(i));
+            vst1q_f32(yp.add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
     /// Caller must ensure NEON is available; all slices same length.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot4_seq(x: &[f64], a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64]) -> [f64; 4] {
@@ -1296,6 +1486,47 @@ mod tests {
                 assert_eq!(p.to_bits(), pr.to_bits(), "csr_pair_dot n={n}");
             }
         }
+    }
+
+    #[test]
+    fn f32_primitives_match_scalar_bitwise_at_remainder_lengths() {
+        let _g = serialized();
+        let mut rng = Rng::seed_from(407);
+        for &n in LENS {
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let y0: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+
+            let d = dot_f32(&a, &b);
+            let dr = with_forced_scalar(|| dot_f32(&a, &b));
+            assert_eq!(d.to_bits(), dr.to_bits(), "dot_f32 n={n}");
+
+            let mut y = y0.clone();
+            axpy_acc_f32(0.37, &a, &mut y);
+            let mut yr = y0.clone();
+            with_forced_scalar(|| axpy_acc_f32(0.37, &a, &mut yr));
+            assert_eq!(y, yr, "axpy_acc_f32 n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_f32_matches_documented_schedule() {
+        // dot_f32() must implement exactly the 8-virtual-lane schedule, not
+        // any other association.
+        let a: Vec<f32> = (0..19).map(|i| (i as f32) * 0.1 + 1.0).collect();
+        let b: Vec<f32> = (0..19).map(|i| 2.0 - (i as f32) * 0.05).collect();
+        let mut s = [0.0f32; 8];
+        for k in 0..2 {
+            let i = 8 * k;
+            for l in 0..8 {
+                s[l] += a[i + l] * b[i + l];
+            }
+        }
+        let mut expect = s[0] + s[1] + s[2] + s[3] + s[4] + s[5] + s[6] + s[7];
+        for i in 16..19 {
+            expect += a[i] * b[i];
+        }
+        assert_eq!(dot_f32(&a, &b).to_bits(), expect.to_bits());
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Sketch-and-precondition LSQR with mixed-precision factorization.
+//!
+//! Solves the regularized quadratic of eq. (1.1) in its least-squares form:
+//! `min_x 1/2 ||Ā x − ȳ||²` over the augmented operator
+//!
+//! ```text
+//!        ⎡      A      ⎤            ⎡ y_top ⎤
+//!   Ā =  ⎢             ⎥ ,     ȳ =  ⎢       ⎥ ,   w_j = ν √λ_j
+//!        ⎣ diag(w_j)   ⎦            ⎣ y_bot ⎦
+//! ```
+//!
+//! with `y_top = y` (the labels, when available, else 0) and
+//! `y_bot_j = (b_j − (Aᵀ y_top)_j) / w_j`, so that `Āᵀ ȳ = b` exactly and
+//! the normal equations of the augmented system are `H x = b` with
+//! `H = AᵀA + ν²Λ` — the same optimum as every other solver in the suite.
+//!
+//! The preconditioner is the R factor of a blocked Householder QR of the
+//! *sketched* stack `B̄ = [S A; diag(w)]` ((m+d)×d): `RᵀR = (SA)ᵀSA + ν²Λ`,
+//! a (1±ε)-spectral approximation of `H`, so plain Golub–Kahan LSQR on the
+//! right-preconditioned operator `Ā R⁻¹` converges in `O(log 1/ε_tol)`
+//! iterations independent of `κ(A)`. Everything touches the data only
+//! through [`DataOp`](crate::linalg::DataOp) matvec / matvec_t, so dense,
+//! CSR, and the scaled views all work unchanged.
+//!
+//! **Mixed precision**: with [`Precision::F32`] the (already sketched,
+//! m+d × d) stack is downcast and factorized by the f32 QR kernels —
+//! roughly half the factorization bandwidth — and `R` is upcast back to
+//! f64. The LSQR iterations themselves always run in f64, wrapped in an
+//! iterative-refinement driver: after each pass the *true* f64 gradient
+//! `Āᵀ(ȳ − Āx)` is measured, and a correction pass re-runs LSQR on the
+//! residual until the gradient criterion holds (or the pass/iteration
+//! budget runs out). Final accuracy therefore matches the f64 path to
+//! solver tolerance; only the preconditioner quality differs.
+//!
+//! **Warm start**: unless disabled, the sketch-and-solve solution
+//! `x₀ = R⁻¹ (Qᵀ S̄ȳ)[0..d]` (the minimizer of the *sketched* least-squares
+//! problem, reusing the same Q/R) seeds the first pass — typically saving
+//! a third or more of the iterations at negligible cost. A caller-supplied
+//! `x0` takes precedence via the same residual-shift path.
+
+use crate::api::{Precision, SolveCtx, SolveStatus};
+use crate::linalg::{norm2, scal, Matrix, Matrix32, QrError, QrFactor, QrFactor32};
+use crate::precond::form_sketch_cached;
+use crate::problem::Problem;
+use crate::sketch::{cache, SketchKind};
+use crate::solvers::{ErrTracker, IterRecord, SolveReport};
+
+/// Gradient tolerance used when the request leaves `rel_tol` at 0 —
+/// unlike the decrement-driven loops, LSQR always needs a convergence
+/// target to size its refinement passes.
+const DEFAULT_REL_TOL: f64 = 1e-10;
+
+/// Hard cap on refinement passes (the first pass included). With an
+/// ε-accurate preconditioner each pass contracts the gradient by orders of
+/// magnitude, so a handful always suffices; the cap only guards stagnation
+/// on pathological inputs.
+const MAX_PASSES: usize = 4;
+
+/// Tuning knobs for [`solve_sketch_lsqr`]. Public so tests and benches can
+/// toggle individual features (e.g. the warm start) that the
+/// [`MethodSpec`](crate::api::MethodSpec) surface keeps at defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct LsqrOptions {
+    /// Sketch size m (rows of `SA`).
+    pub m: usize,
+    /// Embedding family for `S`.
+    pub sketch: SketchKind,
+    /// Factorization precision (iterations are always f64).
+    pub precision: Precision,
+    /// Seed the first pass with the sketch-and-solve solution. Ignored
+    /// when the context carries an explicit `x0`.
+    pub sketch_warm_start: bool,
+    /// RNG seed for `S` (also the sketch-cache key component).
+    pub seed: u64,
+}
+
+/// The augmented operator `Ā = [A; diag(w)]` applied matrix-free.
+struct AugOp<'a> {
+    prob: &'a Problem,
+    /// `w_j = ν √λ_j` (all positive: `Problem` asserts ν > 0, λ ≥ 1).
+    w: &'a [f64],
+}
+
+impl AugOp<'_> {
+    /// `out = Ā v` (`out` has length n+d).
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        let n = self.prob.n();
+        self.prob.a.matvec_into(v, &mut out[..n]);
+        for (o, (&wj, &vj)) in out[n..].iter_mut().zip(self.w.iter().zip(v)) {
+            *o = wj * vj;
+        }
+    }
+
+    /// `out = Āᵀ u` (`out` has length d).
+    fn apply_t(&self, u: &[f64], out: &mut [f64]) {
+        let n = self.prob.n();
+        self.prob.a.matvec_t_into(&u[..n], out);
+        for (o, (&wj, &uj)) in out.iter_mut().zip(self.w.iter().zip(&u[n..])) {
+            *o += wj * uj;
+        }
+    }
+}
+
+/// Precision-erased QR factor: both variants expose an f64 `R` for the
+/// triangular solves inside the (always-f64) LSQR loop; only `Qᵀ`
+/// application differs in storage precision.
+enum Factor {
+    F64(QrFactor),
+    F32(QrFactor32),
+}
+
+impl Factor {
+    fn r_solve(&self, x: &mut [f64]) {
+        match self {
+            Factor::F64(f) => f.r_solve(x),
+            Factor::F32(f) => f.r_solve(x),
+        }
+    }
+
+    fn rt_solve(&self, x: &mut [f64]) {
+        match self {
+            Factor::F64(f) => f.rt_solve(x),
+            Factor::F32(f) => f.rt_solve(x),
+        }
+    }
+
+    /// First `d` entries of `Qᵀ y` — the sketch-and-solve coefficients.
+    fn qt_coeffs(&self, y: &[f64], d: usize) -> Vec<f64> {
+        match self {
+            Factor::F64(f) => {
+                let mut t = y.to_vec();
+                f.qt_apply(&mut t);
+                t.truncate(d);
+                t
+            }
+            Factor::F32(f) => {
+                let mut t: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+                f.qt_apply(&mut t);
+                t[..d].iter().map(|&v| v as f64).collect()
+            }
+        }
+    }
+}
+
+/// Right-preconditioned LSQR solve of `prob`. `labels` (the raw
+/// regression targets `y`, when the problem came from data) tighten the
+/// augmented RHS; without them the top block is zero and `Āᵀȳ = b` still
+/// holds exactly, so Newton inner problems and hand-built quadratics work
+/// identically.
+///
+/// Honors the full [`SolveCtx`] contract: per-iteration budget polling,
+/// trace records streamed to the observer, `x0` warm start, `x_star`
+/// error tracking. Errors only on a rank-deficient sketched stack (which
+/// cannot happen for ν > 0 unless the factorization underflows).
+pub fn solve_sketch_lsqr(
+    prob: &Problem,
+    opts: &LsqrOptions,
+    labels: Option<&[f64]>,
+    ctx: &SolveCtx,
+) -> Result<(SolveReport, SolveStatus), QrError> {
+    let n = prob.n();
+    let d = prob.d();
+    let m = opts.m.max(1);
+    let t0 = std::time::Instant::now();
+
+    let w: Vec<f64> = prob.lambda.iter().map(|&l| prob.nu * l.sqrt()).collect();
+    let aug = AugOp { prob, w: &w };
+
+    // Augmented RHS: Āᵀ ȳ = b exactly, for any b.
+    let mut ybar = vec![0.0; n + d];
+    match labels {
+        Some(y) => {
+            ybar[..n].copy_from_slice(y);
+            let aty = prob.a.matvec_t(y);
+            for j in 0..d {
+                ybar[n + j] = (prob.b[j] - aty[j]) / w[j];
+            }
+        }
+        None => {
+            for j in 0..d {
+                ybar[n + j] = prob.b[j] / w[j];
+            }
+        }
+    }
+
+    // SA through the content-keyed cache: repeated solves on the same
+    // (data, sketch, seed, m) — λ-sweeps, Newton steps, re-solves — skip
+    // the sketch pass entirely.
+    let (sa, cache_hit) = form_sketch_cached(&prob.a, opts.sketch, m, opts.seed, cache::global());
+    let sketch_flops = if cache_hit { 0.0 } else { opts.sketch.sketch_cost_flops_op(m, &prob.a) };
+
+    // Stack B̄ = [SA; diag(w)] and factorize at the requested precision.
+    let mut stacked = Matrix::zeros(m + d, d);
+    stacked.data[..m * d].copy_from_slice(&sa.data);
+    for j in 0..d {
+        stacked.set(m + j, j, w[j]);
+    }
+    let factor = match opts.precision {
+        Precision::F64 => Factor::F64(QrFactor::factor(&stacked)?),
+        Precision::F32 => {
+            let s32 = Matrix32::from_f64(&stacked);
+            let tf = std::time::Instant::now();
+            let f = QrFactor32::factor(&s32)?;
+            crate::coordinator::metrics::record_lsqr_f32_factorization(tf.elapsed().as_nanos() as u64);
+            Factor::F32(f)
+        }
+    };
+    let factor_flops = 2.0 * ((m + d) * d * d) as f64;
+
+    // Starting point: explicit x0 > sketch-and-solve > zero. All three go
+    // through the same residual-shift path (solve for the correction on
+    // r̄ = ȳ − Ā x, add back), so the LSQR recurrences always start at 0.
+    let mut x_cur: Vec<f64> = if let Some(x0) = ctx.x0 {
+        x0.to_vec()
+    } else if opts.sketch_warm_start {
+        let mut sy = vec![0.0; m + d];
+        if let Some(y) = labels {
+            // Re-sample the *same* S (pure in kind/seed/m — the sequence
+            // form_sketch drew) and apply it to y as an n×1 operator.
+            let mut rng = crate::rng::Rng::seed_from(opts.seed);
+            let s = opts.sketch.sample(m, n, &mut rng);
+            let sym = s.apply_dense(&Matrix::from_vec(n, 1, y.to_vec()));
+            sy[..m].copy_from_slice(&sym.data);
+        }
+        sy[m..].copy_from_slice(&ybar[n..]);
+        let mut c = factor.qt_coeffs(&sy, d);
+        factor.r_solve(&mut c);
+        c
+    } else {
+        vec![0.0; d]
+    };
+
+    let err = ErrTracker::new(prob, &x_cur, ctx.x_star);
+    let tol = if ctx.stop.rel_tol > 0.0 { ctx.stop.rel_tol } else { DEFAULT_REL_TOL };
+    // Reference scales for the stopping tests: the true-space gradient
+    // reference is ‖b‖ = ‖Āᵀȳ‖; its preconditioned counterpart ‖R⁻ᵀb‖
+    // calibrates the in-loop estimate ‖(ĀR⁻¹)ᵀ r‖ to the same target.
+    let grad_ref = norm2(&prob.b).max(1e-300);
+    let ref_hat = {
+        let mut bh = prob.b.clone();
+        factor.rt_solve(&mut bh);
+        norm2(&bh).max(1e-300)
+    };
+
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut status = SolveStatus::Done;
+    let mut total_t = 0usize;
+    let mut passes = 0usize;
+    let mut converged = false;
+
+    let mut resid = vec![0.0; n + d];
+    let mut scratch_nd = vec![0.0; n + d];
+    let mut g = vec![0.0; d];
+
+    while passes < MAX_PASSES {
+        // True f64 gradient at x_cur — the refinement criterion. This is
+        // what makes the f32 factorization safe: convergence is always
+        // certified in working precision, never from the f32 factors.
+        aug.apply(&x_cur, &mut resid);
+        for i in 0..n + d {
+            resid[i] = ybar[i] - resid[i];
+        }
+        aug.apply_t(&resid, &mut g);
+        let gnorm = norm2(&g);
+        if trace.is_empty() {
+            let mut gh = g.clone();
+            factor.rt_solve(&mut gh);
+            let rec0 = IterRecord {
+                t: 0,
+                secs: 0.0,
+                m,
+                delta_tilde: norm2(&gh),
+                delta_rel: if ctx.x_star.is_some() { 1.0 } else { f64::NAN },
+            };
+            ctx.emit(&rec0);
+            trace.push(rec0);
+        }
+        if gnorm / grad_ref <= tol {
+            converged = true;
+            break;
+        }
+        if total_t >= ctx.stop.max_iters {
+            break;
+        }
+        passes += 1;
+
+        // Golub–Kahan bidiagonalization of Op = Ā R⁻¹ against RHS r̄,
+        // starting from x̂ = 0 (Paige & Saunders recurrences, damp = 0).
+        let mut u = resid.clone();
+        let mut beta = norm2(&u);
+        if beta > 0.0 {
+            scal(1.0 / beta, &mut u);
+        }
+        let mut v = vec![0.0; d];
+        aug.apply_t(&u, &mut v);
+        factor.rt_solve(&mut v);
+        let mut alpha = norm2(&v);
+        if alpha > 0.0 {
+            scal(1.0 / alpha, &mut v);
+        }
+        if alpha * beta == 0.0 {
+            // RHS is orthogonal to the operator range: nothing to correct
+            // in this pass; let the gradient check settle it.
+            continue;
+        }
+        let mut wvec = v.clone();
+        let mut xhat = vec![0.0; d];
+        let mut phibar = beta;
+        let mut rhobar = alpha;
+        let mut budget_hit = false;
+
+        while total_t < ctx.stop.max_iters {
+            if let Some(s) = ctx.budget.exhausted() {
+                status = s;
+                budget_hit = true;
+                break;
+            }
+            // u ← Op v − α u;  β = ‖u‖
+            let mut rv = v.clone();
+            factor.r_solve(&mut rv);
+            aug.apply(&rv, &mut scratch_nd);
+            for i in 0..n + d {
+                u[i] = scratch_nd[i] - alpha * u[i];
+            }
+            beta = norm2(&u);
+            if beta > 0.0 {
+                scal(1.0 / beta, &mut u);
+            }
+            // v ← Opᵀ u − β v;  α = ‖v‖
+            aug.apply_t(&u, &mut g);
+            factor.rt_solve(&mut g);
+            for j in 0..d {
+                v[j] = g[j] - beta * v[j];
+            }
+            alpha = norm2(&v);
+            if alpha > 0.0 {
+                scal(1.0 / alpha, &mut v);
+            }
+            // Givens rotation eliminating β from the lower bidiagonal.
+            let rho = (rhobar * rhobar + beta * beta).sqrt();
+            let c = rhobar / rho;
+            let s = beta / rho;
+            let theta = s * alpha;
+            rhobar = -c * alpha;
+            let phi = c * phibar;
+            phibar = s * phibar;
+            for j in 0..d {
+                xhat[j] += (phi / rho) * wvec[j];
+                wvec[j] = v[j] - (theta / rho) * wvec[j];
+            }
+            total_t += 1;
+            // ‖Opᵀ r‖ estimate, free from the recurrence quantities.
+            let arnorm = phibar * alpha * c.abs();
+            let rec = IterRecord {
+                t: total_t,
+                secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+                m,
+                delta_tilde: arnorm,
+                delta_rel: if ctx.x_star.is_some() {
+                    let mut xfull = xhat.clone();
+                    factor.r_solve(&mut xfull);
+                    for j in 0..d {
+                        xfull[j] += x_cur[j];
+                    }
+                    err.rel(prob, &xfull)
+                } else {
+                    f64::NAN
+                },
+            };
+            ctx.emit(&rec);
+            trace.push(rec);
+            if arnorm <= tol * ref_hat || alpha == 0.0 || beta == 0.0 {
+                break;
+            }
+        }
+
+        // Fold the correction back into original coordinates.
+        factor.r_solve(&mut xhat);
+        for j in 0..d {
+            x_cur[j] += xhat[j];
+        }
+        if budget_hit {
+            break;
+        }
+    }
+
+    // Passes beyond the first are refinement corrections.
+    crate::coordinator::metrics::record_lsqr_refinement(passes.saturating_sub(1) as u64, converged);
+
+    let method = match opts.precision {
+        Precision::F64 => "sketch_lsqr".to_string(),
+        Precision::F32 => "sketch_lsqr[f32]".to_string(),
+    };
+    let report = SolveReport {
+        method,
+        x: x_cur,
+        iterations: total_t,
+        trace,
+        final_m: m,
+        sketch_doublings: 0,
+        secs: (t0.elapsed().as_secs_f64() - err.overhead()).max(0.0),
+        sketch_flops,
+        factor_flops,
+    };
+    Ok((report, status))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Budget, Stop};
+    use crate::linalg::dot;
+    use crate::rng::Rng;
+
+    fn default_opts(m: usize, seed: u64) -> LsqrOptions {
+        LsqrOptions {
+            m,
+            sketch: SketchKind::Sjlt { s: 1 },
+            precision: Precision::F64,
+            sketch_warm_start: true,
+            seed,
+        }
+    }
+
+    #[test]
+    fn augmented_operator_is_self_adjoint_pair() {
+        let mut rng = Rng::seed_from(811);
+        let (n, d) = (23, 7);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let lambda: Vec<f64> = (0..d).map(|j| 1.0 + j as f64 * 0.25).collect();
+        let prob = Problem::general(a, rng.gaussian_vec(d), lambda, 0.7);
+        let w: Vec<f64> = prob.lambda.iter().map(|&l| prob.nu * l.sqrt()).collect();
+        let aug = AugOp { prob: &prob, w: &w };
+        let v = rng.gaussian_vec(d);
+        let u = rng.gaussian_vec(n + d);
+        let mut av = vec![0.0; n + d];
+        aug.apply(&v, &mut av);
+        let mut atu = vec![0.0; d];
+        aug.apply_t(&u, &mut atu);
+        // <Āv, u> == <v, Āᵀu>
+        let lhs = dot(&av, &u);
+        let rhs = dot(&v, &atu);
+        assert!((lhs - rhs).abs() < 1e-10 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+        // Āᵀȳ = b exactly when built from labels.
+        let y = rng.gaussian_vec(n);
+        let prob2 = Problem::ridge_from_labels(prob.a.clone(), &y, 0.7);
+        let w2: Vec<f64> = prob2.lambda.iter().map(|&l| prob2.nu * l.sqrt()).collect();
+        let aty = prob2.a.matvec_t(&y);
+        let mut ybar = vec![0.0; n + d];
+        ybar[..n].copy_from_slice(&y);
+        for j in 0..d {
+            ybar[n + j] = (prob2.b[j] - aty[j]) / w2[j];
+        }
+        let aug2 = AugOp { prob: &prob2, w: &w2 };
+        let mut aty_bar = vec![0.0; d];
+        aug2.apply_t(&ybar, &mut aty_bar);
+        for j in 0..d {
+            assert!((aty_bar[j] - prob2.b[j]).abs() < 1e-10, "col {j}");
+        }
+    }
+
+    #[test]
+    fn converges_to_the_normal_equation_solution() {
+        let mut rng = Rng::seed_from(823);
+        let (n, d) = (120, 12);
+        let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+        let y = rng.gaussian_vec(n);
+        let prob = Problem::ridge_from_labels(a, &y, 0.5);
+        let exact = crate::solvers::DirectSolver::solve(&prob).unwrap();
+        let budget = Budget::none();
+        let ctx = SolveCtx::from_stop(Stop::default().with_rel_tol(1e-12), &budget);
+        let (rep, status) =
+            solve_sketch_lsqr(&prob, &default_opts(4 * d, 42), Some(&y), &ctx).unwrap();
+        assert_eq!(status, SolveStatus::Done);
+        assert!(rep.iterations > 0);
+        for j in 0..d {
+            assert!(
+                (rep.x[j] - exact.x[j]).abs() < 1e-8,
+                "col {j}: {} vs {}",
+                rep.x[j],
+                exact.x[j]
+            );
+        }
+    }
+}

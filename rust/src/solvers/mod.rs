@@ -11,6 +11,7 @@ pub mod block_pcg;
 pub mod cg;
 pub mod direct;
 pub mod ihs;
+pub mod lsqr;
 pub mod pcg;
 pub mod polyak;
 
@@ -18,6 +19,7 @@ pub use block_pcg::{BlockPcg, BlockSolveReport};
 pub use cg::ConjugateGradient;
 pub use direct::DirectSolver;
 pub use ihs::Ihs;
+pub use lsqr::{solve_sketch_lsqr, LsqrOptions};
 pub use pcg::Pcg;
 pub use polyak::PolyakIhs;
 

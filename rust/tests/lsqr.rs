@@ -1,0 +1,273 @@
+//! Integration tests for the sketch-and-precondition LSQR pipeline
+//! (`solvers::lsqr` + the `MethodSpec::SketchLsqr` registry path):
+//! agreement with the direct solver on dense and CSR data, bitwise
+//! determinism across thread counts, the f32-factorization + f64
+//! iterative-refinement parity contract on a κ≈1e6 problem, the
+//! sketch-and-solve warm start, sketch-cache reuse, and the headline
+//! acceptance claim — on a tall ill-conditioned dense problem LSQR
+//! reaches 1e-8 relative error in ≤ half the matvecs of PCG on the
+//! normal equations (which stalls near u·κ(H) and never gets there).
+
+use sketchsolve::api::{
+    self, Budget, MethodSpec, Precision, SolveCtx, SolveRequest, SolveStatus, Stop,
+};
+use sketchsolve::coordinator::Metrics;
+use sketchsolve::linalg::{norm2, Csr, Matrix, QrFactor};
+use sketchsolve::par;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{solve_sketch_lsqr, DirectSolver, LsqrOptions};
+use std::sync::Arc;
+
+fn opts(m: usize, seed: u64) -> LsqrOptions {
+    LsqrOptions {
+        m,
+        sketch: SketchKind::Sjlt { s: 1 },
+        precision: Precision::F64,
+        sketch_warm_start: true,
+        seed,
+    }
+}
+
+/// Tall dense `A = G · diag(σ) / √n` with `σ_j` log-spaced `1 → σ_min`
+/// (so `κ(A) = 1/σ_min` and `‖A‖₂ ≈ 1`), plus labels `y = A·x_true`
+/// perturbed by `noise`. Returns `(A, x_true, y)`.
+fn ill_conditioned(
+    n: usize,
+    d: usize,
+    sigma_min: f64,
+    noise: f64,
+    seed: u64,
+) -> (Matrix, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let scale = 1.0 / (n as f64).sqrt();
+    let sigmas: Vec<f64> =
+        (0..d).map(|j| sigma_min.powf(j as f64 / (d - 1) as f64)).collect();
+    let mut a = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            a.set(i, j, rng.gaussian() * sigmas[j] * scale);
+        }
+    }
+    let x_true = rng.gaussian_vec(d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..d {
+            s += a.at(i, j) * x_true[j];
+        }
+        y[i] = s + noise * rng.gaussian();
+    }
+    (a, x_true, y)
+}
+
+fn rel_err_2norm(x: &[f64], x_star: &[f64]) -> f64 {
+    let diff: Vec<f64> = x.iter().zip(x_star).map(|(a, b)| a - b).collect();
+    norm2(&diff) / norm2(x_star).max(1e-300)
+}
+
+#[test]
+fn lsqr_matches_direct_on_dense_and_csr() {
+    let (n, d, nu) = (300usize, 24usize, 0.1f64);
+    let mut rng = Rng::seed_from(901);
+    let a = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect());
+    let y = rng.gaussian_vec(n);
+    let csr = Csr::from_dense(&a);
+    let dense_prob = Arc::new(Problem::ridge_from_labels(a, &y, nu));
+    let csr_prob = Arc::new(Problem::ridge_from_labels(csr, &y, nu));
+    let exact = DirectSolver::solve(&dense_prob).unwrap();
+
+    for prob in [dense_prob, csr_prob] {
+        let is_sparse = prob.a.is_sparse();
+        let request = SolveRequest::new(prob)
+            .method(MethodSpec::SketchLsqr { m: None, precision: Precision::F64 })
+            .stop(Stop { max_iters: 200, rel_tol: 1e-12, abs_decrement_tol: 0.0 })
+            .seed(5)
+            .labels(y.clone());
+        let out = api::solve(&request).unwrap();
+        assert_eq!(out.status, SolveStatus::Done, "sparse={is_sparse}");
+        assert_eq!(out.report.method, "sketch_lsqr");
+        // m: None resolves to 4d
+        assert_eq!(out.report.final_m, 4 * d);
+        for j in 0..d {
+            assert!(
+                (out.report.x[j] - exact.x[j]).abs() < 1e-8 * (1.0 + exact.x[j].abs()),
+                "sparse={is_sparse} col {j}: {} vs {}",
+                out.report.x[j],
+                exact.x[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn f64_path_is_bitwise_deterministic_across_thread_counts() {
+    let (a, _xt, y) = ill_conditioned(512, 32, 1e-3, 0.0, 911);
+    let prob = Arc::new(Problem::ridge_from_labels(a, &y, 1e-3));
+    let request = SolveRequest::new(prob)
+        .method(MethodSpec::SketchLsqr { m: None, precision: Precision::F64 })
+        .stop(Stop { max_iters: 200, rel_tol: 1e-10, abs_decrement_tol: 0.0 })
+        .seed(17)
+        .labels(y);
+    let runs: Vec<Vec<u64>> = [1usize, 2, 4]
+        .iter()
+        .map(|&t| {
+            let out = par::with_threads(t, || api::solve(&request).unwrap());
+            assert_eq!(out.status, SolveStatus::Done, "threads={t}");
+            out.report.x.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "threads 1 vs 2 diverged");
+    assert_eq!(runs[0], runs[2], "threads 1 vs 4 diverged");
+}
+
+#[test]
+fn f32_factorization_with_refinement_matches_f64_on_kappa_1e6() {
+    let (a, _xt, y) = ill_conditioned(1024, 32, 1e-6, 0.0, 929);
+    let prob = Problem::ridge_from_labels(a, &y, 1e-6);
+    let d = prob.d();
+    let budget = Budget::none();
+    let ctx = SolveCtx::from_stop(Stop::max_iters(300).with_rel_tol(1e-10), &budget);
+
+    let before = Metrics::lsqr_counters();
+    let (rep64, st64) = solve_sketch_lsqr(&prob, &opts(4 * d, 31), Some(&y), &ctx).unwrap();
+    let o32 = LsqrOptions { precision: Precision::F32, ..opts(4 * d, 31) };
+    let (rep32, st32) = solve_sketch_lsqr(&prob, &o32, Some(&y), &ctx).unwrap();
+    let after = Metrics::lsqr_counters();
+
+    assert_eq!(st64, SolveStatus::Done);
+    assert_eq!(st32, SolveStatus::Done);
+    assert_eq!(rep64.method, "sketch_lsqr");
+    assert_eq!(rep32.method, "sketch_lsqr[f32]");
+    // the f32 factorization path really ran (and was timed)
+    assert!(
+        after.f32_factorizations > before.f32_factorizations,
+        "f32 counter: {} -> {}",
+        before.f32_factorizations,
+        after.f32_factorizations
+    );
+    assert!(after.refinement_converged.is_some());
+    // parity in the solver's own (energy-norm) metric: both runs are
+    // certified by the same f64 true-gradient criterion, so the f32
+    // factorization changes the preconditioner, never the answer
+    let e = prob.error_to(&rep32.x, &rep64.x);
+    let e0 = prob.error_to(&vec![0.0; d], &rep64.x).max(1e-300);
+    assert!((e / e0).sqrt() < 1e-8, "f32 vs f64 energy gap {:.3e}", (e / e0).sqrt());
+}
+
+#[test]
+fn sketch_warm_start_saves_iterations() {
+    // near-consistent labels: the sketched least-squares solution lands
+    // close to x*, so the warm start should skip a solid chunk of the
+    // cold iteration count rather than tie it
+    let (a, _xt, y) = ill_conditioned(400, 24, 1e-2, 1e-4, 937);
+    let prob = Problem::ridge_from_labels(a, &y, 1e-2);
+    let d = prob.d();
+    let budget = Budget::none();
+    let ctx = SolveCtx::from_stop(Stop::max_iters(300).with_rel_tol(1e-10), &budget);
+
+    let warm_opts = opts(4 * d, 53);
+    let cold_opts = LsqrOptions { sketch_warm_start: false, ..warm_opts };
+    let (warm, _) = solve_sketch_lsqr(&prob, &warm_opts, Some(&y), &ctx).unwrap();
+    let (cold, _) = solve_sketch_lsqr(&prob, &cold_opts, Some(&y), &ctx).unwrap();
+    assert!(warm.iterations >= 1);
+    assert!(
+        warm.iterations < cold.iterations,
+        "warm {} vs cold {}",
+        warm.iterations,
+        cold.iterations
+    );
+    // both ended at the same criterion
+    for j in 0..d {
+        assert!((warm.x[j] - cold.x[j]).abs() < 1e-6 * (1.0 + cold.x[j].abs()), "col {j}");
+    }
+}
+
+#[test]
+fn repeated_solve_reuses_the_cached_sketch() {
+    let (a, _xt, y) = ill_conditioned(384, 16, 1e-2, 0.0, 941);
+    let prob = Arc::new(Problem::ridge_from_labels(a, &y, 1e-2));
+    let request = SolveRequest::new(prob)
+        .method(MethodSpec::SketchLsqr { m: None, precision: Precision::F64 })
+        .stop(Stop { max_iters: 200, rel_tol: 1e-10, abs_decrement_tol: 0.0 })
+        .seed(61)
+        .labels(y);
+    let first = api::solve(&request).unwrap();
+    let second = api::solve(&request).unwrap();
+    assert!(first.report.sketch_flops > 0.0, "first solve must form the sketch");
+    // second identical solve: SA comes from the content-keyed cache, so
+    // no sketch formation work is charged...
+    assert_eq!(second.report.sketch_flops, 0.0);
+    // ...and the run is bitwise identical
+    let b1: Vec<u64> = first.report.x.iter().map(|v| v.to_bits()).collect();
+    let b2: Vec<u64> = second.report.x.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(b1, b2);
+}
+
+/// The acceptance claim: on a tall dense problem with κ(A) = 1e6 (so
+/// κ(H) ≈ 1e11 at near-vanishing regularization), PCG on the normal
+/// equations stalls near u·κ(H) in the 2-norm — orders of magnitude
+/// above 1e-8 — while sketch-preconditioned LSQR, which only ever pays
+/// κ(A), reaches 1e-8 relative error well inside half of PCG's matvec
+/// budget. The reference solution is a backward-stable Householder QR
+/// of the full (unsketched) augmented operator.
+#[test]
+fn acceptance_lsqr_halves_pcg_matvecs_to_1e8() {
+    let (n, d, nu) = (2048usize, 64usize, 3e-6f64);
+    let (a, _xt, y) = ill_conditioned(n, d, 1e-6, 0.0, 947);
+    let prob = Arc::new(Problem::ridge_from_labels(a, &y, nu));
+
+    // gold reference: QR of the full augmented stack [A; diag(ν√λ)]
+    let w: Vec<f64> = prob.lambda.iter().map(|&l| nu * l.sqrt()).collect();
+    let mut full = Matrix::zeros(n + d, d);
+    let dense = prob.a.dense_view();
+    full.data[..n * d].copy_from_slice(&dense.data);
+    for j in 0..d {
+        full.set(n + j, j, w[j]);
+    }
+    let qr = QrFactor::factor(&full).unwrap();
+    let aty = prob.a.matvec_t(&y);
+    let mut ybar = vec![0.0; n + d];
+    ybar[..n].copy_from_slice(&y);
+    for j in 0..d {
+        ybar[n + j] = (prob.b[j] - aty[j]) / w[j];
+    }
+    qr.qt_apply(&mut ybar);
+    let mut x_star = ybar[..d].to_vec();
+    qr.r_solve(&mut x_star);
+
+    // PCG on the normal equations, same sketch size, no tolerance stop:
+    // it runs its full budget and still cannot cross 1e-8
+    let pcg_cap = 300usize;
+    let pcg_req = SolveRequest::new(prob.clone())
+        .method(MethodSpec::PcgFixed { m: Some(4 * d), sketch: SketchKind::Sjlt { s: 1 } })
+        .stop(Stop { max_iters: pcg_cap, rel_tol: 0.0, abs_decrement_tol: 0.0 })
+        .seed(7);
+    let pcg = api::solve(&pcg_req).unwrap();
+    assert_eq!(pcg.report.iterations, pcg_cap);
+    let pcg_err = rel_err_2norm(&pcg.report.x, &x_star);
+    assert!(pcg_err > 1e-8, "pcg unexpectedly reached {pcg_err:.3e} despite κ(H)≈1e11");
+
+    // sketch-and-precondition LSQR on the same data and sketch size
+    let lsqr_req = SolveRequest::new(prob.clone())
+        .method(MethodSpec::SketchLsqr { m: Some(4 * d), precision: Precision::F64 })
+        .stop(Stop { max_iters: 400, rel_tol: 1e-13, abs_decrement_tol: 0.0 })
+        .seed(7)
+        .labels(y);
+    let lsqr = api::solve(&lsqr_req).unwrap();
+    assert_eq!(lsqr.status, SolveStatus::Done);
+    let lsqr_err = rel_err_2norm(&lsqr.report.x, &x_star);
+    assert!(lsqr_err <= 1e-8, "lsqr error {lsqr_err:.3e} (pcg stalled at {pcg_err:.3e})");
+
+    // matvec accounting: both methods touch A twice per iteration (LSQR:
+    // one apply + one transpose apply; PCG: one hess_apply). Charge LSQR
+    // a conservative per-pass overhead for the refinement-driver gradient
+    // checks and the warm start.
+    let lsqr_matvecs = 2 * lsqr.report.iterations + 10;
+    let pcg_matvecs = 2 * pcg.report.iterations;
+    assert!(
+        lsqr_matvecs <= pcg_matvecs / 2,
+        "lsqr used {lsqr_matvecs} matvecs (err {lsqr_err:.3e}), pcg {pcg_matvecs} (err {pcg_err:.3e})"
+    );
+}

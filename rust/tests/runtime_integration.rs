@@ -2,9 +2,14 @@
 //! linalg path. Requires `make artifacts`; tests no-op (pass) when the
 //! artifacts directory is absent so `cargo test` works pre-build.
 
+use sketchsolve::api::{self, Budget, MethodSpec, Precision, SolveCtx, SolveRequest, Stop};
 use sketchsolve::linalg::{fwht_rows, matvec, matvec_t, syrk_t, Matrix};
+use sketchsolve::problem::Problem;
 use sketchsolve::rng::Rng;
 use sketchsolve::runtime::Engine;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::solvers::{solve_sketch_lsqr, LsqrOptions};
+use std::sync::Arc;
 
 fn artifacts_dir() -> Option<String> {
     let dir = std::env::var("SKETCHSOLVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -139,6 +144,70 @@ fn hess_apply_artifact_matches_native() {
     }
     let e = rel_err(&outs[0], &want);
     assert!(e < RTOL, "hess_apply rel err {e}");
+}
+
+/// The f32-parity contract for the accelerated path. Part one runs
+/// unconditionally: the native mixed-precision solver (f32 factorization
+/// + f64 iterative refinement, `solvers::lsqr`) must match the native
+/// f64 path to solver tolerance — this is the reference any f32-storage
+/// backend is held to. Part two is artifact-gated like the other tests
+/// here: where `xla_pcg` is executable, its solution must sit within
+/// `RTOL` of that native f32 reference.
+#[test]
+fn native_f32_refinement_is_the_xla_pcg_parity_reference() {
+    let (n, d, nu) = (768usize, 64usize, 1e-2f64);
+    let mut rng = Rng::seed_from(17);
+    let a = Matrix::from_vec(
+        n,
+        d,
+        (0..n * d).map(|_| rng.gaussian() / (n as f64).sqrt()).collect(),
+    );
+    let y = rng.gaussian_vec(n);
+    let prob = Problem::ridge_from_labels(a, &y, nu);
+    let budget = Budget::none();
+    let ctx = SolveCtx::from_stop(Stop::max_iters(200).with_rel_tol(1e-10), &budget);
+    let base = LsqrOptions {
+        m: 4 * d,
+        sketch: SketchKind::Sjlt { s: 1 },
+        precision: Precision::F64,
+        sketch_warm_start: true,
+        seed: 23,
+    };
+    let (rep64, _) = solve_sketch_lsqr(&prob, &base, Some(&y), &ctx).expect("f64 solve");
+    let o32 = LsqrOptions { precision: Precision::F32, ..base };
+    let (rep32, _) = solve_sketch_lsqr(&prob, &o32, Some(&y), &ctx).expect("f32 solve");
+    let e = rel_err(&rep32.x, &rep64.x);
+    assert!(e < 1e-8, "native f32+refinement vs f64 rel err {e}");
+
+    // artifact-gated half: the accelerated PCG against the f32 reference
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let (n, d) = (4096usize, 512usize);
+    let mut rng = Rng::seed_from(19);
+    let a = Matrix::from_vec(
+        n,
+        d,
+        (0..n * d).map(|_| rng.gaussian() / (n as f64).sqrt()).collect(),
+    );
+    let y = rng.gaussian_vec(n);
+    let prob = Arc::new(Problem::ridge_from_labels(a, &y, 1e-1));
+    let xla_req = SolveRequest::new(prob.clone())
+        .method(MethodSpec::XlaPcg { m: None })
+        .stop(Stop { max_iters: 100, rel_tol: 1e-8, abs_decrement_tol: 0.0 })
+        .seed(29);
+    let xla = match api::solve(&xla_req) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("skipping xla_pcg half: {e}");
+            return;
+        }
+    };
+    let ctx = SolveCtx::from_stop(Stop::max_iters(200).with_rel_tol(1e-10), &budget);
+    let o32 = LsqrOptions { m: 4 * d, ..o32 };
+    let (native, _) = solve_sketch_lsqr(&prob, &o32, Some(&y), &ctx).expect("native f32");
+    let e = rel_err(&xla.report.x, &native.x);
+    assert!(e < RTOL, "xla_pcg vs native f32 reference rel err {e}");
 }
 
 #[test]

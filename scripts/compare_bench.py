@@ -1,18 +1,22 @@
 #!/usr/bin/env python3
-"""Diff BENCH_micro.json thread-sweep medians against a committed baseline.
+"""Diff bench thread-sweep medians against a committed baseline.
 
-The micro bench (`cargo bench --bench micro`) writes BENCH_micro.json with
-records of the form {op, threads, median_s, speedup_vs_1t}. This gate
-compares the medians of the current run against a committed baseline and
-fails (exit 1) when any shared (op, threads) cell is more than
---threshold (default 15%) slower. A missing baseline is not an error —
-the gate reports "nothing to compare" and exits 0, so CI can invoke it
-unconditionally and it only bites once a baseline is committed (e.g. as
-benchmarks/BENCH_micro.baseline.json from a trusted runner).
+The benches (`cargo bench --bench micro`, `cargo bench --bench lsqr`,
+`cargo bench --bench newton_glm`) all write JSON documents with records
+of the form {op, threads, median_s, speedup_vs_1t} — BENCH_micro.json,
+BENCH_lsqr.json, BENCH_newton.json. This gate compares the medians of a
+current run against a committed baseline and fails (exit 1) when any
+shared (op, threads) cell is more than --threshold (default 15%) slower.
+A missing baseline is not an error — the gate reports "nothing to
+compare" and exits 0, so CI can invoke it unconditionally and it only
+bites once a baseline is committed (e.g. benchmarks/BENCH_micro.baseline.json
+or benchmarks/BENCH_lsqr.baseline.json from a trusted runner).
 
 Usage:
   scripts/compare_bench.py [--baseline benchmarks/BENCH_micro.baseline.json]
                            [--current BENCH_micro.json] [--threshold 0.15]
+  scripts/compare_bench.py --baseline benchmarks/BENCH_lsqr.baseline.json \
+                           --current BENCH_lsqr.json
 """
 
 import argparse

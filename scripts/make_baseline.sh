@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Arm the micro-bench regression gate: run the thread-sweep micro bench on
-# THIS machine and write its medians to benchmarks/BENCH_micro.baseline.json,
-# the file scripts/compare_bench.py (and the ci.yml build-test job) diffs
-# against. The gate stays dormant until this baseline is committed — bench
+# Arm the bench regression gates: run the thread-sweep micro bench and the
+# sketch-LSQR bench on THIS machine and write their medians to
+# benchmarks/BENCH_micro.baseline.json and benchmarks/BENCH_lsqr.baseline.json,
+# the files scripts/compare_bench.py (and the ci.yml build-test job) diffs
+# against. The gates stay dormant until a baseline is committed — bench
 # medians only transfer between identical machines, so record the baseline
 # on the runner that will enforce it.
 #
@@ -36,13 +37,20 @@ echo "== cargo bench --bench micro -p sketchsolve ${FEATURES[*]:-} =="
 cargo bench --bench micro -p sketchsolve "${FEATURES[@]}" -- \
   "${QUICK[@]}" --out "$OUT"
 
+LSQR_OUT="$PWD/benchmarks/BENCH_lsqr.baseline.json"
 echo
-echo "baseline written to benchmarks/BENCH_micro.baseline.json"
+echo "== cargo bench --bench lsqr -p sketchsolve ${FEATURES[*]:-} =="
+cargo bench --bench lsqr -p sketchsolve "${FEATURES[@]}" -- \
+  "${QUICK[@]}" --out "$LSQR_OUT"
+
+echo
+echo "baselines written to benchmarks/BENCH_micro.baseline.json"
+echo "                 and benchmarks/BENCH_lsqr.baseline.json"
 echo "kernel_set: $(python3 -c "import json; print(json.load(open('$OUT')).get('kernel_set'))")"
 echo
-echo "to arm the CI regression gate, commit it:"
-echo "  git add benchmarks/BENCH_micro.baseline.json"
-echo "  git commit -m 'Record micro-bench baseline'"
+echo "to arm the CI regression gates, commit them:"
+echo "  git add benchmarks/BENCH_micro.baseline.json benchmarks/BENCH_lsqr.baseline.json"
+echo "  git commit -m 'Record bench baselines'"
 echo
 echo "to check a working tree against it locally:"
 echo "  cargo bench --bench micro -p sketchsolve ${FEATURES[*]:-} -- --quick --out \$PWD/BENCH_micro.json"
