@@ -1,0 +1,119 @@
+//! Shard-count sweep benchmark: the sharded kernels (matvec, matvec_t)
+//! and per-shard sketch reduces (SJLT / Gaussian `SA = Σᵢ SᵢAᵢ`) across
+//! shard counts, with shard count 1 as the unsharded-equivalent baseline
+//! (the outputs are bitwise identical at every point — see
+//! `tests/shard_parity.rs` — so this sweep measures pure scheduling
+//! overhead/benefit). Emits `BENCH_shard.json` in the same `{op, threads,
+//! median_s, speedup_vs_1t}` record schema as `BENCH_micro.json`, so
+//! `scripts/compare_bench.py` tracks regressions.
+//!
+//! `cargo bench --bench shard -- [--quick] [--threads N] [--out FILE]`
+
+use sketchsolve::bench_harness::runner::bench_median;
+use sketchsolve::linalg::{Csr, DataOp};
+use sketchsolve::par;
+use sketchsolve::rng::Rng;
+use sketchsolve::shard::ShardStore;
+use sketchsolve::sketch::SketchKind;
+use sketchsolve::util::{Flags, JsonValue};
+
+fn main() {
+    let flags = Flags::parse();
+    let quick = flags.has("quick");
+    let reps = if quick { 3 } else { 5 };
+    if let Some(t) = flags.threads() {
+        par::set_max_threads(t);
+    }
+    let (n, d) = if quick { (4096usize, 64usize) } else { (16384usize, 64usize) };
+    let per_row = 16usize;
+    let m = 2 * d;
+
+    let mut rng = Rng::seed_from(0x5AA2D ^ 0x1000);
+    let mut trips = Vec::new();
+    for i in 0..n {
+        for c in rng.sample_without_replacement(per_row, d) {
+            trips.push((i, c, rng.gaussian()));
+        }
+    }
+    let a = Csr::from_triplets(n, d, &trips);
+    let v = rng.gaussian_vec(d);
+    let x = rng.gaussian_vec(n);
+
+    println!("== shard-count sweep (n={n} d={d} nnz={} m={m}) ==\n", a.nnz());
+
+    let shard_counts: Vec<usize> = vec![1, 2, 4, 8];
+    let threads: Vec<usize> = vec![1, 2, 4];
+    let mut records: Vec<JsonValue> = Vec::new();
+    for &k in &shard_counts {
+        // store construction is outside the timers: the sweep measures
+        // the steady-state kernels, not the one-time build
+        let op = DataOp::sharded(ShardStore::from_csr(&a, Some(k), usize::MAX));
+        let runs: Vec<(String, Box<dyn Fn() -> f64>)> = {
+            let mv = op.clone();
+            let mvt = op.clone();
+            let sj = op.clone();
+            let ga = op.clone();
+            let (v1, x1) = (v.clone(), x.clone());
+            vec![
+                (
+                    format!("shard{k}_matvec"),
+                    Box::new(move || mv.matvec(&v1)[0]) as Box<dyn Fn() -> f64>,
+                ),
+                (format!("shard{k}_matvec_t"), Box::new(move || mvt.matvec_t(&x1)[0])),
+                (
+                    format!("shard{k}_sjlt_sa"),
+                    Box::new(move || {
+                        let mut srng = Rng::seed_from(0xFACE);
+                        SketchKind::Sjlt { s: 2 }.sample(m, n, &mut srng).apply(&sj).data[0]
+                    }),
+                ),
+                (
+                    format!("shard{k}_gauss_sa"),
+                    Box::new(move || {
+                        let mut srng = Rng::seed_from(0xFACE);
+                        SketchKind::Gaussian.sample(m, n, &mut srng).apply(&ga).data[0]
+                    }),
+                ),
+            ]
+        };
+        for (label, run) in &runs {
+            let mut base_median = 0.0f64;
+            for &t in &threads {
+                let st =
+                    par::with_threads(t, || bench_median(&format!("{label} t={t}"), 1, reps, || run()));
+                if t == 1 {
+                    base_median = st.median_s;
+                }
+                let speedup = if st.median_s > 0.0 { base_median / st.median_s } else { f64::NAN };
+                println!("{}   {:.2}x vs 1t", st.line(), speedup);
+                records.push(JsonValue::obj(vec![
+                    ("op", JsonValue::s(label)),
+                    ("threads", JsonValue::num(t as f64)),
+                    ("median_s", JsonValue::num(st.median_s)),
+                    ("speedup_vs_1t", JsonValue::num(speedup)),
+                ]));
+            }
+        }
+    }
+
+    let sc = sketchsolve::coordinator::Metrics::shard_counters();
+    println!(
+        "\nshard counters after run: built={} resident={} spilled={} streamed_bytes={} reduce_ns={}",
+        sc.shards_built, sc.shards_resident, sc.shards_spilled, sc.bytes_streamed, sc.reduce_ns
+    );
+
+    let out_path = flags.get_or("out", "BENCH_shard.json");
+    let doc = JsonValue::obj(vec![
+        ("bench", JsonValue::s("shard_count_sweep")),
+        ("n", JsonValue::num(n as f64)),
+        ("d", JsonValue::num(d as f64)),
+        ("nnz", JsonValue::num(a.nnz() as f64)),
+        ("m", JsonValue::num(m as f64)),
+        ("hardware_budget", JsonValue::num(par::max_threads() as f64)),
+        ("records", JsonValue::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("shard records written to {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

@@ -4,7 +4,10 @@
 //! several regularization levels) through the coordinator, with the
 //! multiclass problems going through the RHS batcher so every class
 //! shares one sketch + factorization. Reports throughput and latency —
-//! the deployment view of the paper's real-data experiments.
+//! the deployment view of the paper's real-data experiments — and then
+//! serves the coordinator metrics summary (job counters, sketch cache,
+//! LSQR and shard counters) as a plaintext HTTP endpoint and scrapes it
+//! once, the way a Prometheus-style collector would.
 //!
 //! Run: `cargo run --release --example ridge_server`
 
@@ -84,5 +87,54 @@ fn main() {
         latencies.last().unwrap()
     );
     println!("{}", svc.metrics.summary());
+
+    // ---- plaintext metrics endpoint (scrape-once demo) ----
+    // A real deployment would loop forever; here the listener answers a
+    // fixed number of scrapes and exits so the example terminates
+    // deterministically with zero extra dependencies.
+    const SCRAPES: usize = 1;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind metrics endpoint");
+    let addr = listener.local_addr().expect("local addr");
+    let metrics = svc.metrics.clone();
+    let server = std::thread::spawn(move || {
+        for stream in listener.incoming().take(SCRAPES) {
+            let mut stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            // drain the request line + headers (ignore contents)
+            let mut reader = std::io::BufReader::new(stream.try_clone().expect("clone stream"));
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match std::io::BufRead::read_line(&mut reader, &mut line) {
+                    Ok(0) => break,
+                    Ok(_) if line == "\r\n" || line == "\n" => break,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+            let body = metrics.summary();
+            let response = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                body.len(),
+                body
+            );
+            let _ = std::io::Write::write_all(&mut stream, response.as_bytes());
+        }
+    });
+    println!("\nmetrics endpoint: http://{addr}/metrics (answering {SCRAPES} scrape)");
+    let mut conn = std::net::TcpStream::connect(addr).expect("connect to metrics endpoint");
+    std::io::Write::write_all(
+        &mut conn,
+        b"GET /metrics HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n",
+    )
+    .expect("send scrape");
+    let mut scraped = String::new();
+    std::io::Read::read_to_string(&mut conn, &mut scraped).expect("read scrape");
+    let body = scraped.split("\r\n\r\n").nth(1).unwrap_or(&scraped);
+    println!("scraped: {body}");
+    server.join().expect("metrics endpoint thread");
     svc.shutdown();
 }

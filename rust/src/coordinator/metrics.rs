@@ -28,6 +28,50 @@ pub(crate) fn record_lsqr_refinement(steps: u64, converged: bool) {
     LSQR_REFINEMENT_CONVERGED.store(if converged { 2 } else { 1 }, Ordering::Relaxed);
 }
 
+/// Process-global shard-manager counters (same scope rationale as the LSQR
+/// counters: shard stores are built both by services and by direct
+/// `api::solve`/CLI callers, and the CI smoke checks read them afterwards).
+static SHARDS_BUILT: AtomicU64 = AtomicU64::new(0);
+static SHARDS_RESIDENT: AtomicU64 = AtomicU64::new(0);
+static SHARDS_SPILLED: AtomicU64 = AtomicU64::new(0);
+static SHARD_BYTES_STREAMED: AtomicU64 = AtomicU64::new(0);
+static SHARD_REDUCE_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one shard-store build: how many shards it produced, and their
+/// residency split.
+pub(crate) fn record_shard_store(built: u64, resident: u64, spilled: u64) {
+    SHARDS_BUILT.fetch_add(built, Ordering::Relaxed);
+    SHARDS_RESIDENT.fetch_add(resident, Ordering::Relaxed);
+    SHARDS_SPILLED.fetch_add(spilled, Ordering::Relaxed);
+}
+
+/// Record bytes re-streamed from spilled shard files (one increment per
+/// disk pass over a shard).
+pub(crate) fn record_shard_bytes_streamed(bytes: u64) {
+    SHARD_BYTES_STREAMED.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Record wall time of one sharded sketch apply (the additive
+/// `SA = Σᵢ SᵢAᵢ` reduce).
+pub(crate) fn record_shard_reduce_ns(ns: u64) {
+    SHARD_REDUCE_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Snapshot of the shard-manager counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardCounters {
+    /// Cumulative shards produced by store builds.
+    pub shards_built: u64,
+    /// Of those, how many were kept resident in memory.
+    pub shards_resident: u64,
+    /// Of those, how many were spilled to disk.
+    pub shards_spilled: u64,
+    /// Cumulative bytes re-streamed from spilled shard files.
+    pub bytes_streamed: u64,
+    /// Cumulative nanoseconds spent in sharded sketch reduces.
+    pub reduce_ns: u64,
+}
+
 /// Snapshot of the mixed-precision LSQR counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LsqrCounters {
@@ -140,16 +184,30 @@ impl Metrics {
         }
     }
 
+    /// Counters of the shard manager — process-global for the same reason
+    /// as [`Metrics::sketch_cache_counters`].
+    pub fn shard_counters() -> ShardCounters {
+        ShardCounters {
+            shards_built: SHARDS_BUILT.load(Ordering::Relaxed),
+            shards_resident: SHARDS_RESIDENT.load(Ordering::Relaxed),
+            shards_spilled: SHARDS_SPILLED.load(Ordering::Relaxed),
+            bytes_streamed: SHARD_BYTES_STREAMED.load(Ordering::Relaxed),
+            reduce_ns: SHARD_REDUCE_NS.load(Ordering::Relaxed),
+        }
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let (s, c, f) = self.job_counts();
         let cache = Metrics::sketch_cache_counters();
         let lsqr = Metrics::lsqr_counters();
+        let shards = Metrics::shard_counters();
         format!(
             "jobs {s} submitted / {c} done / {f} failed; {} iters, {} doublings, {:.3}s solving; \
              newton: {} solves / {} outer iters; \
              sketch_cache: hits={} misses={} evictions={} bytes={}; \
-             lsqr: f32_factors={} refine_steps={}",
+             lsqr: f32_factors={} refine_steps={}; \
+             shards: built={} resident={} spilled={} streamed_bytes={} reduce_ns={}",
             self.total_iterations(),
             self.total_doublings(),
             self.solve_seconds(),
@@ -160,7 +218,12 @@ impl Metrics {
             cache.evictions,
             cache.bytes,
             lsqr.f32_factorizations,
-            lsqr.refinement_steps
+            lsqr.refinement_steps,
+            shards.shards_built,
+            shards.shards_resident,
+            shards.shards_spilled,
+            shards.bytes_streamed,
+            shards.reduce_ns
         )
     }
 }
@@ -187,6 +250,22 @@ mod tests {
         assert!(m.summary().contains("2 submitted"));
         assert!(m.summary().contains("newton: 1 solves / 7 outer iters"));
         assert!(m.summary().contains("sketch_cache: hits="));
+        assert!(m.summary().contains("shards: built="));
+    }
+
+    #[test]
+    fn shard_counters_accumulate() {
+        // Process-global like the LSQR counters: assert monotone deltas.
+        let before = Metrics::shard_counters();
+        record_shard_store(4, 3, 1);
+        record_shard_bytes_streamed(4096);
+        record_shard_reduce_ns(2_000);
+        let after = Metrics::shard_counters();
+        assert!(after.shards_built >= before.shards_built + 4);
+        assert!(after.shards_resident >= before.shards_resident + 3);
+        assert!(after.shards_spilled >= before.shards_spilled + 1);
+        assert!(after.bytes_streamed >= before.bytes_streamed + 4096);
+        assert!(after.reduce_ns >= before.reduce_ns + 2_000);
     }
 
     #[test]

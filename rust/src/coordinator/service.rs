@@ -15,6 +15,7 @@ use crate::api::{self, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{route, RouterPolicy};
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -86,6 +87,48 @@ impl StatusBoard {
     }
 }
 
+/// Load-aware thread leasing: tracks the total stored-entry weight of
+/// jobs currently running so each job's kernel-thread lease is
+/// proportional to its share of the in-flight work, instead of the old
+/// static `budget / workers` split (which starved a big solve running
+/// next to tiny ones, and oversubscribed nothing-running workers).
+///
+/// Leases are advisory snapshots — a job keeps the lease it computed at
+/// start even if the mix changes mid-solve. That keeps the kernel thread
+/// count stable for the job's whole lifetime, which the `par`
+/// determinism contract requires anyway (results are thread-invariant,
+/// so only throughput is at stake).
+#[derive(Default)]
+struct LoadTracker {
+    total_weight: AtomicU64,
+    jobs: AtomicUsize,
+}
+
+impl LoadTracker {
+    fn begin(&self, w: u64) {
+        self.total_weight.fetch_add(w, Ordering::SeqCst);
+        self.jobs.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn end(&self, w: u64) {
+        self.total_weight.fetch_sub(w, Ordering::SeqCst);
+        self.jobs.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Threads to lease a job of weight `w` out of `budget`: its
+    /// proportional share of the currently running weight, at least 1,
+    /// the full budget when it runs alone.
+    fn lease(&self, w: u64, budget: usize) -> usize {
+        let jobs = self.jobs.load(Ordering::SeqCst);
+        let total = self.total_weight.load(Ordering::SeqCst).max(1);
+        if jobs <= 1 {
+            return budget.max(1);
+        }
+        let share = ((budget as u128 * w as u128) / total as u128) as usize;
+        share.clamp(1, budget.max(1))
+    }
+}
+
 /// The service handle.
 pub struct SolveService {
     tx: Option<mpsc::Sender<JobSpec>>,
@@ -99,13 +142,16 @@ impl SolveService {
     /// Start a service with `workers` threads and a routing policy.
     ///
     /// Thread-budget composition: the global kernel budget (`par::max_threads`)
-    /// is divided evenly among the workers, so W concurrent solves each run
-    /// their kernels on `budget/W` threads instead of all fanning out to the
-    /// full budget and oversubscribing the box. A single worker keeps the
-    /// whole budget (full kernel parallelism for latency-sensitive solves).
+    /// is leased per job by a [`LoadTracker`] — each running solve gets a
+    /// share proportional to its stored-entry weight (`nnz` of the data
+    /// operator) against the total weight currently in flight, so a large
+    /// sharded solve next to small ones gets most of the box instead of a
+    /// static `budget / workers` slice. A job running alone keeps the whole
+    /// budget (full kernel parallelism for latency-sensitive solves).
     pub fn start(workers: usize, policy: RouterPolicy) -> SolveService {
         let workers = workers.max(1);
-        let kernel_threads = (crate::par::max_threads() / workers).max(1);
+        let budget = crate::par::max_threads();
+        let tracker = Arc::new(LoadTracker::default());
         let (tx, rx) = mpsc::channel::<JobSpec>();
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let rx = Arc::new(Mutex::new(rx));
@@ -119,37 +165,41 @@ impl SolveService {
             let metrics = metrics.clone();
             let status = status.clone();
             let policy = policy.clone();
-            handles.push(std::thread::spawn(move || {
-                crate::par::with_threads(kernel_threads, || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let job = match job {
-                        Ok(j) => j,
-                        Err(_) => break, // channel closed: shut down
-                    };
-                    status.lock().unwrap().set(job.id, JobStatus::Running);
-                    let outcome = run_job(&job, &policy);
-                    match &outcome {
-                        Ok(out) => {
-                            metrics.job_completed(
-                                out.report.iterations,
-                                out.report.sketch_doublings,
-                                out.report.secs,
-                            );
-                            if let Some(nt) = &out.newton_trace {
-                                metrics.newton_solve_recorded(nt.len());
-                            }
-                            status.lock().unwrap().set(job.id, JobStatus::Done);
+            let tracker = tracker.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let job = match job {
+                    Ok(j) => j,
+                    Err(_) => break, // channel closed: shut down
+                };
+                status.lock().unwrap().set(job.id, JobStatus::Running);
+                let weight = job.request.problem.a.nnz().max(1) as u64;
+                tracker.begin(weight);
+                let lease = tracker.lease(weight, budget);
+                let outcome =
+                    crate::par::with_threads(lease, || run_job(&job, &policy));
+                tracker.end(weight);
+                match &outcome {
+                    Ok(out) => {
+                        metrics.job_completed(
+                            out.report.iterations,
+                            out.report.sketch_doublings,
+                            out.report.secs,
+                        );
+                        if let Some(nt) = &out.newton_trace {
+                            metrics.newton_solve_recorded(nt.len());
                         }
-                        Err(e) => {
-                            metrics.job_failed();
-                            status.lock().unwrap().set(job.id, JobStatus::Failed(e.clone()));
-                        }
+                        status.lock().unwrap().set(job.id, JobStatus::Done);
                     }
-                    let _ = results_tx.send(JobResult { id: job.id, outcome });
-                })
+                    Err(e) => {
+                        metrics.job_failed();
+                        status.lock().unwrap().set(job.id, JobStatus::Failed(e.clone()));
+                    }
+                }
+                let _ = results_tx.send(JobResult { id: job.id, outcome });
             }));
         }
 
@@ -275,6 +325,26 @@ mod tests {
         assert!(out.report.method.starts_with("adaptive_pcg"));
         assert!(!out.aborted());
         svc.shutdown();
+    }
+
+    #[test]
+    fn load_tracker_leases_proportionally() {
+        let t = LoadTracker::default();
+        // Alone: the whole budget, whatever the weight.
+        t.begin(10);
+        assert_eq!(t.lease(10, 8), 8);
+        // A 3x heavier peer arrives: leases split pro-rata, min 1.
+        t.begin(30);
+        assert_eq!(t.lease(10, 8), 2);
+        assert_eq!(t.lease(30, 8), 6);
+        assert_eq!(t.lease(1, 8), 1); // floor
+        t.end(30);
+        assert_eq!(t.lease(10, 8), 8);
+        t.end(10);
+        // Zero budget still leases at least one thread.
+        t.begin(5);
+        assert_eq!(t.lease(5, 0), 1);
+        t.end(5);
     }
 
     #[test]

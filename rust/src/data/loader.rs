@@ -128,33 +128,12 @@ pub fn parse_svmlight(text: &str) -> Result<LoadedSparseDataset, LoadError> {
     let mut min_idx = usize::MAX;
     let mut max_idx = 0usize;
     for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+        let Some((label, entries)) = parse_svmlight_line(raw, lineno)? else {
             continue;
-        }
-        let mut toks = line.split_whitespace();
-        let label_tok = toks.next().expect("non-empty line has a first token");
-        let label: f64 = label_tok
-            .parse()
-            .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("label '{label_tok}': {e}") })?;
-        let mut entries: Vec<(usize, f64)> = Vec::new();
-        for tok in toks {
-            if tok.starts_with("qid:") {
-                continue;
-            }
-            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LoadError::Parse {
-                line: lineno + 1,
-                msg: format!("expected idx:val, got '{tok}'"),
-            })?;
-            let idx: usize = idx_s
-                .parse()
-                .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("index '{idx_s}': {e}") })?;
-            let val: f64 = val_s
-                .parse()
-                .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("value '{val_s}': {e}") })?;
+        };
+        for &(idx, _) in &entries {
             min_idx = min_idx.min(idx);
             max_idx = max_idx.max(idx);
-            entries.push((idx, val));
         }
         labels.push(label);
         rows.push(entries);
@@ -175,10 +154,107 @@ pub fn parse_svmlight(text: &str) -> Result<LoadedSparseDataset, LoadError> {
     Ok(LoadedSparseDataset { a: Csr::from_triplets(n, d, &triplets), labels })
 }
 
-/// Load an SVMLight/libsvm file from disk (emits CSR directly).
+/// Parse one SVMLight/libsvm line. `lineno` is 0-based; errors report
+/// `lineno + 1`. Returns `Ok(None)` for blank/comment-only lines,
+/// otherwise the label and the row's `(index, value)` entries in input
+/// order. Indices are RAW (not offset-corrected): the 1-vs-0-based
+/// detection needs the whole file, so callers shift after EOF.
+pub(crate) fn parse_svmlight_line(
+    raw: &str,
+    lineno: usize,
+) -> Result<Option<(f64, Vec<(usize, f64)>)>, LoadError> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut toks = line.split_whitespace();
+    let label_tok = toks.next().expect("non-empty line has a first token");
+    let label: f64 = label_tok
+        .parse()
+        .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("label '{label_tok}': {e}") })?;
+    let mut entries: Vec<(usize, f64)> = Vec::new();
+    for tok in toks {
+        if tok.starts_with("qid:") {
+            continue;
+        }
+        let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LoadError::Parse {
+            line: lineno + 1,
+            msg: format!("expected idx:val, got '{tok}'"),
+        })?;
+        let idx: usize = idx_s
+            .parse()
+            .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("index '{idx_s}': {e}") })?;
+        let val: f64 = val_s
+            .parse()
+            .map_err(|e| LoadError::Parse { line: lineno + 1, msg: format!("value '{val_s}': {e}") })?;
+        entries.push((idx, val));
+    }
+    Ok(Some((label, entries)))
+}
+
+/// Load an SVMLight/libsvm file from disk, streaming line-by-line into
+/// CSR arrays. The file is never resident as one `String`, so peak
+/// memory is bounded by the parsed matrix rather than the text (which
+/// can be several times larger). Semantics are identical to
+/// [`parse_svmlight`]: rows are normalized like `Csr::from_triplets`
+/// (stable sort by index, duplicate runs summed in input order, zero
+/// sums dropped), and min/max indices track every parsed entry — even
+/// dropped ones — so 0/1-based detection and the matrix width match the
+/// in-memory parser bit for bit.
 pub fn load_svmlight(path: &str) -> Result<LoadedSparseDataset, LoadError> {
-    let text = std::fs::read_to_string(path)?;
-    parse_svmlight(&text)
+    let file = std::fs::File::open(path)?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut labels: Vec<f64> = Vec::new();
+    let mut indptr: Vec<usize> = vec![0];
+    let mut indices: Vec<usize> = Vec::new(); // raw; offset applied after EOF
+    let mut values: Vec<f64> = Vec::new();
+    let mut min_idx = usize::MAX;
+    let mut max_idx = 0usize;
+    let mut lineno = 0usize;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let parsed = parse_svmlight_line(&line, lineno)?;
+        lineno += 1;
+        let Some((label, mut entries)) = parsed else {
+            continue;
+        };
+        entries.sort_by_key(|e| e.0); // stable: duplicates keep input order
+        let mut k = 0;
+        while k < entries.len() {
+            let idx = entries[k].0;
+            let mut v = 0.0;
+            while k < entries.len() && entries[k].0 == idx {
+                v += entries[k].1;
+                k += 1;
+            }
+            min_idx = min_idx.min(idx);
+            max_idx = max_idx.max(idx);
+            if idx > u32::MAX as usize {
+                return Err(LoadError::Parse {
+                    line: lineno,
+                    msg: format!("feature index {idx} exceeds u32 range"),
+                });
+            }
+            if v != 0.0 {
+                indices.push(idx);
+                values.push(v);
+            }
+        }
+        labels.push(label);
+        indptr.push(indices.len());
+    }
+    if labels.is_empty() {
+        return Err(LoadError::Empty);
+    }
+    let offset = if min_idx == 0 { 0 } else { 1 };
+    let d = if min_idx == usize::MAX { 0 } else { max_idx + 1 - offset };
+    let cols: Vec<u32> = indices.iter().map(|&i| (i - offset) as u32).collect();
+    let a = Csr::from_parts(labels.len(), d, indptr, cols, values);
+    Ok(LoadedSparseDataset { a, labels })
 }
 
 /// Load a CSV file from disk.
@@ -351,6 +427,34 @@ f1,f2,label
         assert!(matches!(parse_svmlight("abc 1:2\n"), Err(LoadError::Parse { line: 1, .. })));
         assert!(matches!(parse_svmlight("1 nocolon\n"), Err(LoadError::Parse { line: 1, .. })));
         assert!(matches!(parse_svmlight("1 x:2.0\n"), Err(LoadError::Parse { line: 1, .. })));
+    }
+
+    #[test]
+    fn streaming_load_matches_in_memory_parse() {
+        // the BufRead streaming path must be bit-identical to the
+        // in-memory parser: duplicate indices (summed in input order),
+        // unsorted indices, comments, qid tokens, a zero-sum duplicate
+        // group that still widens the matrix, blank lines.
+        let text = "\
+# header comment
++1 3:0.5 1:2.0 3:0.25  # dup idx 3, unsorted
+-1 qid:4 2:-1.0
+
++1 5:1.0 5:-1.0 1:0.125
+";
+        let want = parse_svmlight(text).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("sketchsolve-loader-test-{}.svm", std::process::id()));
+        std::fs::write(&path, text).unwrap();
+        let got = load_svmlight(path.to_str().unwrap());
+        let _ = std::fs::remove_file(&path);
+        let got = got.unwrap();
+        assert_eq!(got.labels, want.labels);
+        assert_eq!(got.a, want.a);
+        // the 5:1.0 5:-1.0 pair sums to zero and is dropped, but still
+        // sets the width to 5 columns (1-based indices)
+        assert_eq!(got.a.cols, 5);
+        assert_eq!(got.a.row(2).0, &[0u32]);
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //!   dense, CSR-sparse and implicit column-scaled matrices are
 //!   first-class, so sketches apply at `O(nnz)` where the math allows and
 //!   SVMLight datasets load without densification.
+//! - **L3 scale (`shard`)**: row-sharded, out-of-core data layer — a
+//!   streaming SVMLight sharder plus a shard store whose kernels and
+//!   per-shard sketch reduce (`SA = Σᵢ SᵢAᵢ`) are bitwise identical to
+//!   the unsharded operator at any shard/thread count; shards past the
+//!   resident-memory cap spill to disk and re-stream per pass.
 //! - **L3 glm (`glm`)**: GLM training — a damped Newton-sketch outer loop
 //!   (logistic / Poisson losses) whose per-step quadratic model is an
 //!   implicit row-scaled operator solved through the same registry.
@@ -45,6 +50,7 @@ pub mod precond;
 pub mod problem;
 pub mod rng;
 pub mod runtime;
+pub mod shard;
 pub mod sketch;
 pub mod solvers;
 pub mod testing;

@@ -21,6 +21,11 @@
 //!   weighted copy per outer iteration; sparse data stays CSR and sketch
 //!   application folds the row scale into the sketch side, keeping
 //!   nnz-proportional cost.
+//! - [`DataOp::Sharded`] — a row-sharded CSR store
+//!   ([`crate::shard::ShardStore`]): per-shard blocks resident or spilled to
+//!   disk under a byte cap, kernels iterate shards in ascending row order
+//!   and stay bitwise-identical to the unsharded CSR kernels. This is the
+//!   out-of-core path.
 //!
 //! All kernels keep the `par` determinism contract: partitions depend only
 //! on shape/structure, outputs accumulate in the sequential order, results
@@ -45,6 +50,10 @@ pub enum DataOp {
     ColScaled { inner: Box<DataOp>, scale: Vec<f64> },
     /// Implicit `diag(scale) · inner` (scale has length `inner.rows()`).
     RowScaled { inner: Box<DataOp>, scale: Vec<f64> },
+    /// Row-sharded CSR store (resident and/or spilled shards); see
+    /// [`crate::shard::ShardStore`]. Shared behind `Arc` so cloning the
+    /// operator never copies (or re-reads) the data.
+    Sharded(std::sync::Arc<crate::shard::ShardStore>),
 }
 
 impl From<Matrix> for DataOp {
@@ -56,6 +65,12 @@ impl From<Matrix> for DataOp {
 impl From<Csr> for DataOp {
     fn from(c: Csr) -> DataOp {
         DataOp::CsrSparse(c)
+    }
+}
+
+impl From<crate::shard::ShardStore> for DataOp {
+    fn from(s: crate::shard::ShardStore) -> DataOp {
+        DataOp::Sharded(std::sync::Arc::new(s))
     }
 }
 
@@ -77,7 +92,7 @@ pub struct DataFingerprint {
 
 /// One splitmix64-style avalanche step folding `v` into `h`.
 #[inline]
-fn mix64(h: u64, v: u64) -> u64 {
+pub(crate) fn mix64(h: u64, v: u64) -> u64 {
     let mut z = (h ^ v).wrapping_add(0x9e37_79b9_7f4a_7c15);
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
@@ -97,11 +112,17 @@ impl DataOp {
         DataOp::RowScaled { inner: Box::new(inner), scale }
     }
 
+    /// Wrap a row-shard store as an operator.
+    pub fn sharded(store: crate::shard::ShardStore) -> DataOp {
+        DataOp::Sharded(std::sync::Arc::new(store))
+    }
+
     pub fn rows(&self) -> usize {
         match self {
             DataOp::Dense(m) => m.rows,
             DataOp::CsrSparse(c) => c.rows,
             DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.rows(),
+            DataOp::Sharded(s) => s.rows(),
         }
     }
 
@@ -110,6 +131,7 @@ impl DataOp {
             DataOp::Dense(m) => m.cols,
             DataOp::CsrSparse(c) => c.cols,
             DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.cols(),
+            DataOp::Sharded(s) => s.cols(),
         }
     }
 
@@ -120,6 +142,7 @@ impl DataOp {
             DataOp::Dense(m) => m.rows * m.cols,
             DataOp::CsrSparse(c) => c.nnz(),
             DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.nnz(),
+            DataOp::Sharded(s) => s.nnz(),
         }
     }
 
@@ -129,6 +152,7 @@ impl DataOp {
             DataOp::Dense(_) => false,
             DataOp::CsrSparse(_) => true,
             DataOp::ColScaled { inner, .. } | DataOp::RowScaled { inner, .. } => inner.is_sparse(),
+            DataOp::Sharded(_) => true,
         }
     }
 
@@ -139,6 +163,7 @@ impl DataOp {
             DataOp::CsrSparse(_) => "csr",
             DataOp::ColScaled { .. } => "col-scaled",
             DataOp::RowScaled { .. } => "row-scaled",
+            DataOp::Sharded(_) => "sharded-csr",
         }
     }
 
@@ -183,6 +208,7 @@ impl DataOp {
                 }
                 m
             }
+            DataOp::Sharded(s) => s.to_csr().to_dense(),
         }
     }
 
@@ -210,6 +236,7 @@ impl DataOp {
                     *yi *= s;
                 }
             }
+            DataOp::Sharded(s) => s.matvec_into(v, y),
         }
     }
 
@@ -228,6 +255,7 @@ impl DataOp {
                 let sx: Vec<f64> = x.iter().zip(scale).map(|(a, s)| a * s).collect();
                 inner.matvec_t_into(&sx, y);
             }
+            DataOp::Sharded(s) => s.matvec_t_into(x, y),
         }
     }
 
@@ -269,6 +297,7 @@ impl DataOp {
                     }
                 }
             }
+            DataOp::Sharded(s) => s.matmat_into(p, out),
         }
     }
 
@@ -324,6 +353,7 @@ impl DataOp {
                     }
                 }
             }
+            DataOp::Sharded(s) => s.gram(),
         }
     }
 
@@ -359,6 +389,9 @@ impl DataOp {
                 }
                 w
             }
+            // cold path: the n x n row Gram is only ever formed for small n
+            // (Woodbury / dual), where concatenating shards is cheap
+            DataOp::Sharded(s) => s.to_csr().gram_rows(None),
         }
     }
 
@@ -404,6 +437,10 @@ impl DataOp {
                     h = mix64(h, v.to_bits());
                 }
             }
+            DataOp::Sharded(s) => {
+                h = mix64(h, 5);
+                h = s.content_hash_fold(h);
+            }
         }
         h
     }
@@ -442,6 +479,9 @@ impl DataOp {
                 let sub_scale: Vec<f64> = idx.iter().map(|&i| scale[i]).collect();
                 DataOp::row_scaled(inner.select_rows(idx), sub_scale)
             }
+            // cold path (CV folds): gather from the concatenated store; the
+            // selection is no longer sharded
+            DataOp::Sharded(s) => DataOp::CsrSparse(s.to_csr()).select_rows(idx),
         }
     }
 
@@ -486,6 +526,9 @@ impl DataOp {
                 }
                 t
             }
+            // cold path: the transpose is d x n and column-major in the
+            // shard sense; materialize through the concatenated CSR
+            DataOp::Sharded(s) => DataOp::CsrSparse(s.to_csr().transpose()),
         }
     }
 }

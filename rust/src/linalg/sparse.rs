@@ -256,7 +256,7 @@ impl Csr {
     /// `out[ci] += x[i] * v` over the given row range, rows in ascending
     /// order, entries in stored (ascending-column) order.
     #[inline]
-    fn acc_rows_t(&self, x: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
+    pub(crate) fn acc_rows_t(&self, x: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
         for i in rows {
             let xi = x[i];
             if xi == 0.0 {

@@ -9,10 +9,12 @@
 //!    machine's available parallelism, overridable via `--threads`,
 //!    `[runtime] threads`, or `SKETCHSOLVE_THREADS`) bounds the total kernel
 //!    thread count. Scopes can narrow it ([`with_threads`]): the coordinator
-//!    gives each of its W workers a `budget/W` share, and every thread this
-//!    module spawns runs its slice with a budget of 1, so nested kernels
-//!    (e.g. a matvec inside a per-column preconditioner solve that is itself
-//!    parallelized over columns) never oversubscribe the box.
+//!    leases each job a load-aware share of the budget (proportional to the
+//!    job's stored-entry weight against the currently running total — see
+//!    `coordinator::service`), and every thread this module spawns runs its
+//!    slice with a budget of 1, so nested kernels (e.g. a matvec inside a
+//!    per-column preconditioner solve that is itself parallelized over
+//!    columns) never oversubscribe the box.
 //!
 //! 2. **Determinism.** Partitioning is by contiguous chunks of the *output*
 //!    (each element written by exactly one thread, reduced in the same
@@ -319,6 +321,37 @@ where
     acc
 }
 
+/// Deterministic LPT (longest-processing-time) packing: assign `weights`
+/// to `bins` load-balanced groups. Items are taken in descending weight
+/// (ties broken by ascending index) and each goes to the currently lightest
+/// bin (ties broken by lowest bin index), so the assignment depends only on
+/// the weights and the bin count — never on timing. Returns
+/// `assign[i] = bin of item i`. This is how the shard layer packs
+/// mixed big/small row shards onto worker threads without idling any.
+pub fn lpt_pack(weights: &[f64], bins: usize) -> Vec<usize> {
+    let bins = bins.max(1);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        weights[b]
+            .partial_cmp(&weights[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut load = vec![0.0f64; bins];
+    let mut assign = vec![0usize; weights.len()];
+    for &i in &order {
+        let mut best = 0usize;
+        for b in 1..bins {
+            if load[b] < load[best] {
+                best = b;
+            }
+        }
+        assign[i] = best;
+        load[best] += weights[i].max(0.0);
+    }
+    assign
+}
+
 /// A raw mutable pointer that is `Send + Sync`, for kernels whose per-thread
 /// write sets are disjoint but not contiguous (e.g. a column-partitioned
 /// transform over a row-major buffer, where each thread touches an
@@ -464,6 +497,28 @@ mod tests {
         assert!(parallel_reduce(0, 8, |_| 0.0f64, |a, b| a + b).is_none());
         // grain larger than n: single chunk
         assert_eq!(parallel_reduce(3, 100, |r| r.len(), |a, b| a + b), Some(3));
+    }
+
+    #[test]
+    fn lpt_pack_balances_and_is_deterministic() {
+        let w = [5.0, 1.0, 1.0, 1.0, 5.0, 1.0];
+        let a1 = lpt_pack(&w, 2);
+        assert_eq!(a1, lpt_pack(&w, 2), "same input must pack identically");
+        assert_eq!(a1.len(), w.len());
+        assert!(a1.iter().all(|&b| b < 2));
+        // the two heavy items must land in different bins
+        assert_ne!(a1[0], a1[4]);
+        // loads end up equal: 5+1+1 vs 5+1+1
+        let load: Vec<f64> = (0..2)
+            .map(|b| w.iter().zip(&a1).filter(|(_, &g)| g == b).map(|(v, _)| v).sum())
+            .collect();
+        assert_eq!(load[0], load[1]);
+        // bins = 0 clamps to one bin; empty weights are fine
+        assert!(lpt_pack(&w, 0).iter().all(|&b| b == 0));
+        assert!(lpt_pack(&[], 4).is_empty());
+        // more bins than items: each item gets its own bin in weight order
+        let a2 = lpt_pack(&[1.0, 3.0], 4);
+        assert_ne!(a2[0], a2[1]);
     }
 
     #[test]

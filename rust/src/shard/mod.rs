@@ -1,0 +1,943 @@
+//! Row-shard subsystem: out-of-core data layer for the sharded solve path.
+//!
+//! Every sketch family used by the preconditioner composes additively over
+//! row partitions (`SA = Σᵢ SᵢAᵢ`), and the iterative solvers only touch the
+//! data through `matvec`/`matvec_t`/`gram`/`matmat`. A [`ShardStore`]
+//! partitions the row dimension into per-shard CSR blocks that are either
+//! resident in memory or spilled to disk under a byte cap, and implements the
+//! four kernels by iterating shards in ascending row order.
+//!
+//! Determinism contract (extends `par`'s): the sharded kernels are
+//! **bitwise-identical to the unsharded CSR kernels at every shard count and
+//! thread count**. Two mechanisms make that hold despite float addition being
+//! non-associative:
+//!
+//! 1. **Owner-computes kernels** (`matvec`, `matmat`, `gram`, sketch applies):
+//!    every output element is produced by a single accumulator chain that
+//!    walks data rows in ascending global order; shard boundaries only change
+//!    *which task* runs the chain, never the chain itself.
+//! 2. **Reduction kernels** (`matvec_t`): shard boundaries are aligned to
+//!    [`SHARD_ALIGN`] = 512 rows, a multiple of the unsharded kernel's
+//!    256-row reduce grain, so each shard's chunk-partial grid tiles the
+//!    global grid exactly and the ordered ascending fold of chunk partials
+//!    reproduces the unsharded fold chain term for term. The serial/parallel
+//!    path choice is gated on *total* nnz across shards (the paths differ
+//!    bitwise), never on per-shard nnz.
+//!
+//! Spilled shards are re-streamed from disk on every kernel pass; streamed
+//! bytes, resident/spilled counts and sketch-reduce time are recorded in
+//! `coordinator::metrics`.
+
+use crate::coordinator::metrics;
+use crate::data::loader::{parse_svmlight_line, LoadError};
+use crate::linalg::op::mix64;
+use crate::linalg::simd;
+use crate::linalg::{Csr, DataOp, Matrix};
+use crate::par::{self, PAR_MIN_FLOPS};
+use std::io::{self, BufRead, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shard row boundaries are multiples of this. 512 is a common multiple of
+/// the CSR `matvec_t` reduce grain (256), the SJLT column sample block (512)
+/// and the Gaussian row sample block (64), so per-shard work tiles the
+/// unsharded grids exactly — the root of the bitwise invariance contract.
+pub const SHARD_ALIGN: usize = 512;
+
+/// Per-shard bookkeeping: placement in the global row space, size, a content
+/// hash (folded into the parent operator's fingerprint), and residency.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    /// First global row covered by this shard.
+    pub row0: usize,
+    /// Number of rows in this shard.
+    pub rows: usize,
+    /// Stored entries in this shard.
+    pub nnz: usize,
+    /// Approximate resident footprint of the CSR block, in bytes.
+    pub bytes: usize,
+    /// Content hash of the shard's CSR block (structure + values).
+    pub content_hash: u64,
+    /// True if the block lives on disk and is re-streamed per pass.
+    pub spilled: bool,
+}
+
+#[derive(Debug)]
+enum ShardSlot {
+    Resident(Csr),
+    Spilled(PathBuf),
+}
+
+/// An immutable row-sharded CSR matrix: resident blocks held in memory,
+/// spilled blocks re-streamed from per-shard files under `spill_dir`.
+///
+/// Built once (`from_csr`, `from_op`, `stream_svmlight`) and then shared
+/// read-only behind `Arc` inside [`DataOp::Sharded`]; all kernels take
+/// `&self`, so the store is `Send + Sync` by construction.
+#[derive(Debug)]
+pub struct ShardStore {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    metas: Vec<ShardMeta>,
+    slots: Vec<ShardSlot>,
+    spill_dir: Option<PathBuf>,
+}
+
+impl Drop for ShardStore {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            if let ShardSlot::Spilled(path) = slot {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+        if let Some(dir) = &self.spill_dir {
+            let _ = std::fs::remove_dir(dir);
+        }
+    }
+}
+
+/// Resident footprint of a CSR block: indptr (usize) + indices (u32) +
+/// values (f64).
+fn shard_mem_bytes(rows: usize, nnz: usize) -> usize {
+    8 * (rows + 1) + 12 * nnz
+}
+
+/// On-disk size of a shard file: 24-byte header (rows/cols/nnz as u64) +
+/// indptr as u64 + indices as u32 + values as f64.
+fn shard_file_bytes(rows: usize, nnz: usize) -> usize {
+    24 + 8 * (rows + 1) + 12 * nnz
+}
+
+static SPILL_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn new_spill_dir() -> io::Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!(
+        "sketchsolve-shards-{}-{}",
+        std::process::id(),
+        SPILL_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f64(r: &mut impl Read) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Write one shard to disk in the little-endian shard-file format.
+fn write_shard_file(
+    path: &Path,
+    rows: usize,
+    cols: usize,
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+) -> io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = io::BufWriter::new(f);
+    w.write_all(&(rows as u64).to_le_bytes())?;
+    w.write_all(&(cols as u64).to_le_bytes())?;
+    w.write_all(&(indices.len() as u64).to_le_bytes())?;
+    for &p in indptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &i in indices {
+        w.write_all(&i.to_le_bytes())?;
+    }
+    for &v in values {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Read one shard file back into a CSR block. Callers are responsible for
+/// recording the streamed bytes in `coordinator::metrics`.
+fn read_shard_file(path: &Path) -> io::Result<Csr> {
+    let f = std::fs::File::open(path)?;
+    let mut r = io::BufReader::new(f);
+    let rows = read_u64(&mut r)? as usize;
+    let cols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+    let mut indptr = Vec::with_capacity(rows + 1);
+    for _ in 0..=rows {
+        indptr.push(read_u64(&mut r)? as usize);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(read_u32(&mut r)?);
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        values.push(read_f64(&mut r)?);
+    }
+    Ok(Csr {
+        rows,
+        cols,
+        indptr,
+        indices,
+        values,
+    })
+}
+
+/// Content hash of a CSR block, identical to the one `DataOp::CsrSparse`
+/// folds into its fingerprint (tag 2, structure + value bits).
+pub(crate) fn csr_content_hash(c: &Csr) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix64(h, 2);
+    h = mix64(h, c.rows as u64);
+    h = mix64(h, c.cols as u64);
+    for &p in &c.indptr {
+        h = mix64(h, p as u64);
+    }
+    for &i in &c.indices {
+        h = mix64(h, i as u64);
+    }
+    for &v in &c.values {
+        h = mix64(h, v.to_bits());
+    }
+    h
+}
+
+/// Slice rows `[r0, r1)` of a CSR matrix into a standalone block.
+fn slice_rows(a: &Csr, r0: usize, r1: usize) -> Csr {
+    let base = a.indptr[r0];
+    let indptr: Vec<usize> = a.indptr[r0..=r1].iter().map(|&p| p - base).collect();
+    Csr {
+        rows: r1 - r0,
+        cols: a.cols,
+        indptr,
+        indices: a.indices[base..a.indptr[r1]].to_vec(),
+        values: a.values[base..a.indptr[r1]].to_vec(),
+    }
+}
+
+/// Rows per shard for a requested shard count: ceil(rows/count), rounded up
+/// to the SHARD_ALIGN grid (so a requested count may under-produce on small
+/// inputs — shards never split an alignment block).
+fn shard_rows_for(rows: usize, count: usize) -> usize {
+    let per = (rows + count - 1) / count.max(1);
+    let aligned = ((per + SHARD_ALIGN - 1) / SHARD_ALIGN) * SHARD_ALIGN;
+    aligned.max(SHARD_ALIGN)
+}
+
+/// Default shard count when none is requested: one shard per `cap_bytes`
+/// of resident footprint.
+fn default_shard_count(total_bytes: usize, cap_bytes: usize) -> usize {
+    if cap_bytes == 0 || cap_bytes == usize::MAX {
+        return 1;
+    }
+    let count = total_bytes / cap_bytes + usize::from(total_bytes % cap_bytes != 0);
+    count.max(1)
+}
+
+impl ShardStore {
+    /// Partition an in-memory CSR matrix into `shards` row shards (aligned
+    /// to [`SHARD_ALIGN`]), keeping shards resident until their cumulative
+    /// footprint would exceed `cap_bytes` and spilling the rest to disk.
+    pub fn from_csr(a: &Csr, shards: Option<usize>, cap_bytes: usize) -> ShardStore {
+        let total = shard_mem_bytes(a.rows, a.nnz());
+        let count = shards
+            .unwrap_or_else(|| default_shard_count(total, cap_bytes))
+            .max(1);
+        let per = shard_rows_for(a.rows, count);
+        let mut metas = Vec::new();
+        let mut slots = Vec::new();
+        let mut spill_dir: Option<PathBuf> = None;
+        let mut resident_bytes = 0usize;
+        let mut row0 = 0usize;
+        while row0 < a.rows {
+            let r1 = (row0 + per).min(a.rows);
+            let block = slice_rows(a, row0, r1);
+            let nnz = block.nnz();
+            let bytes = shard_mem_bytes(block.rows, nnz);
+            let content_hash = csr_content_hash(&block);
+            let spill = resident_bytes.saturating_add(bytes) > cap_bytes;
+            if spill {
+                let dir = spill_dir
+                    .get_or_insert_with(|| new_spill_dir().expect("shard spill dir"))
+                    .clone();
+                let path = dir.join(format!("shard-{}.bin", metas.len()));
+                write_shard_file(
+                    &path,
+                    block.rows,
+                    block.cols,
+                    &block.indptr,
+                    &block.indices,
+                    &block.values,
+                )
+                .expect("shard spill write");
+                slots.push(ShardSlot::Spilled(path));
+            } else {
+                resident_bytes += bytes;
+                slots.push(ShardSlot::Resident(block));
+            }
+            metas.push(ShardMeta {
+                row0,
+                rows: r1 - row0,
+                nnz,
+                bytes,
+                content_hash,
+                spilled: spill,
+            });
+            row0 = r1;
+        }
+        let spilled = metas.iter().filter(|m| m.spilled).count();
+        metrics::record_shard_store(
+            metas.len() as u64,
+            (metas.len() - spilled) as u64,
+            spilled as u64,
+        );
+        ShardStore {
+            rows: a.rows,
+            cols: a.cols,
+            nnz: a.nnz(),
+            metas,
+            slots,
+            spill_dir,
+        }
+    }
+
+    /// Shard any `DataOp`. CSR sources shard directly; dense and scaled
+    /// views are converted through `Csr::from_dense` first (explicit zeros
+    /// are dropped, matching the CSR parity reference for dense sources).
+    pub fn from_op(op: &DataOp, shards: Option<usize>, cap_bytes: usize) -> ShardStore {
+        match op {
+            DataOp::CsrSparse(c) => ShardStore::from_csr(c, shards, cap_bytes),
+            DataOp::Sharded(s) => ShardStore::from_csr(&s.to_csr(), shards, cap_bytes),
+            other => {
+                ShardStore::from_csr(&Csr::from_dense(&other.to_dense()), shards, cap_bytes)
+            }
+        }
+    }
+
+    /// One-pass streaming SVMLight sharder: reads the file line by line,
+    /// sealing a shard every time the current block crosses an alignment
+    /// boundary AND either (a) the byte cap would be exceeded or (b) the
+    /// requested shard count's pro-rata share of the file has been consumed.
+    ///
+    /// Because SVMLight's index base (0 or 1) and the column count are only
+    /// known at EOF, sealed shards hold *raw* indices (resident, or spilled
+    /// with a `cols = 0` marker); a finalize pass shifts indices by the
+    /// detected offset and rewrites spilled shards in final form.
+    pub fn stream_svmlight(
+        path: &str,
+        shards: Option<usize>,
+        cap_bytes: usize,
+    ) -> Result<(ShardStore, Vec<f64>), LoadError> {
+        struct RawShard {
+            indptr: Vec<usize>,
+            indices: Vec<u32>,
+            values: Vec<f64>,
+        }
+        enum RawSlot {
+            Mem(RawShard),
+            Disk { path: PathBuf, rows: usize, nnz: usize },
+        }
+
+        let file_len = std::fs::metadata(path)?.len();
+        let f = std::fs::File::open(path)?;
+        let mut r = io::BufReader::new(f);
+        let hint = shards.filter(|&s| s > 1);
+
+        let mut labels: Vec<f64> = Vec::new();
+        let mut min_idx = usize::MAX;
+        let mut max_idx = 0usize;
+        let mut cur = RawShard {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        };
+        let mut rows_cur = 0usize;
+        let mut sealed: Vec<RawSlot> = Vec::new();
+        let mut spill_dir: Option<PathBuf> = None;
+        let mut resident_bytes = 0usize;
+        let mut consumed = 0u64;
+        let mut lineno = 0usize;
+        let mut line = String::new();
+        let mut entries: Vec<(usize, f64)> = Vec::new();
+
+        let mut seal =
+            |cur: &mut RawShard, rows_cur: &mut usize, sealed: &mut Vec<RawSlot>,
+             spill_dir: &mut Option<PathBuf>, resident_bytes: &mut usize| {
+                let raw = std::mem::replace(
+                    cur,
+                    RawShard {
+                        indptr: vec![0],
+                        indices: Vec::new(),
+                        values: Vec::new(),
+                    },
+                );
+                let rows = *rows_cur;
+                *rows_cur = 0;
+                let nnz = raw.indices.len();
+                let bytes = shard_mem_bytes(rows, nnz);
+                if resident_bytes.saturating_add(bytes) <= cap_bytes {
+                    *resident_bytes += bytes;
+                    sealed.push(RawSlot::Mem(raw));
+                } else {
+                    let dir = spill_dir
+                        .get_or_insert_with(|| new_spill_dir().expect("shard spill dir"))
+                        .clone();
+                    let p = dir.join(format!("shard-{}.bin", sealed.len()));
+                    // cols = 0 marks a raw (pre-offset) shard; finalize
+                    // rewrites it with real column indices and cols = d.
+                    write_shard_file(&p, rows, 0, &raw.indptr, &raw.indices, &raw.values)
+                        .expect("shard spill write");
+                    sealed.push(RawSlot::Disk { path: p, rows, nnz });
+                }
+            };
+
+        loop {
+            line.clear();
+            let nread = r.read_line(&mut line)?;
+            if nread == 0 {
+                break;
+            }
+            consumed += nread as u64;
+            let parsed = parse_svmlight_line(&line, lineno)?;
+            lineno += 1;
+            let Some((label, raw_entries)) = parsed else {
+                continue;
+            };
+            labels.push(label);
+            entries.clear();
+            entries.extend(raw_entries);
+            entries.sort_by_key(|e| e.0);
+            let mut k = 0usize;
+            while k < entries.len() {
+                let idx = entries[k].0;
+                let mut v = 0.0f64;
+                while k < entries.len() && entries[k].0 == idx {
+                    v += entries[k].1;
+                    k += 1;
+                }
+                // min/max must see every parsed index, even when the summed
+                // value is exactly 0.0 and the entry is dropped — the &str
+                // parser behaves the same way, and offset/d depend on it.
+                min_idx = min_idx.min(idx);
+                max_idx = max_idx.max(idx);
+                if v != 0.0 {
+                    if idx > u32::MAX as usize {
+                        return Err(LoadError::Parse {
+                            line: lineno,
+                            msg: format!("feature index {idx} exceeds u32 range"),
+                        });
+                    }
+                    cur.indices.push(idx as u32);
+                    cur.values.push(v);
+                }
+            }
+            cur.indptr.push(cur.indices.len());
+            rows_cur += 1;
+
+            if rows_cur % SHARD_ALIGN == 0 {
+                let target_hit = hint.is_some_and(|nsh| {
+                    (sealed.len() as u64 + 1) < nsh as u64
+                        && consumed * nsh as u64 >= (sealed.len() as u64 + 1) * file_len
+                });
+                let cap_hit = cap_bytes < usize::MAX
+                    && shard_mem_bytes(rows_cur, cur.indices.len()) >= cap_bytes;
+                if target_hit || cap_hit {
+                    seal(&mut cur, &mut rows_cur, &mut sealed, &mut spill_dir, &mut resident_bytes);
+                }
+            }
+        }
+        if rows_cur > 0 {
+            seal(&mut cur, &mut rows_cur, &mut sealed, &mut spill_dir, &mut resident_bytes);
+        }
+        if labels.is_empty() {
+            return Err(LoadError::Empty);
+        }
+
+        let offset = if min_idx == 0 { 0usize } else { 1usize };
+        let d = if min_idx == usize::MAX {
+            0
+        } else {
+            max_idx + 1 - offset
+        };
+
+        // Finalize: shift raw indices by the detected offset, hash, and
+        // rewrite spilled shards in final (cols = d) form.
+        let mut metas = Vec::new();
+        let mut slots = Vec::new();
+        let mut row0 = 0usize;
+        let mut total_nnz = 0usize;
+        for slot in sealed {
+            match slot {
+                RawSlot::Mem(mut raw) => {
+                    for i in raw.indices.iter_mut() {
+                        *i -= offset as u32;
+                    }
+                    let rows = raw.indptr.len() - 1;
+                    let block = Csr {
+                        rows,
+                        cols: d,
+                        indptr: raw.indptr,
+                        indices: raw.indices,
+                        values: raw.values,
+                    };
+                    let nnz = block.nnz();
+                    let bytes = shard_mem_bytes(rows, nnz);
+                    metas.push(ShardMeta {
+                        row0,
+                        rows,
+                        nnz,
+                        bytes,
+                        content_hash: csr_content_hash(&block),
+                        spilled: false,
+                    });
+                    slots.push(ShardSlot::Resident(block));
+                    row0 += rows;
+                    total_nnz += nnz;
+                }
+                RawSlot::Disk { path: p, rows, nnz } => {
+                    let mut block = read_shard_file(&p)?;
+                    metrics::record_shard_bytes_streamed(shard_file_bytes(rows, nnz) as u64);
+                    for i in block.indices.iter_mut() {
+                        *i -= offset as u32;
+                    }
+                    block.cols = d;
+                    let bytes = shard_mem_bytes(rows, nnz);
+                    write_shard_file(
+                        &p,
+                        block.rows,
+                        block.cols,
+                        &block.indptr,
+                        &block.indices,
+                        &block.values,
+                    )?;
+                    metas.push(ShardMeta {
+                        row0,
+                        rows,
+                        nnz,
+                        bytes,
+                        content_hash: csr_content_hash(&block),
+                        spilled: true,
+                    });
+                    slots.push(ShardSlot::Spilled(p));
+                    row0 += rows;
+                    total_nnz += nnz;
+                }
+            }
+        }
+        let spilled = metas.iter().filter(|m| m.spilled).count();
+        metrics::record_shard_store(
+            metas.len() as u64,
+            (metas.len() - spilled) as u64,
+            spilled as u64,
+        );
+        Ok((
+            ShardStore {
+                rows: labels.len(),
+                cols: d,
+                nnz: total_nnz,
+                metas,
+                slots,
+                spill_dir,
+            },
+            labels,
+        ))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn metas(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    /// Total resident footprint (bytes) of in-memory shards.
+    pub fn resident_bytes(&self) -> usize {
+        self.metas
+            .iter()
+            .filter(|m| !m.spilled)
+            .map(|m| m.bytes)
+            .sum()
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.metas.iter().filter(|m| !m.spilled).count()
+    }
+
+    pub fn spilled_count(&self) -> usize {
+        self.metas.iter().filter(|m| m.spilled).count()
+    }
+
+    /// Fold the per-shard layout and content hashes into a fingerprint
+    /// accumulator. Different shard layouts of the same data key separately
+    /// in the sketch cache (the cached `SA` values are bitwise equal, but
+    /// cache keys stay conservative).
+    pub fn content_hash_fold(&self, mut h: u64) -> u64 {
+        for meta in &self.metas {
+            h = mix64(h, meta.rows as u64);
+            h = mix64(h, meta.content_hash);
+        }
+        h
+    }
+
+    /// Run `f` on shard `i`'s CSR block, re-streaming it from disk if
+    /// spilled (the streamed bytes are counted in `coordinator::metrics`).
+    pub fn with_shard<R>(&self, i: usize, f: impl FnOnce(&Csr) -> R) -> R {
+        match &self.slots[i] {
+            ShardSlot::Resident(c) => f(c),
+            ShardSlot::Spilled(path) => {
+                let c = read_shard_file(path).expect("shard spill read");
+                metrics::record_shard_bytes_streamed(
+                    shard_file_bytes(c.rows, c.nnz()) as u64
+                );
+                f(&c)
+            }
+        }
+    }
+
+    /// Visit every shard in ascending row order: `f(global_row0, block)`.
+    pub fn for_each_shard<F: FnMut(usize, &Csr)>(&self, mut f: F) {
+        for i in 0..self.metas.len() {
+            let row0 = self.metas[i].row0;
+            self.with_shard(i, |c| f(row0, c));
+        }
+    }
+
+    /// Concatenate all shards back into one CSR matrix (cold path: used by
+    /// `to_dense`/`select_rows`/`transposed`/SRHT fallbacks and tests).
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(self.nnz);
+        let mut values = Vec::with_capacity(self.nnz);
+        self.for_each_shard(|_, c| {
+            let base = *indptr.last().unwrap();
+            indptr.extend(c.indptr[1..].iter().map(|&p| base + p));
+            indices.extend_from_slice(&c.indices);
+            values.extend_from_slice(&c.values);
+        });
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// `y = A x`. Owner-computes over disjoint row ranges: each shard writes
+    /// its own `y[row0..row0+rows]` slice, so values are independent of the
+    /// shard-to-thread packing. When all shards are resident and the work
+    /// clears the parallel gate, shards are packed onto threads by nnz with
+    /// deterministic LPT and run concurrently.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec: x length must equal cols");
+        assert_eq!(y.len(), self.rows, "matvec: y length must equal rows");
+        if self.rows == 0 {
+            return;
+        }
+        let bins = par::effective_threads().min(self.num_shards().max(1));
+        let all_resident = self.metas.iter().all(|m| !m.spilled);
+        if bins > 1 && all_resident && 2.0 * self.nnz as f64 >= PAR_MIN_FLOPS {
+            let weights: Vec<f64> = self.metas.iter().map(|m| (m.nnz + 1) as f64).collect();
+            let assign = par::lpt_pack(&weights, bins);
+            let ptr = par::SendPtr::new(y.as_mut_ptr());
+            std::thread::scope(|scope| {
+                for b in 1..bins {
+                    let assign = &assign;
+                    scope.spawn(move || {
+                        par::with_threads(1, || self.matvec_bin(x, ptr, assign, b));
+                    });
+                }
+                par::with_threads(1, || self.matvec_bin(x, ptr, &assign, 0));
+            });
+        } else {
+            self.for_each_shard(|row0, c| {
+                c.matvec_into(x, &mut y[row0..row0 + c.rows]);
+            });
+        }
+    }
+
+    fn matvec_bin(&self, x: &[f64], ptr: par::SendPtr<f64>, assign: &[usize], bin: usize) {
+        for (i, meta) in self.metas.iter().enumerate() {
+            if assign[i] != bin {
+                continue;
+            }
+            // SAFETY: shard row ranges are disjoint and each shard is
+            // assigned to exactly one bin, so no two bins touch the same
+            // slice of y.
+            let ys = unsafe { ptr.slice_mut(meta.row0, meta.rows) };
+            self.with_shard(i, |c| c.matvec_into(x, ys));
+        }
+    }
+
+    /// `y = Aᵀ x`. Reduction kernel: the serial/parallel path is gated on
+    /// *total* nnz (the two paths differ bitwise), and the parallel path
+    /// collects each shard's 256-row chunk partials and folds them one by
+    /// one in ascending global order into a single accumulator — exactly
+    /// the unsharded fold chain, because SHARD_ALIGN tiles the chunk grid.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "matvec_t: x length must equal rows");
+        assert_eq!(y.len(), self.cols, "matvec_t: y length must equal cols");
+        if self.rows == 0 || self.cols == 0 {
+            for v in y.iter_mut() {
+                *v = 0.0;
+            }
+            return;
+        }
+        if 2.0 * self.nnz as f64 < PAR_MIN_FLOPS {
+            for v in y.iter_mut() {
+                *v = 0.0;
+            }
+            self.for_each_shard(|row0, c| {
+                c.acc_rows_t(&x[row0..row0 + c.rows], 0..c.rows, y);
+            });
+            return;
+        }
+        let cols = self.cols;
+        let mut acc: Option<Vec<f64>> = None;
+        self.for_each_shard(|row0, c| {
+            let xs = &x[row0..row0 + c.rows];
+            let partials = par::parallel_reduce(
+                c.rows,
+                256,
+                |r| {
+                    let mut p = vec![0.0f64; cols];
+                    c.acc_rows_t(xs, r, &mut p);
+                    vec![p]
+                },
+                |mut a, mut b| {
+                    a.append(&mut b);
+                    a
+                },
+            )
+            .expect("shard matvec_t: nonempty reduction");
+            for p in partials {
+                match &mut acc {
+                    None => acc = Some(p),
+                    Some(a) => {
+                        for (ai, pi) in a.iter_mut().zip(&p) {
+                            *ai += pi;
+                        }
+                    }
+                }
+            }
+        });
+        match acc {
+            Some(a) => y.copy_from_slice(&a),
+            None => {
+                for v in y.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// `out = A · P` (dense right factor). Owner-computes: each shard fills
+    /// its own block of output rows with the unsharded per-row kernel.
+    pub fn matmat_into(&self, p: &Matrix, out: &mut Matrix) {
+        assert_eq!(p.rows, self.cols, "matmat: P rows must equal cols");
+        assert_eq!(out.rows, self.rows, "matmat: out rows must equal rows");
+        assert_eq!(out.cols, p.cols, "matmat: out cols must equal P cols");
+        let c = p.cols;
+        if self.rows == 0 || c == 0 {
+            return;
+        }
+        self.for_each_shard(|row0, a| {
+            let flops = 2.0 * (a.nnz() as f64) * (c as f64);
+            let parts = if flops < PAR_MIN_FLOPS {
+                1
+            } else {
+                par::parts_for(a.rows, 8)
+            };
+            let bounds = if parts <= 1 {
+                vec![0, a.rows]
+            } else {
+                par::weighted_boundaries(a.rows, parts, |i| {
+                    (a.indptr[i + 1] - a.indptr[i] + 1) as f64
+                })
+            };
+            let dst = &mut out.data[row0 * c..(row0 + a.rows) * c];
+            par::parallel_chunks_mut(dst, c, &bounds, |r0, chunk| {
+                for (lr, orow) in chunk.chunks_mut(c).enumerate() {
+                    for v in orow.iter_mut() {
+                        *v = 0.0;
+                    }
+                    let (cis, vs) = a.row(r0 + lr);
+                    for (ci, v) in cis.iter().zip(vs) {
+                        simd::axpy_acc(*v, p.row(*ci as usize), orow);
+                    }
+                }
+            });
+        });
+    }
+
+    /// `G = AᵀA`. Owner-computes on the Gram matrix rows via each shard's
+    /// transpose: contributions accumulate in ascending global row order
+    /// per output element, matching the unsharded `Csr::gram` chain.
+    pub fn gram(&self) -> Matrix {
+        let d = self.cols;
+        let mut g = Matrix::zeros(d, d);
+        if d == 0 || self.nnz == 0 {
+            return g;
+        }
+        self.for_each_shard(|_, a| {
+            if a.nnz() == 0 {
+                return;
+            }
+            let at = a.transpose();
+            let flops: f64 = (0..a.rows)
+                .map(|i| {
+                    let k = (a.indptr[i + 1] - a.indptr[i]) as f64;
+                    k * k
+                })
+                .sum();
+            let parts = if 2.0 * flops < PAR_MIN_FLOPS {
+                1
+            } else {
+                par::parts_for(d, 4)
+            };
+            let bounds = if parts <= 1 {
+                vec![0, d]
+            } else {
+                par::weighted_boundaries(d, parts, |j| {
+                    (at.indptr[j + 1] - at.indptr[j] + 1) as f64
+                })
+            };
+            par::parallel_chunks_mut(&mut g.data, d, &bounds, |j0, chunk| {
+                for (lj, grow) in chunk.chunks_mut(d).enumerate() {
+                    let (ris, rvs) = at.row(j0 + lj);
+                    for (ri, rv) in ris.iter().zip(rvs) {
+                        let (cis, cvs) = a.row(*ri as usize);
+                        simd::scatter_axpy(*rv, cis, cvs, grow);
+                    }
+                }
+            });
+        });
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, n: usize, d: usize, per_row: usize) -> Csr {
+        let mut triplets = Vec::new();
+        for i in 0..n {
+            for c in rng.sample_without_replacement(per_row.min(d), d) {
+                triplets.push((i, c, rng.gaussian()));
+            }
+        }
+        Csr::from_triplets(n, d, &triplets)
+    }
+
+    #[test]
+    fn from_csr_roundtrip_and_kernels_match_unsharded() {
+        let mut rng = Rng::seed_from(42);
+        let (n, d) = (1100, 24);
+        let a = random_csr(&mut rng, n, d, 8);
+        let store = ShardStore::from_csr(&a, Some(2), usize::MAX);
+        assert_eq!(store.num_shards(), 2);
+        assert_eq!(store.to_csr(), a);
+
+        let x = rng.gaussian_vec(d);
+        let mut y_ref = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        a.matvec_into(&x, &mut y_ref);
+        store.matvec_into(&x, &mut y);
+        assert_eq!(y, y_ref);
+
+        let z = rng.gaussian_vec(n);
+        let mut w_ref = vec![0.0; d];
+        let mut w = vec![0.0; d];
+        a.matvec_t_into(&z, &mut w_ref);
+        store.matvec_t_into(&z, &mut w);
+        assert_eq!(w, w_ref);
+
+        let g_ref = a.gram();
+        let g = store.gram();
+        assert_eq!(g.data, g_ref.data);
+    }
+
+    #[test]
+    fn zero_cap_spills_everything_and_streams_bytes() {
+        let mut rng = Rng::seed_from(7);
+        let (n, d) = (1100, 16);
+        let a = random_csr(&mut rng, n, d, 6);
+        let before = crate::coordinator::Metrics::shard_counters().bytes_streamed;
+        let store = ShardStore::from_csr(&a, Some(2), 0);
+        assert_eq!(store.resident_count(), 0);
+        assert!(store.spilled_count() >= 2);
+        assert_eq!(store.to_csr(), a);
+        let x = rng.gaussian_vec(d);
+        let mut y_ref = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        a.matvec_into(&x, &mut y_ref);
+        store.matvec_into(&x, &mut y);
+        assert_eq!(y, y_ref);
+        let after = crate::coordinator::Metrics::shard_counters().bytes_streamed;
+        assert!(after > before, "spilled kernel passes must stream bytes");
+    }
+
+    #[test]
+    fn stream_svmlight_matches_parse_and_spills() {
+        // 1-based indices, duplicate features, comments and qid tokens:
+        // the streamed shards must concatenate to exactly what the &str
+        // parser produces, and a small cap must force spills.
+        let mut rng = Rng::seed_from(97);
+        let mut text = String::from("# header comment\n");
+        let (n, d) = (1536usize, 16usize);
+        for i in 0..n {
+            let label = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            text.push_str(&format!("{label} qid:{i}"));
+            for c in rng.sample_without_replacement(5, d) {
+                text.push_str(&format!(" {}:{:.6}", c + 1, rng.gaussian()));
+            }
+            // a duplicate of feature 1 on every 7th row
+            if i % 7 == 0 {
+                text.push_str(" 1:0.5");
+            }
+            text.push('\n');
+        }
+        let path = std::env::temp_dir().join(format!(
+            "sketchsolve-stream-test-{}.svm",
+            std::process::id()
+        ));
+        std::fs::write(&path, &text).unwrap();
+        let want = crate::data::loader::parse_svmlight(&text).unwrap();
+        let (store, labels) =
+            ShardStore::stream_svmlight(path.to_str().unwrap(), Some(3), 16 * 1024).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(labels, want.labels);
+        assert_eq!(store.to_csr(), want.a);
+        // sealing is byte-estimate driven: assert a range, not an exact count
+        assert!(store.num_shards() >= 2, "shards={}", store.num_shards());
+        assert!(store.spilled_count() > 0, "small cap must spill");
+        assert!(store.resident_bytes() <= 16 * 1024);
+    }
+}

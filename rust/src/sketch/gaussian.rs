@@ -90,6 +90,46 @@ impl GaussianSketch {
         self.apply_csr_impl(a, Some(w))
     }
 
+    /// Accumulating shard kernel:
+    /// `out += S[:, row_offset..row_offset+a.rows] · diag(w) · A_shard`.
+    /// No zeroing and no flop recording (the sharded dispatcher records the
+    /// total); the per-element accumulation chain is the same ascending
+    /// data-row sweep as `apply_csr_impl`, so summing shards in row order is
+    /// bitwise-identical to the unsharded apply.
+    pub(crate) fn apply_csr_acc(
+        &self,
+        a: &Csr,
+        row_offset: usize,
+        w: Option<&[f64]>,
+        out: &mut Matrix,
+    ) {
+        assert_eq!(out.rows, self.m());
+        assert_eq!(out.cols, a.cols);
+        assert!(row_offset + a.rows <= self.n());
+        let (m, d) = (self.m(), a.cols);
+        if m == 0 || d == 0 || a.rows == 0 {
+            return;
+        }
+        let work = 2.0 * (m as f64) * (a.nnz() as f64);
+        let parts = if work < par::PAR_MIN_FLOPS { 1 } else { par::parts_for(m, 4) };
+        let bounds = par::uniform_boundaries(m, parts);
+        par::parallel_chunks_mut(&mut out.data, d, &bounds, |r0, chunk| {
+            for (lr, orow) in chunk.chunks_mut(d).enumerate() {
+                let srow = self.s.row(r0 + lr);
+                for i in 0..a.rows {
+                    let (cis, vs) = a.row(i);
+                    if cis.is_empty() {
+                        continue;
+                    }
+                    let sv = srow[row_offset + i] * w.map_or(1.0, |ws| ws[i]);
+                    for (ci, av) in cis.iter().zip(vs) {
+                        orow[*ci as usize] += sv * av;
+                    }
+                }
+            }
+        });
+    }
+
     fn apply_csr_impl(&self, a: &Csr, w: Option<&[f64]>) -> Matrix {
         assert_eq!(a.rows, self.n(), "apply: A must have n rows");
         let (m, n, d) = (self.m(), a.rows, a.cols);

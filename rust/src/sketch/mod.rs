@@ -180,6 +180,7 @@ impl Sketch {
                 sa
             }
             DataOp::RowScaled { inner, scale } => self.apply_row_weighted(inner, scale),
+            DataOp::Sharded(store) => self.apply_sharded(store, None),
         }
     }
 
@@ -211,7 +212,55 @@ impl Sketch {
                 let combined: Vec<f64> = w.iter().zip(scale).map(|(a, b)| a * b).collect();
                 self.apply_row_weighted(inner, &combined)
             }
+            DataOp::Sharded(store) => self.apply_sharded(store, Some(w)),
         }
+    }
+
+    /// `S · diag(w) · A` over a row-shard store: the additive reduce
+    /// `SA = Σᵢ SᵢAᵢ`. Gaussian and SJLT accumulate each shard through
+    /// their `apply_csr_acc` kernels in ascending row order — one sketch
+    /// sampled for the full n, applied with the shard's row offset, so the
+    /// result is bitwise-identical to the unsharded apply of the
+    /// concatenated data. The SRHT mixes all rows through the FWHT (no
+    /// additive per-shard form), so it concatenates (cold path). Reduce
+    /// wall time is recorded in `coordinator::metrics`.
+    fn apply_sharded(&self, store: &crate::shard::ShardStore, w: Option<&[f64]>) -> Matrix {
+        let (n, d) = (store.rows(), store.cols());
+        if let Some(ws) = w {
+            assert_eq!(ws.len(), n, "apply_sharded: weight length must equal n");
+        }
+        let t0 = std::time::Instant::now();
+        let out = match self {
+            Sketch::Gaussian(s) => {
+                assert_eq!(n, s.n(), "apply: A must have n rows");
+                flops::record(2.0 * (s.m() as f64) * (store.nnz() as f64));
+                let mut out = Matrix::zeros(s.m(), d);
+                store.for_each_shard(|row0, c| {
+                    let wl = w.map(|ws| &ws[row0..row0 + c.rows]);
+                    s.apply_csr_acc(c, row0, wl, &mut out);
+                });
+                out
+            }
+            Sketch::Sjlt(s) => {
+                assert_eq!(n, s.n(), "apply: A must have n rows");
+                flops::record(2.0 * (s.nnz_per_col() as f64) * (store.nnz() as f64));
+                let mut out = Matrix::zeros(s.m(), d);
+                store.for_each_shard(|row0, c| {
+                    let wl = w.map(|ws| &ws[row0..row0 + c.rows]);
+                    s.apply_csr_acc(c, row0, wl, &mut out);
+                });
+                out
+            }
+            Sketch::Srht(s) => {
+                let c = store.to_csr();
+                match w {
+                    Some(ws) => s.apply_csr_weighted(&c, ws),
+                    None => s.apply_csr(&c),
+                }
+            }
+        };
+        crate::coordinator::metrics::record_shard_reduce_ns(t0.elapsed().as_nanos() as u64);
+        out
     }
 
     /// Dense-path `S * A` (the pre-[`DataOp`] signature, kept for benches

@@ -141,6 +141,51 @@ impl SjltSketch {
         self.apply_csr_impl(a, Some(w))
     }
 
+    /// Accumulating shard kernel:
+    /// `out += S[:, col_offset..col_offset+a.rows] · diag(w) · A_shard`.
+    /// No zeroing and no flop recording (the sharded dispatcher records the
+    /// total); contributions land per output element in the same ascending
+    /// data-row (= S-column) order as `apply_csr_impl`, so summing shards in
+    /// row order is bitwise-identical to the unsharded apply.
+    pub(crate) fn apply_csr_acc(
+        &self,
+        a: &Csr,
+        col_offset: usize,
+        w: Option<&[f64]>,
+        out: &mut Matrix,
+    ) {
+        assert_eq!(out.rows, self.m);
+        assert_eq!(out.cols, a.cols);
+        assert!(col_offset + a.rows <= self.n);
+        let d = a.cols;
+        if self.m == 0 || d == 0 || a.rows == 0 {
+            return;
+        }
+        let work = 2.0 * (self.s as f64) * (a.nnz() as f64);
+        let parts = if work < par::PAR_MIN_FLOPS { 1 } else { par::parts_for(self.m, 8) };
+        let bounds = par::uniform_boundaries(self.m, parts);
+        par::parallel_chunks_mut(&mut out.data, d, &bounds, |r0, chunk| {
+            let rows_here = chunk.len() / d;
+            for j in 0..a.rows {
+                let (cis, vs) = a.row(j);
+                if cis.is_empty() {
+                    continue;
+                }
+                let wj = w.map_or(1.0, |ws| ws[j]);
+                for k in 0..self.s {
+                    let idx = (col_offset + j) * self.s + k;
+                    let r = self.rows[idx] as usize;
+                    if r < r0 || r >= r0 + rows_here {
+                        continue;
+                    }
+                    let v = self.vals[idx] * wj;
+                    let orow = &mut chunk[(r - r0) * d..(r - r0) * d + d];
+                    simd::scatter_axpy(v, cis, vs, orow);
+                }
+            }
+        });
+    }
+
     fn apply_csr_impl(&self, a: &Csr, w: Option<&[f64]>) -> Matrix {
         assert_eq!(a.rows, self.n, "apply: A must have n rows");
         let d = a.cols;

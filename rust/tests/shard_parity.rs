@@ -1,0 +1,279 @@
+//! Shard-store parity, end to end: a matrix held as `DataOp::Sharded`
+//! must be BITWISE identical to the same matrix held as
+//! `DataOp::CsrSparse` — through every kernel (matvec, matvec_t, matmat,
+//! gram), every sketch family's apply (plain and row-weighted), and a
+//! full preconditioned solve — at every shard count and every thread
+//! count. Spilled (out-of-core) shards must match resident ones exactly,
+//! with peak resident matrix memory bounded by the cap (asserted via the
+//! shard counters), and the streaming SVMLight sharder must reproduce the
+//! in-memory parser's CSR bit for bit.
+
+use sketchsolve::api::{self, MethodSpec, SolveRequest};
+use sketchsolve::coordinator::Metrics;
+use sketchsolve::linalg::{Csr, DataOp, Matrix};
+use sketchsolve::par;
+use sketchsolve::problem::Problem;
+use sketchsolve::rng::Rng;
+use sketchsolve::shard::ShardStore;
+use sketchsolve::sketch::SketchKind;
+use std::sync::Arc;
+
+/// A deterministic sparse test matrix.
+fn random_csr(n: usize, d: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Rng::seed_from(seed);
+    let mut trips = Vec::new();
+    for i in 0..n {
+        for c in rng.sample_without_replacement(per_row.min(d), d) {
+            trips.push((i, c, rng.gaussian()));
+        }
+    }
+    Csr::from_triplets(n, d, &trips)
+}
+
+fn sharded_op(c: &Csr, shards: usize) -> DataOp {
+    DataOp::sharded(ShardStore::from_csr(c, Some(shards), usize::MAX))
+}
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+#[test]
+fn kernels_bitwise_identical_across_shards_and_threads() {
+    // small problem: every kernel takes its serial path — parity must
+    // hold there just as it does above the parallel gates
+    let (n, d, c) = (2048usize, 24usize, 3usize);
+    let a = random_csr(n, d, 8, 41);
+    let reference = DataOp::CsrSparse(a.clone());
+    let mut rng = Rng::seed_from(42);
+    let v = rng.gaussian_vec(d);
+    let x = rng.gaussian_vec(n);
+    let p = Matrix::from_vec(d, c, rng.gaussian_vec(d * c));
+
+    let y_ref = reference.matvec(&v);
+    let g_ref = reference.matvec_t(&x);
+    let gram_ref = reference.gram();
+    let mut mm_ref = Matrix::zeros(n, c);
+    reference.matmat_into(&p, &mut mm_ref);
+
+    for shards in SHARD_COUNTS {
+        let op = sharded_op(&a, shards);
+        let store_shards = match &op {
+            DataOp::Sharded(s) => s.num_shards(),
+            _ => unreachable!(),
+        };
+        assert_eq!(store_shards, shards, "requested shard count must materialize (n = 4*512)");
+        for t in THREAD_COUNTS {
+            par::with_threads(t, || {
+                assert_eq!(y_ref, op.matvec(&v), "matvec differs: {shards} shards, {t} threads");
+                assert_eq!(g_ref, op.matvec_t(&x), "matvec_t differs: {shards} shards, {t} threads");
+                assert_eq!(
+                    gram_ref.data,
+                    op.gram().data,
+                    "gram differs: {shards} shards, {t} threads"
+                );
+                let mut mm = Matrix::zeros(n, c);
+                op.matmat_into(&p, &mut mm);
+                assert_eq!(mm_ref.data, mm.data, "matmat differs: {shards} shards, {t} threads");
+            });
+        }
+    }
+}
+
+#[test]
+fn kernels_bitwise_identical_above_parallel_gates() {
+    // 2*nnz = 4.096e6 >= PAR_MIN_FLOPS: matvec takes the LPT-packed
+    // per-shard path and matvec_t the chunked global-fold reduction, both
+    // of which must still be bitwise invariant to shard/thread count
+    let (n, d) = (8192usize, 256usize);
+    let a = random_csr(n, d, 250, 43);
+    assert!(2.0 * a.nnz() as f64 >= par::PAR_MIN_FLOPS);
+    let reference = DataOp::CsrSparse(a.clone());
+    let mut rng = Rng::seed_from(44);
+    let v = rng.gaussian_vec(d);
+    let x = rng.gaussian_vec(n);
+    let y_ref = reference.matvec(&v);
+    let g_ref = reference.matvec_t(&x);
+    for shards in SHARD_COUNTS {
+        let op = sharded_op(&a, shards);
+        for t in [1usize, 4] {
+            par::with_threads(t, || {
+                assert_eq!(y_ref, op.matvec(&v), "matvec differs: {shards} shards, {t} threads");
+                assert_eq!(g_ref, op.matvec_t(&x), "matvec_t differs: {shards} shards, {t} threads");
+            });
+        }
+    }
+}
+
+#[test]
+fn sketch_apply_bitwise_identical_all_families() {
+    // per-shard sketch application with the ordered additive reduce
+    // SA = sum_i S_i A_i must reproduce the unsharded apply bit for bit,
+    // plain and row-weighted, for every family and thread count
+    let (n, d, m) = (2048usize, 24usize, 96usize);
+    let a = random_csr(n, d, 8, 45);
+    let mut wrng = Rng::seed_from(46);
+    let w: Vec<f64> = wrng.gaussian_vec(n).iter().map(|g| g.abs() + 0.5).collect();
+    let kinds =
+        [SketchKind::Gaussian, SketchKind::Sjlt { s: 1 }, SketchKind::Sjlt { s: 3 }, SketchKind::Srht];
+    for kind in kinds {
+        let apply = |op: &DataOp, t: usize| {
+            par::with_threads(t, || {
+                // same seed -> identical sampled S on every path
+                let mut rng = Rng::seed_from(47);
+                kind.sample(m, n, &mut rng).apply(op)
+            })
+        };
+        let plain_ref = apply(&DataOp::CsrSparse(a.clone()), 1);
+        let weighted_ref = apply(
+            &DataOp::row_scaled(DataOp::CsrSparse(a.clone()), w.clone()),
+            1,
+        );
+        assert_eq!((plain_ref.rows, plain_ref.cols), (m, d));
+        for shards in SHARD_COUNTS {
+            let op = sharded_op(&a, shards);
+            let weighted_op = DataOp::row_scaled(sharded_op(&a, shards), w.clone());
+            for t in THREAD_COUNTS {
+                assert_eq!(
+                    plain_ref.data,
+                    apply(&op, t).data,
+                    "{kind:?}: sharded apply differs at {shards} shards, {t} threads"
+                );
+                assert_eq!(
+                    weighted_ref.data,
+                    apply(&weighted_op, t).data,
+                    "{kind:?}: row-weighted sharded apply differs at {shards} shards, {t} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn end_to_end_solve_bitwise_identical() {
+    // full pipeline: sketch -> preconditioner -> PCG over the sharded
+    // operator, bit-identical x at every shard/thread count
+    let (n, d) = (2048usize, 24usize);
+    let a = random_csr(n, d, 8, 48);
+    let mut rng = Rng::seed_from(49);
+    let y = rng.gaussian_vec(n);
+    for sketch in [SketchKind::Gaussian, SketchKind::Sjlt { s: 1 }] {
+        let solve = |op: DataOp, t: usize| {
+            par::with_threads(t, || {
+                let prob = Problem::ridge_from_labels(op, &y, 1e-1);
+                let request = SolveRequest::new(Arc::new(prob))
+                    .method(MethodSpec::PcgFixed { m: Some(96), sketch })
+                    .max_iters(100)
+                    .rel_tol(1e-12)
+                    .seed(7);
+                let x = api::solve(&request).expect("solve").report.x;
+                x.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+            })
+        };
+        let x_ref = solve(DataOp::CsrSparse(a.clone()), 1);
+        for shards in SHARD_COUNTS {
+            for t in THREAD_COUNTS {
+                assert_eq!(
+                    x_ref,
+                    solve(sharded_op(&a, shards), t),
+                    "{sketch:?}: solution differs at {shards} shards, {t} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn spilled_shards_match_resident_and_bound_memory() {
+    let (n, d) = (2048usize, 24usize);
+    let a = random_csr(n, d, 8, 50);
+    // cap = exactly the first shard's bytes: shard 0 stays resident,
+    // the rest spill and re-stream from disk on every pass
+    let uncapped = ShardStore::from_csr(&a, Some(4), usize::MAX);
+    let cap = uncapped.metas()[0].bytes;
+    let capped = ShardStore::from_csr(&a, Some(4), cap);
+    assert_eq!(capped.num_shards(), 4);
+    assert_eq!(capped.resident_count(), 1);
+    assert_eq!(capped.spilled_count(), 3);
+    // the out-of-core acceptance bound: resident matrix memory <= cap
+    assert!(
+        capped.resident_bytes() <= cap,
+        "resident {} bytes exceeds cap {cap}",
+        capped.resident_bytes()
+    );
+
+    let mut rng = Rng::seed_from(51);
+    let v = rng.gaussian_vec(d);
+    let x = rng.gaussian_vec(n);
+    let resident_op = DataOp::sharded(uncapped);
+    let spilled_op = DataOp::sharded(capped);
+    assert_eq!(resident_op.matvec(&v), spilled_op.matvec(&v));
+    assert_eq!(resident_op.matvec_t(&x), spilled_op.matvec_t(&x));
+
+    // a full solve over the spilled store is bitwise identical to the
+    // unsharded one and actually re-streams shard bytes from disk
+    let y = rng.gaussian_vec(n);
+    let solve = |op: DataOp| {
+        let prob = Problem::ridge_from_labels(op, &y, 1e-1);
+        let request = SolveRequest::new(Arc::new(prob))
+            .method(MethodSpec::PcgFixed { m: Some(96), sketch: SketchKind::Sjlt { s: 1 } })
+            .max_iters(100)
+            .rel_tol(1e-12)
+            .seed(9);
+        api::solve(&request).expect("solve").report.x
+    };
+    let x_ref = solve(DataOp::CsrSparse(a.clone()));
+    let before = Metrics::shard_counters();
+    let x_spill = solve(spilled_op);
+    let after = Metrics::shard_counters();
+    assert_eq!(x_ref, x_spill, "spilled solve differs from unsharded");
+    assert!(
+        after.bytes_streamed > before.bytes_streamed,
+        "spilled solve must re-stream shard bytes from disk"
+    );
+}
+
+#[test]
+fn streamed_svmlight_solve_matches_in_memory_load() {
+    // the one-pass sharder (file -> aligned spilled shards, full CSR
+    // never resident) must yield the same labels, the same matrix, and a
+    // bitwise-identical solve as parse_svmlight + an unsharded operator
+    let (n, d) = (1536usize, 16usize);
+    let mut rng = Rng::seed_from(52);
+    let mut text = String::new();
+    for i in 0..n {
+        let label = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        text.push_str(&format!("{label}"));
+        for c in rng.sample_without_replacement(5, d) {
+            text.push_str(&format!(" {}:{:.6}", c + 1, rng.gaussian()));
+        }
+        if i % 9 == 0 {
+            text.push_str(" # inline comment");
+        }
+        text.push('\n');
+    }
+    let path = std::env::temp_dir()
+        .join(format!("sketchsolve-shard-parity-{}.svm", std::process::id()));
+    std::fs::write(&path, &text).unwrap();
+    let streamed = ShardStore::stream_svmlight(path.to_str().unwrap(), Some(3), 0);
+    let _ = std::fs::remove_file(&path);
+    let (store, labels) = streamed.unwrap();
+    let want = sketchsolve::data::parse_svmlight(&text).unwrap();
+    assert_eq!(labels, want.labels);
+    assert_eq!(store.to_csr(), want.a);
+    assert_eq!(store.resident_count(), 0, "cap 0 must spill every shard");
+
+    let solve = |op: DataOp, y: &[f64]| {
+        let prob = Problem::ridge_from_labels(op, y, 1e-1);
+        let request = SolveRequest::new(Arc::new(prob))
+            .method(MethodSpec::PcgFixed { m: Some(64), sketch: SketchKind::Gaussian })
+            .max_iters(100)
+            .rel_tol(1e-12)
+            .seed(3);
+        api::solve(&request).expect("solve").report.x
+    };
+    assert_eq!(
+        solve(DataOp::CsrSparse(want.a), &want.labels),
+        solve(DataOp::sharded(store), &labels),
+        "streamed out-of-core solve differs from in-memory solve"
+    );
+}

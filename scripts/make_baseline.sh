@@ -43,13 +43,21 @@ echo "== cargo bench --bench lsqr -p sketchsolve ${FEATURES[*]:-} =="
 cargo bench --bench lsqr -p sketchsolve "${FEATURES[@]}" -- \
   "${QUICK[@]}" --out "$LSQR_OUT"
 
+SHARD_OUT="$PWD/benchmarks/BENCH_shard.baseline.json"
+echo
+echo "== cargo bench --bench shard -p sketchsolve ${FEATURES[*]:-} =="
+cargo bench --bench shard -p sketchsolve "${FEATURES[@]}" -- \
+  "${QUICK[@]}" --out "$SHARD_OUT"
+
 echo
 echo "baselines written to benchmarks/BENCH_micro.baseline.json"
 echo "                 and benchmarks/BENCH_lsqr.baseline.json"
+echo "                 and benchmarks/BENCH_shard.baseline.json"
 echo "kernel_set: $(python3 -c "import json; print(json.load(open('$OUT')).get('kernel_set'))")"
 echo
 echo "to arm the CI regression gates, commit them:"
-echo "  git add benchmarks/BENCH_micro.baseline.json benchmarks/BENCH_lsqr.baseline.json"
+echo "  git add benchmarks/BENCH_micro.baseline.json benchmarks/BENCH_lsqr.baseline.json \\"
+echo "          benchmarks/BENCH_shard.baseline.json"
 echo "  git commit -m 'Record bench baselines'"
 echo
 echo "to check a working tree against it locally:"
